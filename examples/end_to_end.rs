@@ -1,0 +1,141 @@
+//! End-to-end driver: the full reproduction in one binary.
+//!
+//! Exercises every layer on a real (small) workload and proves they
+//! compose:
+//!
+//! 1. **L3 coordinator + simulator** — runs the paper's Section 6 stress
+//!    matrix (Table 2 + Figures 7/8) on the deterministic SMP machine.
+//! 2. **L1/L2 via PJRT** — loads the JAX/Pallas performance model
+//!    artifacts (`make artifacts`) and produces the Figure 6 curves,
+//!    cross-checked against the native MVA solver.
+//! 3. **Stop criterion** — feeds the *measured* lock-free ping-pong
+//!    latency back into the model, closing the Section 5 loop.
+//!
+//! The output of this run is recorded in EXPERIMENTS.md.
+//!
+//! Run with: `make artifacts && cargo run --release --example end_to_end`
+
+use mcapi::coordinator::experiment::{
+    print_fig7, print_fig8, print_table2, run_cell_latency, Cell, Matrix, MULTI_CORES,
+};
+use mcapi::coordinator::MsgKind;
+use mcapi::mcapi::types::BackendKind;
+use mcapi::model::stopcrit::REFERENCE_HIT_RATE;
+use mcapi::model::{stop_criterion, QpnModel, Workload};
+use mcapi::os::{AffinityMode, OsProfile};
+use mcapi::runtime::PjrtRuntime;
+
+const TX: u64 = 1000;
+
+fn main() {
+    println!("=== mcapi-lockfree end-to-end reproduction ===\n");
+    let matrix = Matrix::new(TX);
+
+    // ----- Table 2 ---------------------------------------------------------
+    println!("--- Table 2: lock-based multicore penalty (paper: Win 0.67-0.80x, Linux 0.21-0.24x)\n");
+    let t2 = matrix.table2();
+    println!("{}", print_table2(&t2));
+    for (os, kind, task, aff) in &t2 {
+        assert!(*task < 1.0 && *aff < 1.0, "{os}/{kind}: no penalty?");
+    }
+    let avg = |os: &str| {
+        let v: Vec<f64> = t2.iter().filter(|r| r.0 == os).map(|r| r.2).collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    assert!(
+        avg("linux") < 0.5 * avg("windows"),
+        "Linux penalty must be much harsher (paper: ~3x)"
+    );
+
+    // ----- Figure 7 --------------------------------------------------------
+    println!("--- Figure 7: throughput matrix (kmsg/s)\n");
+    let f7 = matrix.fig7();
+    println!("{}", print_fig7(&f7));
+
+    // ----- Figure 8 --------------------------------------------------------
+    println!("--- Figure 8: lock-free latency speedup (paper: ~2x single-core .. 25x multicore)\n");
+    let f8 = matrix.fig8();
+    println!("{}", print_fig8(&f8));
+    let max_speedup = f8.iter().map(|r| r.2).fold(0.0f64, f64::max);
+    let single_core: Vec<f64> =
+        f8.iter().filter(|r| r.0.contains("/1c/")).map(|r| r.2).collect();
+    let multi_core: Vec<f64> =
+        f8.iter().filter(|r| !r.0.contains("/1c/")).map(|r| r.2).collect();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "single-core mean speedup {:.1}x, multicore mean {:.1}x, max {:.1}x\n",
+        mean(&single_core),
+        mean(&multi_core),
+        max_speedup
+    );
+    assert!(mean(&multi_core) > 3.0 * mean(&single_core), "multicore payoff dominates");
+    assert!(max_speedup > 10.0, "double-digit speedup expected (paper: 25x)");
+
+    // ----- Figure 6 (PJRT artifacts) ----------------------------------------
+    println!("--- Figure 6: QPN model via AOT artifacts (JAX/Pallas -> XLA -> PJRT)\n");
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = QpnModel::load(&rt).expect("artifacts (run `make artifacts`)");
+    let w = Workload::message();
+    let hits: Vec<f64> = (0..6).map(|i| 0.5 + 0.1 * i as f64).collect();
+    let pts = model.fig6_mva(&w, &[1, 2], &hits).expect("artifact MVA");
+    println!("| hit rate | cores | bus util | % of target |");
+    println!("|---|---|---|---|");
+    for p in &pts {
+        // Cross-check against the native solver as we print.
+        let scaled = Workload { z: w.z * p.cores as f64, ..w };
+        let native = mcapi::model::analytic::mva(&scaled, p.hit_rate, p.cores);
+        assert!(
+            (p.throughput - native.throughput).abs() / native.throughput < 1e-3,
+            "artifact disagrees with native MVA"
+        );
+        println!(
+            "| {:.2} | {} | {:.3} | {:.1}% |",
+            p.hit_rate,
+            p.cores,
+            p.utilization,
+            p.target_fraction * 100.0
+        );
+    }
+    println!("\n(artifact values match the native MVA solver to <0.1%)\n");
+    if model.has_sweep() {
+        let sw = model.fig6_sweep(&w, &[2], &[0.5, 0.7, 0.9]).expect("sweep");
+        println!("discrete-time sweep (Pallas kernel) spot check @2 cores:");
+        for p in &sw {
+            println!(
+                "  h={:.1}: util {:.2}, {:.0}% of target",
+                p.hit_rate,
+                p.utilization,
+                p.target_fraction * 100.0
+            );
+        }
+        println!();
+    }
+
+    // ----- Stop criterion ----------------------------------------------------
+    println!("--- Section 5 stop criterion (model vs measured lock-free latency)\n");
+    let lf = run_cell_latency(
+        Cell {
+            os: OsProfile::linux_rt(),
+            cores: MULTI_CORES,
+            kind: MsgKind::Message,
+            backend: BackendKind::LockFree,
+            affinity: AffinityMode::PinnedSpread,
+        },
+        400,
+    );
+    let measured_min = lf.min() as f64;
+    let verdict = stop_criterion(&w, REFERENCE_HIT_RATE, measured_min);
+    println!("model memory-bound minimum : {:.2} us/message", verdict.model_min_ns / 1e3);
+    println!("measured lock-free minimum : {:.2} us (sim, Linux 4c)", measured_min / 1e3);
+    println!("gap                        : {:.1}x (budget {:.0}x)", verdict.ratio, mcapi::model::stopcrit::GAP_BUDGET);
+    println!(
+        "verdict                    : {}",
+        if verdict.stop { "STOP refactoring (gap = CPU cost, not locks)" } else { "CONTINUE" }
+    );
+    assert!(
+        verdict.stop,
+        "the lock-free implementation must pass the paper's stop criterion"
+    );
+
+    println!("\nend_to_end OK");
+}

@@ -1,0 +1,87 @@
+//! Quickstart: the MCAPI public API in five minutes.
+//!
+//! Creates a lock-free runtime, two endpoints, and exchanges all three
+//! MCAPI payload kinds (connection-less messages, packet channel, scalar
+//! channel) between two threads on the real host.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mcapi::lockfree::RealWorld;
+use mcapi::mcapi::types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status};
+use mcapi::mcapi::McapiRuntime;
+
+fn main() {
+    // 1. One shared-memory communication domain, lock-free data path.
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg::with_backend(BackendKind::LockFree));
+
+    // 2. Endpoints are (domain, node, port) triples; `owner` is the dense
+    //    node slot used as the producer lane.
+    let producer_ep = EndpointId::new(0, 1, 10);
+    let consumer_ep = EndpointId::new(0, 2, 10);
+    rt.create_endpoint(producer_ep, 1).expect("producer endpoint");
+    let rx = rt.create_endpoint(consumer_ep, 2).expect("consumer endpoint");
+
+    // 3. Connection-less messages with priorities (0 = highest).
+    rt.msg_send(1, consumer_ep, b"low priority", 2).unwrap();
+    rt.msg_send(1, consumer_ep, b"high priority", 0).unwrap();
+    let mut buf = [0u8; 64];
+    let n = rt.msg_recv(rx, &mut buf).unwrap();
+    println!("first message out: {:?}", std::str::from_utf8(&buf[..n]).unwrap());
+    assert_eq!(&buf[..n], b"high priority");
+    let n = rt.msg_recv(rx, &mut buf).unwrap();
+    println!("second message out: {:?}", std::str::from_utf8(&buf[..n]).unwrap());
+
+    // 4. A connected packet channel (receive buffers come from the pool).
+    let ch = rt.connect(producer_ep, consumer_ep, ChannelKind::Packet).unwrap();
+    rt.open_send(ch).unwrap();
+    rt.open_recv(ch).unwrap();
+
+    // Producer and consumer on separate threads, non-blocking + yield —
+    // exactly the paper's Section 4 processing discipline.
+    let rt2 = rt.clone();
+    let producer = std::thread::spawn(move || {
+        for i in 0..100u32 {
+            let payload = format!("packet #{i}");
+            loop {
+                match rt2.pkt_send(ch, payload.as_bytes()) {
+                    Ok(()) => break,
+                    Err(s) if s.is_would_block() || s == Status::MemLimit => {
+                        std::thread::yield_now()
+                    }
+                    Err(e) => panic!("send: {e:?}"),
+                }
+            }
+        }
+    });
+    let mut received = 0;
+    while received < 100 {
+        match rt.pkt_recv(ch, &mut buf) {
+            Ok(n) => {
+                if received == 0 || received == 99 {
+                    println!("packet: {:?}", std::str::from_utf8(&buf[..n]).unwrap());
+                }
+                received += 1;
+            }
+            Err(s) if s.is_would_block() => std::thread::yield_now(),
+            Err(e) => panic!("recv: {e:?}"),
+        }
+    }
+    producer.join().unwrap();
+    rt.close(ch).unwrap();
+
+    // 5. Scalar channel: 64-bit values, no buffers at all.
+    let ch = rt.connect(producer_ep, consumer_ep, ChannelKind::Scalar).unwrap();
+    rt.open_send(ch).unwrap();
+    rt.open_recv(ch).unwrap();
+    rt.sclr_send(ch, 0xFEED_F00D).unwrap();
+    println!("scalar: {:#x}", rt.sclr_recv(ch).unwrap());
+
+    // 6. Asynchronous operations: issue, test, wait (Figure 3 lifecycle).
+    let h = rt.msg_recv_i(rx).unwrap();
+    assert!(!rt.test(h));
+    rt.msg_send(1, consumer_ep, b"async hello", 0).unwrap();
+    let n = rt.wait_recv(h, &mut buf, 1_000_000_000).unwrap();
+    println!("async message: {:?}", std::str::from_utf8(&buf[..n]).unwrap());
+
+    println!("quickstart OK");
+}

@@ -1,0 +1,91 @@
+"""AOT: lower the L2 model (with its Pallas kernels) to HLO text artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what `make
+artifacts` does). Emits:
+
+* ``qpn_sweep.hlo.txt``  — the Figure 6 discrete-time simulation sweep
+* ``mva_solver.hlo.txt`` — the analytic MVA fixed point over the same grid
+
+HLO **text** (not ``lowered.compile().serialize()`` nor the serialized
+``HloModuleProto``) is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Inputs of both artifacts: six float32 [B] vectors
+    (h, ncores, nops, z, thit, tmem)
+Outputs: a tuple of float32 [B] vectors
+    qpn_sweep  -> (X msgs/s, U, F)
+    mva_solver -> (X msgs/s, U, F, Q)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static batch the artifacts are built for; the Rust side pads its grids to
+# this size (runtime::ArtifactSpec documents the contract).
+BATCH = 256
+
+# The sweep artifact simulates fewer steps than the interactive default so
+# the artifact compiles and executes quickly on the CPU client; the shape of
+# the Figure 6 curves is converged well before this horizon.
+SWEEP_OUTER = 512
+SWEEP_INNER = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_qpn_sweep(batch: int = BATCH):
+    spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+
+    def fn(h, ncores, nops, z, thit, tmem):
+        return model.qpn_sweep(
+            h, ncores, nops, z, thit, tmem, outer=SWEEP_OUTER, inner=SWEEP_INNER
+        )
+
+    return jax.jit(fn).lower(spec, spec, spec, spec, spec, spec)
+
+
+def lower_mva(batch: int = BATCH):
+    spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return jax.jit(model.mva_solve).lower(spec, spec, spec, spec, spec, spec)
+
+
+def write_artifact(name: str, lowered, out_dir: str) -> str:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, name)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    print(f"wrote {path} ({len(text)} chars)")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    write_artifact("mva_solver.hlo.txt", lower_mva(args.batch), args.out_dir)
+    write_artifact("qpn_sweep.hlo.txt", lower_qpn_sweep(args.batch), args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Pallas kernels for the QPN performance model (the L1 hot spot).
+
+Two kernels:
+
+* ``qpn_step`` — advances the discrete-time queueing-network simulation by
+  ``steps`` nanoseconds for a tile of parameter-grid lanes. This is the hot
+  loop of the Figure 6 sweep: everything is element-wise lane arithmetic
+  over an int32 state block, so the TPU mapping is VPU work with one
+  [TILE, KMAX] state tile resident in VMEM per program instance.
+* ``mva_kernel`` — the batched Mean Value Analysis fixed point (unrolled to
+  ``KMAX`` populations with masking), the analytic cross-check.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and the AOT artifact must run on the Rust CPU
+client. On a real TPU the same kernels compile with ``interpret=False``;
+the BlockSpec tiling below is already chosen for that case (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Grid tile: lanes per Pallas program instance. 128 matches the TPU lane
+# width; the per-instance VMEM footprint is
+#   4 state blocks [128, 8] i32 + 4 lane vectors + 6 param vectors ≈ 21 KiB.
+TILE = 128
+
+KMAX = ref.KMAX
+CARRY_ONE = ref.CARRY_ONE
+
+# State tensors carried between steps, in kernel argument order.
+STATE2D = ("phase", "timer", "ops_left", "carry")  # [B, KMAX] i32
+STATE1D = ("serving", "rr", "busy", "done")  # [B] i32
+PARAMS = ("ncores", "z", "nops", "thit", "tbus", "missf")  # [B] i32
+
+
+def _step_body(state, params, kmax):
+    """One simulation nanosecond; identical math to ref.qpn_step_ref."""
+    return ref.qpn_step_ref(state, params, kmax)
+
+
+def _qpn_kernel(*refs, steps: int, kmax: int):
+    """Pallas kernel body: run ``steps`` ns for one [TILE] lane block."""
+    n2, n1, npar = len(STATE2D), len(STATE1D), len(PARAMS)
+    in_refs = refs[: n2 + n1 + npar]
+    out_refs = refs[n2 + n1 + npar :]
+
+    state = {k: in_refs[i][...] for i, k in enumerate(STATE2D)}
+    state.update({k: in_refs[n2 + i][...] for i, k in enumerate(STATE1D)})
+    params = {k: in_refs[n2 + n1 + i][...] for i, k in enumerate(PARAMS)}
+
+    def body(_, st):
+        return _step_body(st, params, kmax)
+
+    state = lax.fori_loop(0, steps, body, state)
+
+    for i, k in enumerate(STATE2D):
+        out_refs[i][...] = state[k]
+    for i, k in enumerate(STATE1D):
+        out_refs[n2 + i][...] = state[k]
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "kmax", "tile"))
+def qpn_step(state, params, steps: int, kmax: int = KMAX, tile: int = TILE):
+    """Advance the batched simulation ``steps`` ns with the Pallas kernel.
+
+    ``state``/``params`` are the dicts from ``ref.init_state`` /
+    the int32 parameter arrays; batch must be a multiple of ``tile``.
+    Returns the advanced state dict.
+    """
+    batch = state["phase"].shape[0]
+    assert batch % tile == 0, f"batch {batch} not a multiple of tile {tile}"
+    grid = (batch // tile,)
+
+    spec2d = pl.BlockSpec((tile, kmax), lambda i: (i, 0))
+    spec1d = pl.BlockSpec((tile,), lambda i: (i,))
+
+    in_specs = (
+        [spec2d] * len(STATE2D) + [spec1d] * len(STATE1D) + [spec1d] * len(PARAMS)
+    )
+    out_specs = [spec2d] * len(STATE2D) + [spec1d] * len(STATE1D)
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, kmax), jnp.int32) for _ in STATE2D
+    ] + [jax.ShapeDtypeStruct((batch,), jnp.int32) for _ in STATE1D]
+
+    args = (
+        [state[k] for k in STATE2D]
+        + [state[k] for k in STATE1D]
+        + [params[k] for k in PARAMS]
+    )
+
+    outs = pl.pallas_call(
+        functools.partial(_qpn_kernel, steps=steps, kmax=kmax),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(*args)
+
+    new_state = {k: outs[i] for i, k in enumerate(STATE2D)}
+    new_state.update(
+        {k: outs[len(STATE2D) + i] for i, k in enumerate(STATE1D)}
+    )
+    return new_state
+
+
+def _mva_kernel(d_think_ref, d_bus_ref, n_ref, x_ref, u_ref, q_ref, *, kmax):
+    """Pallas kernel body: exact MVA, population unrolled to kmax."""
+    d_think = d_think_ref[...]
+    d_bus = d_bus_ref[...]
+    n = n_ref[...]
+    q = jnp.zeros_like(d_think)
+    x = jnp.zeros_like(d_think)
+    for i in range(1, kmax + 1):
+        r_bus = d_bus * (1.0 + q)
+        x_i = i / (d_think + r_bus)
+        q_i = x_i * r_bus
+        use = (i <= n).astype(jnp.float32)
+        x = use * x_i + (1.0 - use) * x
+        q = use * q_i + (1.0 - use) * q
+    x_ref[...] = x * 1e9
+    u_ref[...] = jnp.clip(x * d_bus, 0.0, 1.0)
+    q_ref[...] = q
+
+
+@functools.partial(jax.jit, static_argnames=("kmax", "tile"))
+def mva_kernel(d_think, d_bus, n, kmax: int = KMAX, tile: int = TILE):
+    """Batched MVA via Pallas; f32 [B] inputs, batch multiple of tile.
+
+    Returns (X msgs/s, U utilization, Q mean queue length).
+    """
+    batch = d_think.shape[0]
+    assert batch % tile == 0, f"batch {batch} not a multiple of tile {tile}"
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    outs = pl.pallas_call(
+        functools.partial(_mva_kernel, kmax=kmax),
+        grid=(batch // tile,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((batch,), jnp.float32)] * 3,
+        interpret=True,
+    )(
+        d_think.astype(jnp.float32),
+        d_bus.astype(jnp.float32),
+        n.astype(jnp.float32),
+    )
+    return tuple(outs)

@@ -1,0 +1,135 @@
+"""L2: the paper's Section 5 performance model as a JAX computation.
+
+The Queueing-Petri-Net of the paper has a single queueing resource — the
+shared memory bus — through which every cache miss of every message
+exchange must pass, plus ``C`` core tokens. This module exposes the two
+AOT entry points executed by the Rust coordinator:
+
+* ``qpn_sweep`` — the discrete-time token simulation (driven by the Pallas
+  ``qpn_step`` kernel) over a parameter grid; regenerates Figure 6.
+* ``mva_solve`` — the analytic Mean Value Analysis fixed point over the
+  same grid (Pallas ``mva_kernel``); the cross-check and the source of the
+  theoretical-maximum throughput / refactoring stop criterion.
+
+Both take flat float32 vectors so the PJRT bridge on the Rust side stays
+dtype-trivial. Python never runs on the request path: `compile/aot.py`
+lowers these functions to HLO text once, at build time.
+
+Calibration (documented in EXPERIMENTS.md): with the default workload
+constants below, the model's zero-contention exchange time is
+``z + nops*(h*thit + (1-h)*tmem)`` ≈ 1.59 µs at h=0.95, i.e. a theoretical
+maximum of ~630 k messages/s — the figure the paper reports.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import qpn_step as k
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Workload constants (ns), derived as in the paper from static analysis of
+# the send+receive paths. One "memory operation" is one cache-line touch.
+# ---------------------------------------------------------------------------
+DEFAULTS = {
+    "message": {"nops": 52, "z": 1300, "thit": 2, "tmem": 60},
+    "packet": {"nops": 60, "z": 1400, "thit": 2, "tmem": 60},
+    "scalar": {"nops": 24, "z": 900, "thit": 2, "tmem": 60},
+}
+
+# Simulated nanoseconds per inner Pallas call and number of outer scan steps
+# for the AOT sweep artifact: 64 * 4096 ≈ 262 µs of simulated time per lane,
+# a few hundred message exchanges — enough for steady state at these rates.
+INNER_STEPS = 64
+OUTER_STEPS = 4096
+
+
+def _int_params(h, ncores, nops, z, thit, tmem):
+    """f32 workload vectors -> int32 simulation parameter dict."""
+    to = lambda a: jnp.asarray(a).astype(jnp.int32)
+    missf = ((1.0 - jnp.asarray(h, jnp.float32)) * ref.CARRY_ONE).astype(jnp.int32)
+    return {
+        "ncores": to(ncores),
+        "z": to(z),
+        "nops": to(nops),
+        "thit": to(thit),
+        "tbus": to(tmem),
+        "missf": missf,
+    }
+
+
+def qpn_sweep(h, ncores, nops, z, thit, tmem, *, outer=OUTER_STEPS, inner=INNER_STEPS):
+    """Discrete-time QPN simulation over the grid (Pallas-kernel driven).
+
+    All inputs are float32 [B] (B a multiple of the kernel tile).
+    Returns (X msgs/s, U bus utilization, F throughput fraction of target),
+    each float32 [B]. ``z`` is the *per-core* think time; the workload
+    generator demands one message per ``z/ncores`` ns system-wide, so the
+    target rate ``ncores/z`` is the same line for every core configuration
+    (Figure 6's 100%) and the single-core configuration tops out around
+    95% of it — exactly the paper's observation.
+    """
+    params = _int_params(h, ncores, nops, z, thit, tmem)
+    state = ref.init_state(params["ncores"].shape[0])
+
+    def body(st, _):
+        return k.qpn_step(st, params, steps=inner), None
+
+    state, _ = lax.scan(body, state, None, length=outer)
+    steps = jnp.float32(outer * inner)
+    x = state["done"].astype(jnp.float32) / steps * 1e9
+    u = state["busy"].astype(jnp.float32) / steps
+    frac = x / _target_rate(ncores, z)
+    return x, u, frac
+
+
+def _target_rate(ncores, z):
+    """Workload target rate (msgs/s): one message per z/ncores ns."""
+    return (
+        jnp.asarray(ncores, jnp.float32) / jnp.asarray(z, jnp.float32) * 1e9
+    )
+
+
+def mva_solve(h, ncores, nops, z, thit, tmem):
+    """Analytic MVA over the grid (Pallas-kernel driven).
+
+    Same signature/outputs as ``qpn_sweep`` plus the mean bus queue length:
+    (X msgs/s, U, F, Q).
+    """
+    d_think, d_bus = ref.demands(h, nops, z, thit, tmem)
+    x, u, q = k.mva_kernel(d_think, d_bus, jnp.asarray(ncores, jnp.float32))
+    frac = x / _target_rate(ncores, z)
+    return x, u, frac, q
+
+
+def figure6_grid(msg_type: str = "message", cores=(1, 2), hits=None, pad_to: int = 256):
+    """Build the Figure 6 parameter grid as f32 vectors.
+
+    Returns a dict of float32 [pad_to] arrays plus the number of valid
+    lanes. Lanes beyond the valid count replicate the last point (padding
+    keeps the AOT shape static).
+    """
+    if hits is None:
+        hits = [0.5 + 0.02 * i for i in range(26)]  # 0.50 .. 1.00
+    w = DEFAULTS[msg_type]
+    rows = [(hh, cc) for cc in cores for hh in hits]
+    n = len(rows)
+    assert n <= pad_to, (n, pad_to)
+    rows = rows + [rows[-1]] * (pad_to - n)
+    h = jnp.asarray([r[0] for r in rows], jnp.float32)
+    c = jnp.asarray([r[1] for r in rows], jnp.float32)
+    const = lambda v: jnp.full((pad_to,), v, jnp.float32)
+    return {
+        "h": h,
+        "ncores": c,
+        # Per-core think time scales with the core count so the *system*
+        # demand (the Figure 6 target line) is identical for every core
+        # configuration.
+        "z": c * w["z"],
+        "nops": const(w["nops"]),
+        "thit": const(w["thit"]),
+        "tmem": const(w["tmem"]),
+        "valid": n,
+    }

@@ -1,0 +1,66 @@
+"""AOT artifact tests: HLO-text emission contract with the Rust loader."""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+class TestHloTextEmission:
+    def test_mva_artifact_text(self, tmp_path):
+        path = aot.write_artifact("mva_solver.hlo.txt", aot.lower_mva(256), str(tmp_path))
+        text = open(path).read()
+        # HLO text module header — what HloModuleProto::from_text_file parses.
+        assert text.startswith("HloModule")
+        # Six f32[256] parameters.
+        assert text.count("f32[256]") >= 6
+        # Never the 64-bit-id proto path.
+        assert "\x00" not in text
+
+    def test_sweep_artifact_text(self, tmp_path):
+        path = aot.write_artifact(
+            "qpn_sweep.hlo.txt", aot.lower_qpn_sweep(256), str(tmp_path)
+        )
+        text = open(path).read()
+        assert text.startswith("HloModule")
+        # The artifact embeds the scan loop (lowered as a while op).
+        assert "while" in text
+
+    def test_atomic_replace(self, tmp_path):
+        aot.write_artifact("x.hlo.txt", aot.lower_mva(256), str(tmp_path))
+        assert not os.path.exists(tmp_path / "x.hlo.txt.tmp")
+
+
+class TestArtifactSemantics:
+    """Round-trip the lowered module through XLA's own runtime: the numbers
+    the Rust client will read must equal calling the model directly."""
+
+    def test_mva_roundtrip_equals_direct(self):
+        g = model.figure6_grid(pad_to=256)
+        args = (g["h"], g["ncores"], g["nops"], g["z"], g["thit"], g["tmem"])
+        direct = model.mva_solve(*args)
+        compiled = jax.jit(model.mva_solve).lower(*args).compile()
+        via = compiled(*args)
+        for d, v in zip(direct, via):
+            np.testing.assert_allclose(d, v, rtol=1e-6)
+
+    def test_sweep_deterministic_across_lowerings(self):
+        g = model.figure6_grid(cores=(2,), hits=[0.8], pad_to=256)
+        args = (g["h"], g["ncores"], g["nops"], g["z"], g["thit"], g["tmem"])
+
+        def fn(*a):
+            return model.qpn_sweep(*a, outer=64, inner=64)
+
+        a = jax.jit(fn)(*args)
+        b = jax.jit(fn)(*args)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_default_batch_matches_rust_contract(self):
+        # rust/src/runtime/artifact.rs documents BATCH=256; keep in sync.
+        assert aot.BATCH == 256

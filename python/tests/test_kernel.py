@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas kernels vs. the pure-jnp oracle.
+
+The discrete-time QPN step kernel must be *bit-exact* against the reference
+(all state is int32 and the step logic is identical arithmetic), across
+parameter ranges swept by hypothesis. The MVA kernel is float32 and is
+checked with allclose.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import qpn_step as k
+
+TILE = k.TILE
+
+
+def make_params(batch, ncores, z, nops, thit, tbus, missf):
+    full = lambda v: jnp.full((batch,), v, jnp.int32)
+    return {
+        "ncores": full(ncores),
+        "z": full(z),
+        "nops": full(nops),
+        "thit": full(thit),
+        "tbus": full(tbus),
+        "missf": full(missf),
+    }
+
+
+def state_equal(a, b):
+    for key in a:
+        if not np.array_equal(np.asarray(a[key]), np.asarray(b[key])):
+            return key
+    return None
+
+
+params_strategy = st.fixed_dictionaries(
+    {
+        "ncores": st.integers(1, ref.KMAX),
+        "z": st.integers(1, 50),
+        "nops": st.integers(1, 16),
+        "thit": st.integers(1, 4),
+        "tbus": st.integers(1, 20),
+        "missf": st.integers(0, ref.CARRY_ONE),
+    }
+)
+
+
+class TestQpnStepKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(p=params_strategy, steps=st.integers(1, 96))
+    def test_bit_exact_vs_ref(self, p, steps):
+        params = make_params(TILE, **p)
+        st_ref = ref.init_state(TILE)
+        for _ in range(steps):
+            st_ref = ref.qpn_step_ref(st_ref, params)
+        st_ker = k.qpn_step(ref.init_state(TILE), params, steps=steps)
+        assert state_equal(st_ref, st_ker) is None
+
+    def test_multi_tile_grid(self):
+        # Two grid tiles with *different* parameters per lane must not leak
+        # state across tiles.
+        batch = 2 * TILE
+        params = {
+            key: jnp.concatenate([a, b])
+            for (key, a), (_, b) in zip(
+                make_params(TILE, 2, 10, 4, 2, 8, 300_000).items(),
+                make_params(TILE, 1, 5, 2, 1, 3, 700_000).items(),
+            )
+        }
+        st_ref = ref.init_state(batch)
+        for _ in range(64):
+            st_ref = ref.qpn_step_ref(st_ref, params)
+        st_ker = k.qpn_step(ref.init_state(batch), params, steps=64)
+        assert state_equal(st_ref, st_ker) is None
+
+    def test_chunked_equals_monolithic(self):
+        params = make_params(TILE, 3, 7, 5, 2, 9, 450_000)
+        a = k.qpn_step(ref.init_state(TILE), params, steps=60)
+        b = ref.init_state(TILE)
+        for _ in range(6):
+            b = k.qpn_step(b, params, steps=10)
+        assert state_equal(a, b) is None
+
+    def test_batch_must_be_tile_multiple(self):
+        params = make_params(TILE + 1, 1, 5, 2, 1, 3, 0)
+        with pytest.raises(AssertionError):
+            k.qpn_step(ref.init_state(TILE + 1), params, steps=1)
+
+
+class TestSimulationInvariants:
+    """Physics of the simulated network, independent of the oracle."""
+
+    def run(self, steps=4000, **p):
+        params = make_params(TILE, **p)
+        state = ref.init_state(TILE)
+        state = k.qpn_step(state, params, steps=steps)
+        return state, params
+
+    def test_bus_busy_bounded_by_time(self):
+        state, _ = self.run(ncores=4, z=5, nops=8, thit=1, tbus=12, missf=500_000)
+        assert int(state["busy"][0]) <= 4000
+
+    def test_zero_miss_never_uses_bus(self):
+        state, _ = self.run(ncores=4, z=5, nops=8, thit=1, tbus=12, missf=0)
+        assert int(state["busy"][0]) == 0
+        assert int(state["done"][0]) > 0
+
+    def test_all_miss_bus_utilization_near_one(self):
+        state, _ = self.run(
+            steps=8000, ncores=4, z=1, nops=16, thit=1, tbus=20, missf=ref.CARRY_ONE
+        )
+        u = float(state["busy"][0]) / 8000.0
+        assert u > 0.9
+
+    def test_throughput_scales_with_cores_when_bus_idle(self):
+        one, _ = self.run(ncores=1, z=20, nops=2, thit=1, tbus=4, missf=100_000)
+        four, _ = self.run(ncores=4, z=20, nops=2, thit=1, tbus=4, missf=100_000)
+        assert int(four["done"][0]) > 3 * int(one["done"][0])
+
+    def test_deterministic(self):
+        a, _ = self.run(ncores=3, z=9, nops=6, thit=2, tbus=7, missf=250_000)
+        b, _ = self.run(ncores=3, z=9, nops=6, thit=2, tbus=7, missf=250_000)
+        assert state_equal(a, b) is None
+
+
+class TestMvaKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        d_think=st.floats(1.0, 1e4),
+        d_bus=st.floats(0.0, 1e4),
+        n=st.integers(1, ref.KMAX),
+    )
+    def test_matches_ref(self, d_think, d_bus, n):
+        dt = jnp.full((TILE,), d_think, jnp.float32)
+        db = jnp.full((TILE,), d_bus, jnp.float32)
+        nn = jnp.full((TILE,), n, jnp.int32)
+        x, u, q = k.mva_kernel(dt, db, nn.astype(jnp.float32))
+        xr, ur, qr = ref.mva_ref(dt, db, nn)
+        np.testing.assert_allclose(x, xr, rtol=1e-6)
+        np.testing.assert_allclose(u, ur, rtol=1e-6)
+        np.testing.assert_allclose(q, qr, rtol=1e-6)
+
+    def test_single_customer_closed_form(self):
+        # With one customer there is no queueing: X = 1/(d_think + d_bus).
+        dt = jnp.full((TILE,), 100.0, jnp.float32)
+        db = jnp.full((TILE,), 50.0, jnp.float32)
+        x, u, q = k.mva_kernel(dt, db, jnp.ones((TILE,), jnp.float32))
+        np.testing.assert_allclose(x, 1e9 / 150.0, rtol=1e-6)
+        np.testing.assert_allclose(u, 50.0 / 150.0, rtol=1e-6)
+
+    def test_utilization_monotone_in_population(self):
+        dt = jnp.full((TILE,), 200.0, jnp.float32)
+        db = jnp.full((TILE,), 100.0, jnp.float32)
+        us = []
+        for n in range(1, ref.KMAX + 1):
+            _, u, _ = k.mva_kernel(dt, db, jnp.full((TILE,), n, jnp.float32))
+            us.append(float(u[0]))
+        assert all(b >= a - 1e-6 for a, b in zip(us, us[1:]))
+        assert us[-1] <= 1.0 + 1e-6
+
+    def test_zero_bus_demand_delay_station_only(self):
+        dt = jnp.full((TILE,), 500.0, jnp.float32)
+        db = jnp.zeros((TILE,), jnp.float32)
+        for n in (1, 4):
+            x, u, _ = k.mva_kernel(dt, db, jnp.full((TILE,), n, jnp.float32))
+            np.testing.assert_allclose(x, n * 1e9 / 500.0, rtol=1e-6)
+            np.testing.assert_allclose(u, 0.0, atol=1e-9)

@@ -1,0 +1,118 @@
+"""L2 model tests: Figure 6 semantics, calibration, and sweep physics."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def grid(msg="message", cores=(1, 2), pad=256):
+    return model.figure6_grid(msg_type=msg, cores=cores, pad_to=pad)
+
+
+def mva(g):
+    return model.mva_solve(g["h"], g["ncores"], g["nops"], g["z"], g["thit"], g["tmem"])
+
+
+class TestFigure6Grid:
+    def test_shapes_and_padding(self):
+        g = grid()
+        assert g["h"].shape == (256,)
+        assert g["valid"] == 52  # 26 hit rates x 2 core configs
+        # Padding replicates the last valid lane.
+        np.testing.assert_allclose(g["h"][g["valid"] :], g["h"][g["valid"] - 1])
+
+    def test_message_types_have_distinct_demands(self):
+        gm, gp, gs = grid("message"), grid("packet"), grid("scalar")
+        assert float(gm["nops"][0]) != float(gp["nops"][0])
+        assert float(gs["nops"][0]) < float(gm["nops"][0])
+
+    def test_unknown_type_raises(self):
+        with pytest.raises(KeyError):
+            grid("bogus")
+
+
+class TestMvaFigure6:
+    def test_throughput_fraction_increases_with_hit_rate(self):
+        g = grid()
+        _, _, frac, _ = mva(g)
+        f = np.asarray(frac[:26])  # single-core series, h ascending
+        assert np.all(np.diff(f) >= -1e-6)
+
+    def test_two_cores_raise_bus_utilization(self):
+        g = grid()
+        _, u, _, _ = mva(g)
+        one = np.asarray(u[:26])
+        two = np.asarray(u[26:52])
+        assert np.all(two >= one - 1e-6)
+
+    def test_single_core_cannot_reach_target(self):
+        # Paper: "we do not attain the target throughput rate but only about
+        # 95%" — the hit-path cost keeps the fraction below 1 even at h=1.
+        g = grid()
+        _, _, frac, _ = mva(g)
+        f1 = np.asarray(frac[:26])
+        assert np.all(f1 < 1.0)
+        assert f1[-1] > 0.9  # but close at h=1.0
+
+    def test_theoretical_max_near_630k(self):
+        # Calibration check: zero-contention exchange at h=0.95 ~ 630 kmsg/s.
+        g = model.figure6_grid(cores=(1,), hits=[0.95], pad_to=256)
+        x, _, _, _ = mva(g)
+        assert 500_000 < float(x[0]) < 800_000
+
+    def test_two_core_fraction_exceeds_single_at_high_h(self):
+        # Paper: adding a second core improves throughput toward the target
+        # at high hit rates.
+        g = grid()
+        _, _, frac, _ = mva(g)
+        f1 = np.asarray(frac[:26])
+        f2 = np.asarray(frac[26:52])
+        assert f2[-1] > f1[-1]
+
+
+class TestSweepVsMva:
+    def test_simulation_tracks_analytic_shape(self):
+        # The discrete-time simulation and MVA disagree in absolute value
+        # (FIFO vs product-form assumptions) but must agree in shape: same
+        # ordering across hit rates, utilization within 15 points.
+        hits = [0.6, 0.8, 0.95]
+        g = model.figure6_grid(cores=(2,), hits=hits, pad_to=256)
+        xs, us, _ = model.qpn_sweep(
+            g["h"], g["ncores"], g["nops"], g["z"], g["thit"], g["tmem"],
+            outer=256, inner=64,
+        )
+        xm, um, _, _ = mva(g)
+        xs, us = np.asarray(xs[:3]), np.asarray(us[:3])
+        xm, um = np.asarray(xm[:3]), np.asarray(um[:3])
+        assert np.all(np.diff(xs) > 0) and np.all(np.diff(xm) > 0)
+        # FIFO/deterministic service vs product-form: absolute values drift
+        # but stay within 20 utilization points and converge at high h.
+        assert np.all(np.abs(us - um) < 0.20)
+        assert abs(us[-1] - um[-1]) < 0.05
+
+    def test_sweep_utilization_bounded(self):
+        g = model.figure6_grid(cores=(1, 2), hits=[0.5, 0.9], pad_to=256)
+        _, u, _ = model.qpn_sweep(
+            g["h"], g["ncores"], g["nops"], g["z"], g["thit"], g["tmem"],
+            outer=128, inner=64,
+        )
+        u = np.asarray(u)
+        assert np.all(u >= 0.0) and np.all(u <= 1.0)
+
+
+class TestCalibrationConstants:
+    def test_scalar_cheaper_than_message_cheaper_than_packet(self):
+        d = model.DEFAULTS
+        assert d["scalar"]["nops"] < d["message"]["nops"] <= d["packet"]["nops"]
+
+    def test_exchange_time_microseconds_scale(self):
+        # Sanity: one message exchange costs on the order of a microsecond,
+        # matching the paper's measured 7 µs lock-free latency within 10x.
+        w = model.DEFAULTS["message"]
+        t = w["z"] + w["nops"] * (0.95 * w["thit"] + 0.05 * w["tmem"])
+        assert 1_000 < t < 3_000  # ns

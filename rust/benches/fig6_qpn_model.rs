@@ -1,0 +1,74 @@
+//! Bench: regenerate **Figure 6** — QPN model simulation results (memory
+//! bus utilization + throughput % of target vs. cache hit rate, 1 vs 2
+//! cores), through all three solvers:
+//!
+//! * AOT MVA artifact (Pallas `mva_kernel` via PJRT),
+//! * AOT discrete-time sweep artifact (Pallas `qpn_step` in a scan),
+//! * native Rust MVA (cross-check).
+//!
+//! Also times the PJRT execution itself (the artifact is one fused XLA
+//! call over the whole 256-lane grid).
+//!
+//! Run with: `make artifacts && cargo bench --bench fig6_qpn_model`
+
+use mcapi::model::{analytic, QpnModel, Workload};
+use mcapi::runtime::PjrtRuntime;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = QpnModel::load(&rt).expect("run `make artifacts` first");
+    let w = Workload::message();
+    let hits = QpnModel::default_hits();
+
+    println!("Figure 6 — QPN model (message workload)\n");
+    println!("| h | cores | util (mva) | %target (mva) | util (sweep) | %target (sweep) |");
+    println!("|---|---|---|---|---|---|");
+    let mva = model.fig6_mva(&w, &[1, 2], &hits).expect("mva artifact");
+    let sweep = model.fig6_sweep(&w, &[1, 2], &hits).expect("sweep artifact");
+    for (m, s) in mva.iter().zip(&sweep) {
+        println!(
+            "| {:.2} | {} | {:.3} | {:.1}% | {:.3} | {:.1}% |",
+            m.hit_rate,
+            m.cores,
+            m.utilization,
+            m.target_fraction * 100.0,
+            s.utilization,
+            s.target_fraction * 100.0
+        );
+    }
+
+    // Shape gates (the paper's reading of Figure 6):
+    // single core cannot reach the target even at h=1.
+    let single_last = &mva[hits.len() - 1];
+    assert!(single_last.cores == 1 && single_last.target_fraction < 1.0);
+    assert!(single_last.target_fraction > 0.85, "but close at h=1");
+    // two cores raise utilization at equal h and approach the target.
+    for i in 0..hits.len() {
+        assert!(mva[hits.len() + i].utilization >= mva[i].utilization - 1e-3);
+    }
+    assert!(mva[2 * hits.len() - 1].target_fraction > single_last.target_fraction);
+    // native cross-check
+    for p in &mva {
+        let scaled = Workload { z: w.z * p.cores as f64, ..w };
+        let native = analytic::mva(&scaled, p.hit_rate, p.cores);
+        assert!((p.throughput - native.throughput).abs() / native.throughput < 1e-3);
+    }
+
+    // Timing: per-call latency of each artifact over the full grid.
+    for (name, f) in [
+        ("mva artifact (256 lanes)", true),
+        ("sweep artifact (256 lanes, 32k ns)", false),
+    ] {
+        let stats = mcapi::harness::time_fn(name, 2, if f { 20 } else { 5 }, |_| {
+            if f {
+                model.fig6_mva(&w, &[1, 2], &hits).unwrap()
+            } else {
+                model.fig6_sweep(&w, &[1, 2], &hits).unwrap()
+            }
+        });
+        println!("\n{}", mcapi::harness::header());
+        println!("{}", stats.row());
+    }
+    println!("\nharness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,54 @@
+//! Bench: regenerate **Figure 7** — MCAPI data exchange throughput for
+//! the full test matrix (OS × cores × type × backend × affinity).
+//!
+//! Run with: `cargo bench --bench fig7_throughput`
+
+use mcapi::coordinator::experiment::{print_fig7, Matrix};
+use mcapi::mcapi::types::BackendKind;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let matrix = Matrix::new(1000);
+    let cells = matrix.fig7();
+    println!("Figure 7 — MCAPI data exchange throughput performance (kmsg/s)\n");
+    println!("{}", print_fig7(&cells));
+
+    // Shape gates from the paper's reading of the figure:
+    // 1. lock-free beats lock-based in every configuration;
+    // 2. lock-based single core beats lock-based multicore (Table 2);
+    // 3. lock-based Linux single-core beats Windows single-core (rt futex
+    //    fast path vs dispatcher).
+    let x = |pred: &dyn Fn(&mcapi::coordinator::experiment::CellResult) -> bool| {
+        cells.iter().filter(|c| pred(c)).map(|c| c.kmsgs_per_s()).collect::<Vec<_>>()
+    };
+    for c in &cells {
+        if c.cell.backend == BackendKind::Locked {
+            let twin = cells
+                .iter()
+                .find(|o| {
+                    o.cell.backend == BackendKind::LockFree
+                        && o.cell.os.name == c.cell.os.name
+                        && o.cell.cores == c.cell.cores
+                        && o.cell.kind == c.cell.kind
+                        && o.cell.affinity == c.cell.affinity
+                })
+                .unwrap();
+            assert!(
+                twin.kmsgs_per_s() > c.kmsgs_per_s(),
+                "lock-free must beat lock-based: {}",
+                c.cell.id()
+            );
+        }
+    }
+    let linux_single_locked = x(&|c| {
+        c.cell.os.name == "linux" && c.cell.cores == 1 && c.cell.backend == BackendKind::Locked
+    });
+    let win_single_locked = x(&|c| {
+        c.cell.os.name == "windows" && c.cell.cores == 1 && c.cell.backend == BackendKind::Locked
+    });
+    assert!(
+        linux_single_locked.iter().sum::<f64>() > win_single_locked.iter().sum::<f64>(),
+        "Linux rt single-core locked must be faster than Windows"
+    );
+    println!("harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate **Figure 8** — lock-free latency speedup bubbles
+//! (eq. 6-2: original latency / test latency), bubble position = the
+//! lock-free throughput. Paper: smallest bubble ~2x (single core),
+//! largest ~25x (multicore).
+//!
+//! Run with: `cargo bench --bench fig8_latency_speedup`
+
+use mcapi::coordinator::experiment::{print_fig8, Matrix};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let matrix = Matrix::new(600);
+    let rows = matrix.fig8();
+    println!("Figure 8 — lock-free MCAPI speedup\n");
+    println!("{}", print_fig8(&rows));
+
+    let single: Vec<f64> = rows.iter().filter(|r| r.0.contains("/1c/")).map(|r| r.2).collect();
+    let multi: Vec<f64> = rows.iter().filter(|r| !r.0.contains("/1c/")).map(|r| r.2).collect();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = multi.iter().fold(0.0f64, |a, &b| a.max(b));
+    println!(
+        "single-core mean {:.1}x | multicore mean {:.1}x | max {:.1}x (paper: ~2x .. 25x)",
+        mean(&single),
+        mean(&multi),
+        max
+    );
+    assert!(mean(&single) < mean(&multi), "multicore payoff must dominate");
+    assert!(max > 10.0, "double-digit max speedup expected");
+    assert!(rows.iter().all(|r| r.2 > 0.9), "lock-free never loses");
+    println!("harness wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

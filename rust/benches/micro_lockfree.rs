@@ -1,0 +1,148 @@
+//! Micro-benchmarks + ablations of the lock-free structures on the real
+//! host (wall-clock), plus the DESIGN.md §6 design-choice ablations on
+//! the simulator (virtual time):
+//!
+//! * NBB insert+read round-trip vs. a Mutex<VecDeque> baseline,
+//! * NBW write / read vs. a Mutex<T> state cell,
+//! * bit-set alloc/free vs. Mutex<Vec> free list (why the paper switched
+//!   from the lock-free list design),
+//! * ablation: NBB ring capacity (burst absorption),
+//! * ablation: Table 1 immediate-retry budget,
+//! * ablation: NBW buffer depth vs. reader collision rate.
+//!
+//! Run with: `cargo bench --bench micro_lockfree`
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use mcapi::harness::{header, time_batched};
+use mcapi::lockfree::{Backoff, BitSet, FreeList, Nbb, Nbw, ReadStatus, RealWorld};
+
+fn main() {
+    println!("{}", header());
+
+    // --- NBB vs mutex deque (uncontended round-trip) -----------------------
+    let nbb = Nbb::<u64, RealWorld>::new(64);
+    let s = time_batched("nbb insert+read", 2, 50, 10_000, |i| {
+        nbb.insert(i).map_err(|_| ()).unwrap();
+        matches!(nbb.read(), ReadStatus::Ok(_))
+    });
+    println!("{}", s.row());
+    let nbb_ns = s.mean_ns;
+
+    let deque = Mutex::new(VecDeque::<u64>::with_capacity(64));
+    let s = time_batched("mutex deque push+pop", 2, 50, 10_000, |i| {
+        deque.lock().unwrap().push_back(i);
+        deque.lock().unwrap().pop_front()
+    });
+    println!("{}", s.row());
+
+    // --- NBW vs mutex state cell -------------------------------------------
+    let nbw = Nbw::<[u64; 4], RealWorld>::new(4, [0; 4]);
+    let s = time_batched("nbw write", 2, 50, 10_000, |i| nbw.write([i, i, i, i]));
+    println!("{}", s.row());
+    let s = time_batched("nbw read", 2, 50, 10_000, |_| nbw.read().0);
+    println!("{}", s.row());
+    let cell = Mutex::new([0u64; 4]);
+    let s = time_batched("mutex state write", 2, 50, 10_000, |i| {
+        *cell.lock().unwrap() = [i, i, i, i];
+    });
+    println!("{}", s.row());
+
+    // --- bit set vs mutex free list ------------------------------------------
+    let bits = BitSet::<RealWorld>::new(256);
+    let s = time_batched("bitset alloc+free", 2, 50, 10_000, |_| {
+        let i = bits.alloc().unwrap();
+        bits.free(i)
+    });
+    println!("{}", s.row());
+    let flist = Mutex::new((0..256usize).collect::<Vec<_>>());
+    let s = time_batched("mutex freelist pop+push", 2, 50, 10_000, |_| {
+        let i = flist.lock().unwrap().pop().unwrap();
+        flist.lock().unwrap().push(i);
+    });
+    println!("{}", s.row());
+    let tre = FreeList::<RealWorld>::new_full(256);
+    let s = time_batched("treiber pop+push", 2, 50, 10_000, |_| {
+        let i = tre.pop().unwrap();
+        tre.push(i);
+    });
+    println!("{}", s.row());
+
+    // --- ablation: NBB capacity (burst absorption, sim virtual time) --------
+    println!("\nablation: NBB ring capacity (sim, linux 4c, 400 tx message stress)");
+    println!("| capacity | throughput (kmsg/s) | sender yields |");
+    println!("|---|---|---|");
+    for cap in [1usize, 4, 16, 64] {
+        let machine = mcapi::sim::Machine::new(mcapi::sim::MachineCfg::new(
+            4,
+            mcapi::os::OsProfile::linux_rt(),
+            mcapi::os::AffinityMode::PinnedSpread,
+        ));
+        let cfg = mcapi::mcapi::types::RuntimeCfg {
+            nbb_capacity: cap,
+            ..mcapi::mcapi::types::RuntimeCfg::default()
+        };
+        let topo = mcapi::coordinator::Topology::one_way(
+            mcapi::coordinator::MsgKind::Message,
+            400,
+        );
+        let r = mcapi::coordinator::run_stress_sim(
+            &machine,
+            cfg,
+            &topo,
+            mcapi::coordinator::StressOpts::default(),
+        );
+        println!("| {} | {:.1} | {} |", cap, r.kmsgs_per_s(), r.yields);
+    }
+
+    // --- ablation: immediate-retry budget (Table 1 semantics) ----------------
+    println!("\nablation: Table 1 immediate-retry budget (spin vs yield mix)");
+    println!("| budget | retries consumed before yield |");
+    println!("|---|---|");
+    for limit in [0u32, 2, 8, 32] {
+        let mut b = Backoff::<RealWorld>::with_limit(limit);
+        let mut spins = 0;
+        while b.immediate() {
+            spins += 1;
+        }
+        println!("| {limit} | {spins} |");
+        assert_eq!(spins, limit);
+    }
+
+    // --- ablation: NBW depth vs reader retries under a fast writer -----------
+    println!("\nablation: NBW buffer depth vs reader collision rate (2 threads, host)");
+    println!("| depth | reads | collisions | collision rate |");
+    println!("|---|---|---|---|");
+    for depth in [1usize, 2, 4, 8] {
+        let nbw = std::sync::Arc::new(Nbw::<[u64; 4], RealWorld>::new(depth, [0; 4]));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let w = {
+            let nbw = nbw.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    i += 1;
+                    nbw.write([i, i, i, i]);
+                }
+            })
+        };
+        let mut collisions = 0u64;
+        const READS: u64 = 200_000;
+        for _ in 0..READS {
+            let (_, retries) = nbw.read();
+            collisions += retries as u64;
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        w.join().unwrap();
+        println!(
+            "| {depth} | {READS} | {collisions} | {:.4}% |",
+            collisions as f64 / READS as f64 * 100.0
+        );
+    }
+
+    // NBB round-trip must stay fast (perf gate, see EXPERIMENTS.md §Perf).
+    assert!(nbb_ns < 250.0, "NBB round-trip regressed: {nbb_ns:.0} ns");
+    println!("\nmicro_lockfree OK");
+}

@@ -1,0 +1,313 @@
+//! The Section 6 test matrix and the Table 2 / Figure 7 / Figure 8
+//! report generators.
+//!
+//! Dimensions (paper, Section 6): Windows vs. Linux (OS cost profile),
+//! single core vs. multicore, message type, lock-based vs. lock-free
+//! FIFO, and CPU affinity (pinned vs. free). Each cell runs the Section 4
+//! stress topology — a single one-way channel, 1000 transactions — on the
+//! deterministic SMP simulator.
+
+use crate::mcapi::types::{BackendKind, RuntimeCfg};
+use crate::os::{AffinityMode, OsProfile};
+use crate::sim::{Machine, MachineCfg};
+
+use super::metrics::StressReport;
+use super::runner::{run_pingpong_sim, run_stress_sim, StressOpts};
+use super::topology::{MsgKind, Topology};
+use crate::util::histogram::Histogram;
+
+/// Cores used for the "multicore" configurations (the paper's KVM guests
+/// had four).
+pub const MULTI_CORES: usize = 4;
+
+/// One cell of the test matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct Cell {
+    /// OS cost profile.
+    pub os: OsProfile,
+    /// Virtual core count (1 = the "single core" column).
+    pub cores: usize,
+    /// Payload type.
+    pub kind: MsgKind,
+    /// Data-path backend.
+    pub backend: BackendKind,
+    /// Placement: pinned-spread ("Affinity Task") or free ("Task").
+    pub affinity: AffinityMode,
+}
+
+impl Cell {
+    /// Human-readable cell id, e.g. `linux/4c/message/lockfree/task`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}c/{}/{}/{}",
+            self.os.name,
+            self.cores,
+            self.kind.label(),
+            self.backend.label(),
+            self.affinity.label()
+        )
+    }
+}
+
+/// Measured outcome of one cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// The cell.
+    pub cell: Cell,
+    /// Stress report.
+    pub report: StressReport,
+}
+
+impl CellResult {
+    /// Figure 7 unit.
+    pub fn kmsgs_per_s(&self) -> f64 {
+        self.report.kmsgs_per_s()
+    }
+}
+
+/// Run one matrix cell on the simulator (streaming throughput).
+pub fn run_cell(cell: Cell, transactions: u64) -> CellResult {
+    let affinity = if cell.cores == 1 { AffinityMode::SingleCore } else { cell.affinity };
+    let machine = Machine::new(MachineCfg::new(cell.cores, cell.os, affinity));
+    let topo = Topology::one_way(cell.kind, transactions);
+    let cfg = RuntimeCfg::with_backend(cell.backend);
+    let report = run_stress_sim(&machine, cfg, &topo, StressOpts::default());
+    CellResult { cell, report }
+}
+
+/// Run one matrix cell's ping-pong latency (one outstanding transaction);
+/// returns the one-way latency histogram. This is the Figure 8 latency
+/// measurement — isolated from queueing effects.
+pub fn run_cell_latency(cell: Cell, transactions: u64) -> Histogram {
+    let affinity = if cell.cores == 1 { AffinityMode::SingleCore } else { cell.affinity };
+    let machine = Machine::new(MachineCfg::new(cell.cores, cell.os, affinity));
+    let cfg = RuntimeCfg::with_backend(cell.backend);
+    let (hist, _stats) = run_pingpong_sim(&machine, cfg, cell.kind, transactions);
+    hist
+}
+
+/// The full Section 6 matrix runner with report generators.
+pub struct Matrix {
+    /// Transactions per channel (paper: 1000).
+    pub transactions: u64,
+}
+
+impl Default for Matrix {
+    fn default() -> Self {
+        Matrix { transactions: 1000 }
+    }
+}
+
+impl Matrix {
+    /// Construct with a transaction budget (tests use smaller counts).
+    pub fn new(transactions: u64) -> Self {
+        Matrix { transactions }
+    }
+
+    fn oses() -> [OsProfile; 2] {
+        [OsProfile::windows(), OsProfile::linux_rt()]
+    }
+
+    fn affinities() -> [AffinityMode; 2] {
+        [AffinityMode::Free, AffinityMode::PinnedSpread]
+    }
+
+    /// **Table 2** — lock-based multicore throughput speedup relative to
+    /// single core (values < 1 are the migration penalty). Returns rows
+    /// `(os, kind, speedup_task, speedup_affinity)`.
+    pub fn table2(&self) -> Vec<(String, String, f64, f64)> {
+        let mut rows = Vec::new();
+        for os in Self::oses() {
+            for kind in MsgKind::all() {
+                let single = run_cell(
+                    Cell {
+                        os,
+                        cores: 1,
+                        kind,
+                        backend: BackendKind::Locked,
+                        affinity: AffinityMode::SingleCore,
+                    },
+                    self.transactions,
+                );
+                let mut speedups = [0.0f64; 2];
+                for (i, affinity) in Self::affinities().into_iter().enumerate() {
+                    let multi = run_cell(
+                        Cell {
+                            os,
+                            cores: MULTI_CORES,
+                            kind,
+                            backend: BackendKind::Locked,
+                            affinity,
+                        },
+                        self.transactions,
+                    );
+                    // Throughput speedup = test / original (eq. 6-1).
+                    speedups[i] = multi.report.throughput() / single.report.throughput();
+                }
+                rows.push((
+                    os.name.to_string(),
+                    kind.label().to_string(),
+                    speedups[0],
+                    speedups[1],
+                ));
+            }
+        }
+        rows
+    }
+
+    /// **Figure 7** — absolute throughput (kmsg/s) for the full matrix.
+    pub fn fig7(&self) -> Vec<CellResult> {
+        let mut out = Vec::new();
+        for os in Self::oses() {
+            for kind in MsgKind::all() {
+                for backend in [BackendKind::Locked, BackendKind::LockFree] {
+                    out.push(run_cell(
+                        Cell { os, cores: 1, kind, backend, affinity: AffinityMode::SingleCore },
+                        self.transactions,
+                    ));
+                    for affinity in Self::affinities() {
+                        out.push(run_cell(
+                            Cell { os, cores: MULTI_CORES, kind, backend, affinity },
+                            self.transactions,
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// **Figure 8** — lock-free latency speedup (eq. 6-2:
+    /// `original latency / test latency`) per configuration, positioned at
+    /// the lock-free throughput. Returns
+    /// `(config label, lockfree kmsg/s, latency speedup)`.
+    pub fn fig8(&self) -> Vec<(String, f64, f64)> {
+        let mut out = Vec::new();
+        for os in Self::oses() {
+            for kind in MsgKind::all() {
+                let mut configs: Vec<(String, usize, AffinityMode)> = vec![(
+                    format!("{}/1c/{}", os.name, kind.label()),
+                    1,
+                    AffinityMode::SingleCore,
+                )];
+                for affinity in Self::affinities() {
+                    configs.push((
+                        format!("{}/{}c/{}/{}", os.name, MULTI_CORES, kind.label(), affinity.label()),
+                        MULTI_CORES,
+                        affinity,
+                    ));
+                }
+                for (label, cores, affinity) in configs {
+                    // Bubble position: lock-free *streaming* throughput.
+                    let lockfree_x = run_cell(
+                        Cell { os, cores, kind, backend: BackendKind::LockFree, affinity },
+                        self.transactions,
+                    );
+                    // Bubble size: ping-pong latency speedup (eq. 6-2).
+                    let locked_lat = run_cell_latency(
+                        Cell { os, cores, kind, backend: BackendKind::Locked, affinity },
+                        self.transactions,
+                    );
+                    let lockfree_lat = run_cell_latency(
+                        Cell { os, cores, kind, backend: BackendKind::LockFree, affinity },
+                        self.transactions,
+                    );
+                    let speedup = locked_lat.mean() / lockfree_lat.mean();
+                    out.push((label, lockfree_x.kmsgs_per_s(), speedup));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Markdown printer for Table 2.
+pub fn print_table2(rows: &[(String, String, f64, f64)]) -> String {
+    let mut s = String::from(
+        "| OS | Message type | Task (free) | Affinity Task |\n|---|---|---|---|\n",
+    );
+    for (os, kind, task, aff) in rows {
+        s.push_str(&format!("| {os} | {kind} | {task:.2}x | {aff:.2}x |\n"));
+    }
+    s
+}
+
+/// Markdown printer for Figure 7.
+pub fn print_fig7(cells: &[CellResult]) -> String {
+    let mut s = String::from("| Configuration | Throughput (kmsg/s) | Mean latency (ns) |\n|---|---|---|\n");
+    for c in cells {
+        s.push_str(&format!(
+            "| {} | {:.1} | {:.0} |\n",
+            c.cell.id(),
+            c.kmsgs_per_s(),
+            c.report.latency_mean_ns()
+        ));
+    }
+    s
+}
+
+/// Markdown printer for Figure 8.
+pub fn print_fig8(rows: &[(String, f64, f64)]) -> String {
+    let mut s = String::from(
+        "| Configuration | Lock-free throughput (kmsg/s) | Latency speedup |\n|---|---|---|\n",
+    );
+    for (label, x, sp) in rows {
+        s.push_str(&format!("| {label} | {x:.1} | {sp:.1}x |\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full-matrix shape assertions live in rust/tests/ (integration);
+    // these unit tests cover single cells to stay fast.
+
+    #[test]
+    fn cell_ids_are_unique_in_fig7_order() {
+        // Construct the id set without running anything.
+        let mut ids = std::collections::HashSet::new();
+        for os in Matrix::oses() {
+            for kind in MsgKind::all() {
+                for backend in [BackendKind::Locked, BackendKind::LockFree] {
+                    ids.insert(
+                        Cell { os, cores: 1, kind, backend, affinity: AffinityMode::SingleCore }
+                            .id(),
+                    );
+                    for affinity in Matrix::affinities() {
+                        ids.insert(
+                            Cell { os, cores: MULTI_CORES, kind, backend, affinity }.id(),
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(ids.len(), 2 * 3 * 2 * 3);
+    }
+
+    #[test]
+    fn single_cell_runs_and_reports() {
+        let r = run_cell(
+            Cell {
+                os: OsProfile::linux_rt(),
+                cores: 2,
+                kind: MsgKind::Message,
+                backend: BackendKind::LockFree,
+                affinity: AffinityMode::PinnedSpread,
+            },
+            50,
+        );
+        assert_eq!(r.report.delivered, 50);
+        assert!(r.kmsgs_per_s() > 0.0);
+        assert_eq!(r.report.order_violations, 0);
+    }
+
+    #[test]
+    fn printers_emit_markdown_tables() {
+        let t2 = print_table2(&[("linux".into(), "message".into(), 0.23, 0.22)]);
+        assert!(t2.contains("| linux | message | 0.23x | 0.22x |"));
+        let f8 = print_fig8(&[("x".into(), 100.0, 25.0)]);
+        assert!(f8.contains("25.0x"));
+    }
+}

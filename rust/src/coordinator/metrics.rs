@@ -1,0 +1,101 @@
+//! Stress-run metrics: throughput, one-way latency, retry behaviour.
+
+use crate::util::histogram::Histogram;
+
+/// Per-channel receive-side metrics.
+#[derive(Clone, Default)]
+pub struct ChannelMetrics {
+    /// Messages delivered.
+    pub delivered: u64,
+    /// One-way latency samples (ns; virtual ns on the simulator).
+    pub latency: Histogram,
+    /// Sequence violations observed (must stay 0).
+    pub order_violations: u64,
+}
+
+/// Aggregated result of one stress run.
+#[derive(Clone)]
+pub struct StressReport {
+    /// Total messages delivered across channels.
+    pub delivered: u64,
+    /// Wall/virtual time of the whole run (ns).
+    pub elapsed_ns: u64,
+    /// Merged one-way latency histogram.
+    pub latency: Histogram,
+    /// Total sender+receiver yields (convoy indicator).
+    pub yields: u64,
+    /// Sequence violations (must be 0 — checked by tests).
+    pub order_violations: u64,
+    /// Simulator statistics when run on the sim plane.
+    pub sim: Option<crate::sim::MachineStats>,
+}
+
+impl StressReport {
+    /// Throughput in messages per second.
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            0.0
+        } else {
+            self.delivered as f64 * 1e9 / self.elapsed_ns as f64
+        }
+    }
+
+    /// Throughput in thousands of messages per second (Figure 7's unit).
+    pub fn kmsgs_per_s(&self) -> f64 {
+        self.throughput() / 1e3
+    }
+
+    /// Mean one-way latency (ns).
+    pub fn latency_mean_ns(&self) -> f64 {
+        self.latency.mean()
+    }
+}
+
+impl std::fmt::Debug for StressReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "StressReport {{ delivered: {}, elapsed: {} ns, X: {:.1} kmsg/s, lat mean: {:.0} ns, p99: {} ns, yields: {} }}",
+            self.delivered,
+            self.elapsed_ns,
+            self.kmsgs_per_s(),
+            self.latency_mean_ns(),
+            self.latency.p99(),
+            self.yields
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut latency = Histogram::new();
+        latency.record(1_000);
+        let r = StressReport {
+            delivered: 1_000,
+            elapsed_ns: 1_000_000_000,
+            latency,
+            yields: 3,
+            order_violations: 0,
+            sim: None,
+        };
+        assert!((r.throughput() - 1_000.0).abs() < 1e-9);
+        assert!((r.kmsgs_per_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_elapsed_is_zero_throughput() {
+        let r = StressReport {
+            delivered: 10,
+            elapsed_ns: 0,
+            latency: Histogram::new(),
+            yields: 0,
+            order_violations: 0,
+            sim: None,
+        };
+        assert_eq!(r.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The stress-test coordinator (Section 4) and experiment matrix
+//! (Section 6).
+//!
+//! * [`topology`] — declarative message topologies: channels between
+//!   nodes with a type (message/packet/scalar) and a transaction count,
+//!   parseable from the TOML-subset config format.
+//! * [`metrics`] — throughput/latency/yield accounting per channel and
+//!   aggregated per run.
+//! * [`runner`] — the paper's processing routine: one task per node,
+//!   nested dispatch over configured channels, transaction IDs tracked to
+//!   completion, yield on `WouldBlock`; drivers for both the real host
+//!   and the deterministic SMP simulator.
+//! * [`experiment`] — the Section 6 test matrix (OS profile × cores ×
+//!   message type × backend × affinity) and the Table 2 / Figure 7 /
+//!   Figure 8 report generators.
+
+pub mod experiment;
+pub mod metrics;
+pub mod runner;
+pub mod topology;
+
+pub use experiment::{Cell, CellResult, Matrix};
+pub use metrics::StressReport;
+pub use runner::{run_pingpong_real, run_pingpong_sim, run_stress_real, run_stress_sim, StressOpts};
+pub use topology::{ChannelSpec, MsgKind, Topology};

@@ -1,0 +1,659 @@
+//! The stress-test node routine and its two drivers (real host / SMP sim).
+//!
+//! One task per node, the Section 4 processing loop: set up all channels,
+//! then iterate round-robin — senders transmit transaction IDs 1..=count,
+//! receivers track them to completion, everybody yields on `WouldBlock`.
+//! The loop exits when every send channel has transmitted its last ID and
+//! every receive channel has accepted it.
+
+use std::sync::{Arc, Mutex};
+
+use crate::lockfree::mem::{Atom32, RealWorld, World};
+use crate::mcapi::types::{RuntimeCfg, Status};
+use crate::mcapi::McapiRuntime;
+use crate::sim::{Machine, SimWorld};
+use crate::util::histogram::Histogram;
+
+use super::metrics::StressReport;
+use super::topology::{ChannelSpec, MsgKind, Topology};
+
+/// Stress options.
+#[derive(Debug, Clone, Copy)]
+pub struct StressOpts {
+    /// Payload bytes for messages/packets (paper: "typical message and
+    /// packet sizes are around twenty four bytes").
+    pub payload_len: usize,
+}
+
+impl Default for StressOpts {
+    fn default() -> Self {
+        StressOpts { payload_len: 24 }
+    }
+}
+
+const MAGIC: u64 = 0x4D43_4150_4921_2014; // "MCAPI!" 2014
+
+fn encode(tx: u64, stamp: u64, buf: &mut [u8]) {
+    buf[0..8].copy_from_slice(&tx.to_le_bytes());
+    buf[8..16].copy_from_slice(&stamp.to_le_bytes());
+    let sum = tx ^ stamp ^ MAGIC;
+    buf[16..24].copy_from_slice(&sum.to_le_bytes());
+}
+
+fn decode(buf: &[u8]) -> Option<(u64, u64)> {
+    let tx = u64::from_le_bytes(buf[0..8].try_into().ok()?);
+    let stamp = u64::from_le_bytes(buf[8..16].try_into().ok()?);
+    let sum = u64::from_le_bytes(buf[16..24].try_into().ok()?);
+    (tx ^ stamp ^ MAGIC == sum).then_some((tx, stamp))
+}
+
+/// Cross-task rendezvous board: per-channel readiness flags and the
+/// channel-table index chosen by the connecting sender. Built on world
+/// atoms so waiting charges simulated time correctly.
+struct Board<W: World> {
+    rx_ready: Vec<W::U32>,
+    rx_open: Vec<W::U32>,
+    ch_index: Vec<W::U32>,
+}
+
+impl<W: World> Board<W> {
+    fn new(channels: usize) -> Self {
+        Board {
+            rx_ready: (0..channels).map(|_| W::U32::new(0)).collect(),
+            rx_open: (0..channels).map(|_| W::U32::new(0)).collect(),
+            ch_index: (0..channels).map(|_| W::U32::new(0)).collect(),
+        }
+    }
+}
+
+struct Plan {
+    /// Topology node id (kept for diagnostics).
+    #[allow(dead_code)]
+    node: u16,
+    dense: usize,
+    sends: Vec<(usize, ChannelSpec)>,
+    recvs: Vec<(usize, ChannelSpec)>,
+}
+
+fn make_plans(topo: &Topology) -> Vec<Plan> {
+    let nodes = topo.nodes();
+    nodes
+        .iter()
+        .enumerate()
+        .map(|(dense, &node)| Plan {
+            node,
+            dense,
+            sends: topo
+                .channels
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.from.0 == node)
+                .map(|(i, c)| (i, *c))
+                .collect(),
+            recvs: topo
+                .channels
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.to.0 == node)
+                .map(|(i, c)| (i, *c))
+                .collect(),
+        })
+        .collect()
+}
+
+struct ChannelOutcome {
+    delivered: u64,
+    latency: Histogram,
+    order_violations: u64,
+}
+
+/// Per-node results accumulated by the driver.
+#[derive(Default)]
+struct NodeOutcome {
+    yields: u64,
+    recv: Vec<ChannelOutcome>,
+}
+
+/// The Section 4 processing routine for one node.
+fn node_task<W: World>(
+    rt: &McapiRuntime<W>,
+    board: &Board<W>,
+    plan: &Plan,
+    opts: StressOpts,
+) -> NodeOutcome {
+    use crate::mcapi::types::ChannelKind;
+
+    // --- setup: create my endpoints; receivers announce, senders connect.
+    let mut recv_eps = Vec::new(); // (ci, spec, ep index)
+    for (ci, spec) in &plan.recvs {
+        let ep = rt
+            .create_endpoint(spec.rx_endpoint(), plan.dense)
+            .expect("create rx endpoint");
+        recv_eps.push((*ci, *spec, ep));
+        board.rx_ready[*ci].store(1);
+    }
+    let mut send_chs = Vec::new(); // (ci, spec, Option<channel index>)
+    for (ci, spec) in &plan.sends {
+        match spec.kind {
+            MsgKind::Message => {
+                // Connectionless: wait for the receive endpoint to appear.
+                while board.rx_ready[*ci].load() == 0 {
+                    W::yield_now();
+                }
+                send_chs.push((*ci, *spec, None));
+            }
+            MsgKind::Packet | MsgKind::Scalar | MsgKind::State => {
+                let kind = match spec.kind {
+                    MsgKind::Packet => ChannelKind::Packet,
+                    MsgKind::Scalar => ChannelKind::Scalar,
+                    _ => ChannelKind::State,
+                };
+                rt.create_endpoint(spec.tx_endpoint(), plan.dense)
+                    .expect("create tx endpoint");
+                while board.rx_ready[*ci].load() == 0 {
+                    W::yield_now();
+                }
+                let ch = rt
+                    .connect(spec.tx_endpoint(), spec.rx_endpoint(), kind)
+                    .expect("connect channel");
+                rt.open_send(ch).expect("open send side");
+                board.ch_index[*ci].store(ch as u32 + 1);
+                send_chs.push((*ci, *spec, Some(ch)));
+            }
+        }
+    }
+    // Receivers of connected channels: learn the index, open, announce.
+    let mut recv_chs = Vec::new(); // (spec, ep, Option<ch>)
+    for (ci, spec, ep) in &recv_eps {
+        if spec.kind == MsgKind::Message {
+            board.rx_open[*ci].store(1);
+            recv_chs.push((*spec, *ep, None));
+        } else {
+            while board.ch_index[*ci].load() == 0 {
+                W::yield_now();
+            }
+            let ch = board.ch_index[*ci].load() as usize - 1;
+            rt.open_recv(ch).expect("open recv side");
+            board.rx_open[*ci].store(1);
+            recv_chs.push((*spec, *ep, Some(ch)));
+        }
+    }
+    // Senders wait until the receive side is open (connected kinds).
+    for (ci, spec, _) in &send_chs {
+        if *spec != plan.sends.iter().find(|(i, _)| i == ci).unwrap().1 {
+            unreachable!();
+        }
+        while board.rx_open[*ci].load() == 0 {
+            W::yield_now();
+        }
+    }
+
+    // --- measurement loop.
+    let mut yields = 0u64;
+    let mut next_tx: Vec<u64> = send_chs.iter().map(|_| 1).collect();
+    let mut recv_state: Vec<(u64, ChannelOutcome)> = recv_chs
+        .iter()
+        .map(|_| {
+            (1u64, ChannelOutcome { delivered: 0, latency: Histogram::new(), order_violations: 0 })
+        })
+        .collect();
+    let mut buf = vec![0u8; opts.payload_len.max(24)];
+
+    loop {
+        let mut all_done = true;
+        // Send dispatch.
+        for (si, (_ci, spec, ch)) in send_chs.iter().enumerate() {
+            if next_tx[si] > spec.count {
+                continue;
+            }
+            all_done = false;
+            let now = W::now_ns();
+            let result = match spec.kind {
+                MsgKind::Message => {
+                    encode(next_tx[si], now, &mut buf);
+                    rt.msg_send(plan.dense, spec.rx_endpoint(), &buf[..opts.payload_len.max(24)], 0)
+                }
+                MsgKind::Packet => {
+                    encode(next_tx[si], now, &mut buf);
+                    rt.pkt_send(ch.unwrap(), &buf[..opts.payload_len.max(24)])
+                }
+                MsgKind::Scalar => rt.sclr_send(ch.unwrap(), now),
+                // State: newest-wins publication; never blocks. Pack the
+                // transaction id into the low 20 bits of the stamp.
+                MsgKind::State => {
+                    rt.state_send(ch.unwrap(), (now << 20) | (next_tx[si] & 0xF_FFFF))
+                }
+            };
+            match result {
+                Ok(()) => next_tx[si] += 1,
+                Err(Status::WouldBlock)
+                | Err(Status::WouldBlockPeerActive)
+                | Err(Status::MemLimit) => {
+                    yields += 1;
+                    W::yield_now();
+                }
+                Err(e) => panic!("send failed on channel {spec:?}: {e:?}"),
+            }
+        }
+        // Receive dispatch.
+        for (ri, (spec, ep, ch)) in recv_chs.iter().enumerate() {
+            let (expect, outcome) = &mut recv_state[ri];
+            if *expect > spec.count {
+                continue;
+            }
+            all_done = false;
+            let result: Result<(u64, u64), Status> = match spec.kind {
+                MsgKind::Message => rt.msg_recv(*ep, &mut buf).map(|n| {
+                    decode(&buf[..n.max(24)]).expect("corrupted message payload")
+                }),
+                MsgKind::Packet => rt.pkt_recv(ch.unwrap(), &mut buf).map(|n| {
+                    decode(&buf[..n.max(24)]).expect("corrupted packet payload")
+                }),
+                MsgKind::Scalar => rt.sclr_recv(ch.unwrap()).map(|stamp| (*expect, stamp)),
+                MsgKind::State => rt
+                    .state_recv(ch.unwrap())
+                    .map(|packed| (packed & 0xF_FFFF, packed >> 20)),
+            };
+            match result {
+                Ok((tx, stamp)) if spec.kind == MsgKind::State => {
+                    // State semantics: values may be skipped (newest wins);
+                    // completion = observing the final transaction. Only
+                    // *fresh* observations count as deliveries.
+                    if tx >= *expect {
+                        let now = W::now_ns();
+                        outcome.latency.record(now.saturating_sub(stamp));
+                        outcome.delivered += 1;
+                        *expect = tx + 1; // next fresh value
+                    } else {
+                        yields += 1;
+                        W::yield_now();
+                    }
+                }
+                Ok((tx, stamp)) => {
+                    let now = W::now_ns();
+                    if tx != *expect {
+                        outcome.order_violations += 1;
+                    }
+                    outcome.latency.record(now.saturating_sub(stamp));
+                    outcome.delivered += 1;
+                    *expect += 1;
+                }
+                Err(Status::WouldBlock) | Err(Status::WouldBlockPeerActive) => {
+                    yields += 1;
+                    W::yield_now();
+                }
+                Err(e) => panic!("recv failed on channel {spec:?}: {e:?}"),
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+
+    NodeOutcome { yields, recv: recv_state.into_iter().map(|(_, o)| o).collect() }
+}
+
+fn aggregate(outcomes: Vec<NodeOutcome>, elapsed_ns: u64, sim: Option<crate::sim::MachineStats>) -> StressReport {
+    let mut latency = Histogram::new();
+    let mut delivered = 0;
+    let mut yields = 0;
+    let mut order_violations = 0;
+    for o in outcomes {
+        yields += o.yields;
+        for c in o.recv {
+            delivered += c.delivered;
+            order_violations += c.order_violations;
+            latency.merge(&c.latency);
+        }
+    }
+    StressReport { delivered, elapsed_ns, latency, yields, order_violations, sim }
+}
+
+/// Run a topology on the real host with OS threads.
+pub fn run_stress_real(cfg: RuntimeCfg, topo: &Topology, opts: StressOpts) -> StressReport {
+    let rt = McapiRuntime::<RealWorld>::new(cfg);
+    let board = Arc::new(Board::<RealWorld>::new(topo.channels.len()));
+    let plans = make_plans(topo);
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let start = std::time::Instant::now();
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let rt = rt.clone();
+            let board = board.clone();
+            let results = results.clone();
+            std::thread::spawn(move || {
+                let out = node_task(&rt, &board, &plan, opts);
+                results.lock().unwrap().push(out);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress node panicked");
+    }
+    let elapsed_ns = start.elapsed().as_nanos() as u64;
+    let outcomes = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    aggregate(outcomes, elapsed_ns, None)
+}
+
+/// Run a topology on the deterministic SMP simulator.
+pub fn run_stress_sim(machine: &Machine, cfg: RuntimeCfg, topo: &Topology, opts: StressOpts) -> StressReport {
+    let rt = McapiRuntime::<SimWorld>::new(cfg);
+    let board = Arc::new(Board::<SimWorld>::new(topo.channels.len()));
+    let plans = make_plans(topo);
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let rt = rt.clone();
+            let board = board.clone();
+            let results = results.clone();
+            machine.spawn(move || {
+                let out = node_task(&rt, &board, &plan, opts);
+                results.lock().unwrap().push(out);
+            })
+        })
+        .collect();
+    let stats = machine.run(handles);
+    let outcomes = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    aggregate(outcomes, stats.virtual_ns, Some(stats))
+}
+
+// ---------------------------------------------------------------------------
+// Ping-pong latency (one outstanding message) — the Figure 8 measurement.
+// ---------------------------------------------------------------------------
+
+/// One-way latency via request/response with a single outstanding
+/// transaction: node 0 stamps and sends on the forward channel, node 1
+/// echoes the stamp back, node 0 records RTT/2. This isolates the
+/// *per-exchange* cost from queueing (Little's law) effects — with the
+/// streaming stress, saturated queues make latency track 1/throughput and
+/// the paper's 25x lock-removal speedup would be invisible.
+fn pingpong_task<W: World>(
+    rt: &McapiRuntime<W>,
+    board: &Board<W>,
+    plan: &Plan,
+    kind: MsgKind,
+    count: u64,
+) -> Histogram {
+    use crate::mcapi::types::ChannelKind;
+    let fwd = plan.sends.first().copied();
+    let back = plan.recvs.first().copied();
+    let mut latency = Histogram::new();
+    // Reuse the regular setup machinery by running a tiny custom loop: the
+    // plans here always have exactly one send + one recv channel per node.
+    let (sci, sspec) = fwd.expect("pingpong plan has a send channel");
+    let (rci, rspec) = back.expect("pingpong plan has a recv channel");
+
+    // Setup (same rendezvous protocol as node_task).
+    let rx_ep = rt.create_endpoint(rspec.rx_endpoint(), plan.dense).expect("rx ep");
+    board.rx_ready[rci].store(1);
+    let mut send_ch = None;
+    if kind != MsgKind::Message {
+        let ck = if kind == MsgKind::Packet { ChannelKind::Packet } else { ChannelKind::Scalar };
+        rt.create_endpoint(sspec.tx_endpoint(), plan.dense).expect("tx ep");
+        while board.rx_ready[sci].load() == 0 {
+            W::yield_now();
+        }
+        let ch = rt.connect(sspec.tx_endpoint(), sspec.rx_endpoint(), ck).expect("connect");
+        rt.open_send(ch).expect("open send");
+        board.ch_index[sci].store(ch as u32 + 1);
+        send_ch = Some(ch);
+    } else {
+        while board.rx_ready[sci].load() == 0 {
+            W::yield_now();
+        }
+    }
+    let mut recv_ch = None;
+    if kind != MsgKind::Message {
+        while board.ch_index[rci].load() == 0 {
+            W::yield_now();
+        }
+        let ch = board.ch_index[rci].load() as usize - 1;
+        rt.open_recv(ch).expect("open recv");
+        board.rx_open[rci].store(1);
+        recv_ch = Some(ch);
+    } else {
+        board.rx_open[rci].store(1);
+    }
+    while board.rx_open[sci].load() == 0 {
+        W::yield_now();
+    }
+
+    let mut buf = [0u8; 24];
+    let send = |stamp: u64, tx: u64, buf: &mut [u8; 24]| -> Result<(), Status> {
+        match kind {
+            MsgKind::Message => {
+                encode(tx, stamp, buf);
+                rt.msg_send(plan.dense, sspec.rx_endpoint(), buf, 0)
+            }
+            MsgKind::Packet => {
+                encode(tx, stamp, buf);
+                rt.pkt_send(send_ch.unwrap(), buf)
+            }
+            MsgKind::Scalar => rt.sclr_send(send_ch.unwrap(), stamp),
+            MsgKind::State => unimplemented!("ping-pong needs FIFO semantics; state channels deliver newest-wins"),
+        }
+    };
+    let recv = |buf: &mut [u8; 24]| -> Result<(u64, u64), Status> {
+        match kind {
+            MsgKind::Message => {
+                rt.msg_recv(rx_ep, buf).map(|n| decode(&buf[..n.max(24)]).expect("payload"))
+            }
+            MsgKind::Packet => rt
+                .pkt_recv(recv_ch.unwrap(), buf)
+                .map(|n| decode(&buf[..n.max(24)]).expect("payload")),
+            MsgKind::Scalar => rt.sclr_recv(recv_ch.unwrap()).map(|stamp| (0, stamp)),
+            MsgKind::State => unimplemented!("ping-pong needs FIFO semantics; state channels deliver newest-wins"),
+        }
+    };
+
+    if plan.dense == 0 {
+        // Initiator: stamped ping, await echo, record RTT/2.
+        for tx in 1..=count {
+            let t0 = W::now_ns();
+            let mut v = send(t0, tx, &mut buf);
+            while let Err(s) = v {
+                assert!(s.is_would_block() || s == Status::MemLimit, "{s:?}");
+                W::yield_now();
+                v = send(t0, tx, &mut buf);
+            }
+            loop {
+                match recv(&mut buf) {
+                    Ok((_, stamp)) => {
+                        let rtt = W::now_ns().saturating_sub(stamp);
+                        latency.record(rtt / 2);
+                        break;
+                    }
+                    Err(s) if s.is_would_block() => W::yield_now(),
+                    Err(s) => panic!("pingpong recv: {s:?}"),
+                }
+            }
+        }
+    } else {
+        // Echoer: forward every stamp straight back.
+        for tx in 1..=count {
+            let stamp;
+            loop {
+                match recv(&mut buf) {
+                    Ok((_, s)) => {
+                        stamp = s;
+                        break;
+                    }
+                    Err(s) if s.is_would_block() => W::yield_now(),
+                    Err(s) => panic!("pingpong recv: {s:?}"),
+                }
+            }
+            let mut v = send(stamp, tx, &mut buf);
+            while let Err(s) = v {
+                assert!(s.is_would_block() || s == Status::MemLimit, "{s:?}");
+                W::yield_now();
+                v = send(stamp, tx, &mut buf);
+            }
+        }
+    }
+    latency
+}
+
+/// Run the ping-pong latency measurement on the simulator; returns the
+/// one-way latency histogram (RTT/2 samples) plus machine stats.
+pub fn run_pingpong_sim(
+    machine: &Machine,
+    cfg: RuntimeCfg,
+    kind: MsgKind,
+    count: u64,
+) -> (Histogram, crate::sim::MachineStats) {
+    let topo = Topology::ping_pong(kind, count);
+    let rt = McapiRuntime::<SimWorld>::new(cfg);
+    let board = Arc::new(Board::<SimWorld>::new(topo.channels.len()));
+    let plans = make_plans(&topo);
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let rt = rt.clone();
+            let board = board.clone();
+            let results = results.clone();
+            machine.spawn(move || {
+                let hist = pingpong_task(&rt, &board, &plan, kind, count);
+                results.lock().unwrap().push(hist);
+            })
+        })
+        .collect();
+    let stats = machine.run(handles);
+    let mut merged = Histogram::new();
+    for h in results.lock().unwrap().iter() {
+        merged.merge(h);
+    }
+    (merged, stats)
+}
+
+/// Ping-pong latency on the real host.
+pub fn run_pingpong_real(cfg: RuntimeCfg, kind: MsgKind, count: u64) -> Histogram {
+    let topo = Topology::ping_pong(kind, count);
+    let rt = McapiRuntime::<RealWorld>::new(cfg);
+    let board = Arc::new(Board::<RealWorld>::new(topo.channels.len()));
+    let plans = make_plans(&topo);
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let rt = rt.clone();
+            let board = board.clone();
+            let results = results.clone();
+            std::thread::spawn(move || {
+                let hist = pingpong_task(&rt, &board, &plan, kind, count);
+                results.lock().unwrap().push(hist);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("pingpong node panicked");
+    }
+    let mut merged = Histogram::new();
+    for h in results.lock().unwrap().iter() {
+        merged.merge(h);
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcapi::types::BackendKind;
+    use crate::os::{AffinityMode, OsProfile};
+    use crate::sim::MachineCfg;
+
+    fn opts() -> StressOpts {
+        StressOpts::default()
+    }
+
+    #[test]
+    fn payload_codec_roundtrip() {
+        let mut buf = [0u8; 24];
+        encode(42, 12345, &mut buf);
+        assert_eq!(decode(&buf), Some((42, 12345)));
+        buf[3] ^= 0xFF;
+        assert_eq!(decode(&buf), None, "corruption must be detected");
+    }
+
+    #[test]
+    fn real_one_way_message_both_backends() {
+        for backend in [BackendKind::Locked, BackendKind::LockFree] {
+            let topo = Topology::one_way(MsgKind::Message, 300);
+            let r = run_stress_real(RuntimeCfg::with_backend(backend), &topo, opts());
+            assert_eq!(r.delivered, 300, "{backend:?}");
+            assert_eq!(r.order_violations, 0, "{backend:?}");
+            assert_eq!(r.latency.count(), 300);
+        }
+    }
+
+    #[test]
+    fn real_all_kinds_lockfree() {
+        for kind in MsgKind::all() {
+            let topo = Topology::one_way(kind, 200);
+            let r = run_stress_real(RuntimeCfg::default(), &topo, opts());
+            assert_eq!(r.delivered, 200, "{kind:?}");
+            assert_eq!(r.order_violations, 0);
+        }
+    }
+
+    #[test]
+    fn real_ping_pong_and_fan_in() {
+        let r = run_stress_real(
+            RuntimeCfg::default(),
+            &Topology::ping_pong(MsgKind::Message, 150),
+            opts(),
+        );
+        assert_eq!(r.delivered, 300);
+        let r = run_stress_real(
+            RuntimeCfg::default(),
+            &Topology::fan_in(3, MsgKind::Message, 100),
+            opts(),
+        );
+        assert_eq!(r.delivered, 300);
+        assert_eq!(r.order_violations, 0, "per-producer FIFO must hold under fan-in");
+    }
+
+    #[test]
+    fn sim_one_way_all_kinds_deterministic() {
+        for kind in MsgKind::all() {
+            let run = || {
+                let m = Machine::new(MachineCfg::new(
+                    2,
+                    OsProfile::linux_rt(),
+                    AffinityMode::PinnedSpread,
+                ));
+                let topo = Topology::one_way(kind, 100);
+                run_stress_sim(&m, RuntimeCfg::default(), &topo, opts())
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.delivered, 100, "{kind:?}");
+            assert_eq!(a.order_violations, 0);
+            assert_eq!(a.elapsed_ns, b.elapsed_ns, "sim must be deterministic ({kind:?})");
+            assert_eq!(a.sim.unwrap(), b.sim.unwrap());
+            assert!(a.latency_mean_ns() > 0.0);
+        }
+    }
+
+    #[test]
+    fn sim_lockfree_beats_locked_on_multicore() {
+        // The headline effect, in miniature.
+        let run = |backend| {
+            let m = Machine::new(MachineCfg::new(
+                4,
+                OsProfile::linux_rt(),
+                AffinityMode::PinnedSpread,
+            ));
+            let topo = Topology::one_way(MsgKind::Message, 200);
+            run_stress_sim(&m, RuntimeCfg::with_backend(backend), &topo, opts())
+        };
+        let locked = run(BackendKind::Locked);
+        let lockfree = run(BackendKind::LockFree);
+        assert!(
+            lockfree.elapsed_ns < locked.elapsed_ns,
+            "lock-free must win on multicore: {lockfree:?} vs {locked:?}"
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! Declarative message topologies.
+//!
+//! "The communication paths and directions are configured by a
+//! declarative message topology designed by the authors, and each
+//! operation is marked with a monotonically increasing transaction ID so
+//! it can be tracked to completion."
+
+use crate::mcapi::types::EndpointId;
+use crate::util::config::Document;
+use crate::{Error, Result};
+
+/// Channel payload type in a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MsgKind {
+    /// Connection-less message.
+    Message,
+    /// Connected packet channel.
+    Packet,
+    /// Connected scalar channel.
+    Scalar,
+    /// Connected state channel (NBW; order indeterminate, newest wins).
+    /// Extension of the paper's §7 future work.
+    State,
+}
+
+impl MsgKind {
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "message" | "msg" => Some(Self::Message),
+            "packet" | "pkt" => Some(Self::Packet),
+            "scalar" | "sclr" => Some(Self::Scalar),
+            "state" | "nbw" => Some(Self::State),
+            _ => None,
+        }
+    }
+
+    /// Stable report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Message => "message",
+            Self::Packet => "packet",
+            Self::Scalar => "scalar",
+            Self::State => "state",
+        }
+    }
+
+    /// The paper's three FIFO kinds (matrix iteration; `State` is the
+    /// §7 extension and is excluded from the paper's matrix).
+    pub fn all() -> [MsgKind; 3] {
+        [Self::Message, Self::Packet, Self::Scalar]
+    }
+}
+
+/// One directed channel in a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelSpec {
+    /// Sending node (dense id) and port.
+    pub from: (u16, u16),
+    /// Receiving node (dense id) and port.
+    pub to: (u16, u16),
+    /// Payload type.
+    pub kind: MsgKind,
+    /// Transactions to exchange (IDs 1..=count).
+    pub count: u64,
+}
+
+impl ChannelSpec {
+    /// Receive-side endpoint id (domain 0 convention).
+    pub fn rx_endpoint(&self) -> EndpointId {
+        EndpointId::new(0, self.to.0, self.to.1)
+    }
+
+    /// Send-side endpoint id.
+    pub fn tx_endpoint(&self) -> EndpointId {
+        EndpointId::new(0, self.from.0, self.from.1)
+    }
+}
+
+/// A full topology: the channel list plus the node set it implies.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    /// Directed channels.
+    pub channels: Vec<ChannelSpec>,
+}
+
+impl Topology {
+    /// The simple example from Section 4: one one-way channel between two
+    /// nodes, 1000 transactions.
+    pub fn one_way(kind: MsgKind, count: u64) -> Self {
+        Topology {
+            channels: vec![ChannelSpec { from: (0, 1), to: (1, 1), kind, count }],
+        }
+    }
+
+    /// A ping/pong pair of one-way channels (bidirectional stress).
+    pub fn ping_pong(kind: MsgKind, count: u64) -> Self {
+        Topology {
+            channels: vec![
+                ChannelSpec { from: (0, 1), to: (1, 1), kind, count },
+                ChannelSpec { from: (1, 2), to: (0, 2), kind, count },
+            ],
+        }
+    }
+
+    /// Fan-in: `n` producers to one consumer (tests MPSC composition).
+    pub fn fan_in(n: u16, kind: MsgKind, count: u64) -> Self {
+        Topology {
+            channels: (0..n)
+                .map(|i| ChannelSpec { from: (i + 1, 1), to: (0, 100 + i), kind, count })
+                .collect(),
+        }
+    }
+
+    /// Dense node ids participating (sorted, deduplicated).
+    pub fn nodes(&self) -> Vec<u16> {
+        let mut ids: Vec<u16> = self
+            .channels
+            .iter()
+            .flat_map(|c| [c.from.0, c.to.0])
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Total transactions across channels.
+    pub fn total_transactions(&self) -> u64 {
+        self.channels.iter().map(|c| c.count).sum()
+    }
+
+    /// Parse from the TOML-subset format:
+    ///
+    /// ```toml
+    /// [[channel]]
+    /// from = "0:1"      # node:port
+    /// to = "1:1"
+    /// kind = "message"  # message | packet | scalar
+    /// count = 1000
+    /// ```
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let specs = doc
+            .arrays
+            .get("channel")
+            .ok_or_else(|| Error::Config("topology needs at least one [[channel]]".into()))?;
+        let mut channels = Vec::new();
+        for (i, t) in specs.iter().enumerate() {
+            let ctx = |m: &str| Error::Config(format!("[[channel]] #{}: {}", i + 1, m));
+            let ep = |key: &str| -> Result<(u16, u16)> {
+                let s = t
+                    .get(key)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| ctx(&format!("missing `{key} = \"node:port\"`")))?;
+                let (n, p) = s
+                    .split_once(':')
+                    .ok_or_else(|| ctx(&format!("`{key}` must be \"node:port\", got `{s}`")))?;
+                Ok((
+                    n.parse().map_err(|_| ctx(&format!("bad node in `{s}`")))?,
+                    p.parse().map_err(|_| ctx(&format!("bad port in `{s}`")))?,
+                ))
+            };
+            let kind = t
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .and_then(MsgKind::parse)
+                .ok_or_else(|| ctx("missing/invalid `kind` (message|packet|scalar)"))?;
+            let count = t
+                .get("count")
+                .map(|v| v.as_int().ok_or_else(|| ctx("`count` must be an integer")))
+                .transpose()?
+                .unwrap_or(1000) as u64;
+            let from = ep("from")?;
+            let to = ep("to")?;
+            if from == to {
+                return Err(ctx("channel endpoints must differ"));
+            }
+            channels.push(ChannelSpec { from, to, kind, count });
+        }
+        Ok(Topology { channels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_shape() {
+        let t = Topology::one_way(MsgKind::Message, 1000);
+        assert_eq!(t.channels.len(), 1);
+        assert_eq!(t.nodes(), vec![0, 1]);
+        assert_eq!(t.total_transactions(), 1000);
+
+        let p = Topology::ping_pong(MsgKind::Scalar, 10);
+        assert_eq!(p.channels.len(), 2);
+        assert_eq!(p.nodes(), vec![0, 1]);
+
+        let f = Topology::fan_in(3, MsgKind::Packet, 5);
+        assert_eq!(f.nodes(), vec![0, 1, 2, 3]);
+        assert_eq!(f.total_transactions(), 15);
+    }
+
+    #[test]
+    fn parse_full_topology() {
+        let t = Topology::parse(
+            r#"
+            # two channels
+            [[channel]]
+            from = "0:1"
+            to = "1:1"
+            kind = "message"
+            count = 500
+            [[channel]]
+            from = "1:2"
+            to = "0:2"
+            kind = "scalar"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.channels.len(), 2);
+        assert_eq!(t.channels[0].count, 500);
+        assert_eq!(t.channels[1].count, 1000, "count defaults to 1000");
+        assert_eq!(t.channels[1].kind, MsgKind::Scalar);
+        assert_eq!(t.channels[0].rx_endpoint(), EndpointId::new(0, 1, 1));
+    }
+
+    #[test]
+    fn parse_errors_are_specific() {
+        let e = Topology::parse("x = 1").unwrap_err().to_string();
+        assert!(e.contains("[[channel]]"), "{e}");
+        let e = Topology::parse("[[channel]]\nfrom = \"0:1\"\nto = \"0:1\"\nkind = \"msg\"")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("must differ"), "{e}");
+        let e = Topology::parse("[[channel]]\nfrom = \"0-1\"\nto = \"1:1\"\nkind = \"msg\"")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("node:port"), "{e}");
+    }
+
+    #[test]
+    fn kind_parse_labels() {
+        for k in MsgKind::all() {
+            assert_eq!(MsgKind::parse(k.label()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Minimal benchmark harness (offline substitute for criterion).
+//!
+//! Two modes:
+//!
+//! * [`time_fn`] — wall-clock micro-benchmarks: warmup, N timed
+//!   iterations, robust statistics. Used for the real-host lock-free
+//!   structure benches.
+//! * deterministic experiment benches (the Table 2 / Figure benches) run
+//!   their workload once on the simulator — virtual time is exact, so no
+//!   repetition is needed — and print the paper-shaped tables via the
+//!   printers in [`crate::coordinator::experiment`].
+
+use std::time::Instant;
+
+/// Statistics over per-iteration nanosecond samples.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: u64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Median ns/iter.
+    pub p50_ns: u64,
+    /// 99th percentile ns/iter.
+    pub p99_ns: u64,
+    /// Fastest iteration.
+    pub min_ns: u64,
+    /// Slowest iteration.
+    pub max_ns: u64,
+    /// Standard deviation.
+    pub stddev_ns: f64,
+}
+
+impl BenchStats {
+    /// Throughput in operations per second implied by the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+
+    /// One markdown row: `| name | mean | p50 | p99 | min | ops/s |`.
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {:.0} | {} | {} | {} | {:.0} |",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.min_ns,
+            self.ops_per_sec()
+        )
+    }
+}
+
+/// Markdown header matching [`BenchStats::row`].
+pub fn header() -> String {
+    "| bench | mean ns | p50 | p99 | min | ops/s |\n|---|---|---|---|---|---|".into()
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+///
+/// `f` receives the iteration index; its return value is black-boxed so
+/// the optimizer cannot elide the work.
+pub fn time_fn<R>(name: &str, warmup: u64, iters: u64, mut f: impl FnMut(u64) -> R) -> BenchStats {
+    assert!(iters > 0);
+    for i in 0..warmup {
+        std::hint::black_box(f(i));
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f(i));
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    stats_from(name, samples)
+}
+
+/// Time `f` once per batch of `batch` inner operations — for operations
+/// too fast to time individually. Reports per-operation statistics.
+pub fn time_batched<R>(
+    name: &str,
+    warmup: u64,
+    batches: u64,
+    batch: u64,
+    mut f: impl FnMut(u64) -> R,
+) -> BenchStats {
+    assert!(batches > 0 && batch > 0);
+    for i in 0..warmup {
+        std::hint::black_box(f(i));
+    }
+    let mut samples = Vec::with_capacity(batches as usize);
+    let mut n = 0u64;
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f(n));
+            n += 1;
+        }
+        samples.push((t0.elapsed().as_nanos() as u64) / batch);
+    }
+    stats_from(name, samples)
+}
+
+fn stats_from(name: &str, mut samples: Vec<u64>) -> BenchStats {
+    samples.sort_unstable();
+    let n = samples.len() as u64;
+    let sum: u128 = samples.iter().map(|&s| s as u128).sum();
+    let mean = sum as f64 / n as f64;
+    let var = samples
+        .iter()
+        .map(|&s| {
+            let d = s as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    let q = |p: f64| samples[(((n - 1) as f64 * p).round() as usize).min(samples.len() - 1)];
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: q(0.50),
+        p99_ns: q(0.99),
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+        stddev_ns: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_produces_ordered_stats() {
+        let s = time_fn("spin", 5, 50, |i| {
+            let mut acc = i;
+            for _ in 0..100 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            acc
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns && s.p99_ns <= s.max_ns);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn batched_reports_per_op() {
+        let s = time_batched("noop", 1, 10, 1000, |i| i);
+        assert!(s.mean_ns < 1_000.0, "per-op mean should be tiny: {}", s.mean_ns);
+    }
+
+    #[test]
+    fn row_is_markdown() {
+        let s = time_fn("x", 0, 3, |i| i);
+        assert!(s.row().starts_with("| x |"));
+        assert!(header().contains("ops/s"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_iters_rejected() {
+        time_fn("x", 0, 0, |i| i);
+    }
+}

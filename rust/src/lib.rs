@@ -1,0 +1,74 @@
+//! # mcapi-lockfree
+//!
+//! Reproduction of *"Performance Impact of Lock-Free Algorithms on Multicore
+//! Communication APIs"* (K. Eric Harper, Thijmen de Gooijer, ABB Corporate
+//! Research, 2014).
+//!
+//! The crate implements, from scratch:
+//!
+//! * [`os`] — the portability layer the paper's MRAPI port needed: atomics,
+//!   CPU affinity, timed delay/yield, and parameterised OS *cost profiles*
+//!   (Linux-with-rt-extensions vs. Windows Server) used by the simulator.
+//! * [`lockfree`] — the paper's algorithm toolbox: the Kopetz non-blocking
+//!   write protocol (NBW), the Kim non-blocking buffer (NBB), the lock-free
+//!   bit-set request allocator, buffer free-lists and atomic finite state
+//!   machines.
+//! * [`mrapi`] — the Multicore Resource Management API substrate: shared
+//!   memory partitions, user-mode reader/writer locks over a single kernel
+//!   lock (the *lock-based baseline*), semaphores, nodes/domains and
+//!   resource trees.
+//! * [`mcapi`] — the Multicore Communications API: connection-less messages,
+//!   packet channels and scalar channels, with *both* the lock-based
+//!   reference backend and the refactored lock-free backend.
+//! * [`sim`] — a deterministic discrete-event SMP simulator (virtual cores,
+//!   MESI-like cache-line directory, memory-bus queue, futex/kernel-lock
+//!   costs, scheduling quanta and affinity) used to reproduce the paper's
+//!   single-core vs. multicore matrix on hosts with any core count.
+//! * [`coordinator`] — the stress-test harness: declarative topologies,
+//!   client/server node loops with transaction IDs, the experiment matrix
+//!   behind Table 2 and Figures 7/8, and report printers.
+//! * [`model`] — the Queueing-Petri-Net–style performance model (Section 5):
+//!   a native mean-value-analysis solver plus a bridge that executes the
+//!   JAX/Pallas-authored model AOT-compiled to an XLA artifact.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
+//!   `python/compile/aot.py` and executes them from Rust.
+//! * [`harness`] — a small statistics/benchmark framework (criterion-like)
+//!   used by `cargo bench` targets, built in-tree because the reproduction
+//!   is fully offline.
+//! * [`util`] — hand-rolled substrates: PRNG, histogram, TOML-subset config
+//!   parser, property-testing helper and CLI argument parsing.
+//!
+//! Python (`python/compile/`) authors the L2 queueing model and the L1
+//! Pallas kernel; it runs only at build time (`make artifacts`) and never on
+//! the request path.
+
+pub mod coordinator;
+pub mod harness;
+pub mod lockfree;
+pub mod mcapi;
+pub mod model;
+pub mod mrapi;
+pub mod os;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// MCAPI status code mapped to an error (anything except `Success`).
+    #[error("mcapi status: {0:?}")]
+    Status(crate::mcapi::types::Status),
+    /// Configuration / topology parse problem.
+    #[error("config: {0}")]
+    Config(String),
+    /// PJRT / XLA runtime problem.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}

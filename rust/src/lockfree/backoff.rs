@@ -1,0 +1,94 @@
+//! Bounded retry policy for the Table 1 `*_BUT_*` statuses.
+//!
+//! `BUFFER_FULL_BUT_CONSUMER_READING` / `BUFFER_EMPTY_BUT_PRODUCER_INSERTING`
+//! mean the peer is *mid-operation*: the caller should retry immediately a
+//! limited number of times with no delay. Plain `BUFFER_FULL`/`BUFFER_EMPTY`
+//! mean the caller should yield the processor and retry later, perhaps
+//! after a delay.
+
+use super::mem::World;
+
+/// Retry-budget tracker for one operation attempt sequence.
+pub struct Backoff<W: World> {
+    immediate_left: u32,
+    yields: u32,
+    _world: std::marker::PhantomData<W>,
+}
+
+/// Default bound on immediate (spinning) retries, per Table 1's "limited
+/// number of times". Ablated by `micro_lockfree --ablate-retry`.
+pub const DEFAULT_IMMEDIATE_RETRIES: u32 = 8;
+
+impl<W: World> Backoff<W> {
+    /// Fresh budget with the default immediate-retry bound.
+    pub fn new() -> Self {
+        Self::with_limit(DEFAULT_IMMEDIATE_RETRIES)
+    }
+
+    /// Fresh budget with an explicit immediate-retry bound.
+    pub fn with_limit(limit: u32) -> Self {
+        Backoff { immediate_left: limit, yields: 0, _world: std::marker::PhantomData }
+    }
+
+    /// Peer is mid-operation: spin once if budget remains. Returns false
+    /// when the immediate budget is exhausted (caller should yield).
+    pub fn immediate(&mut self) -> bool {
+        if self.immediate_left == 0 {
+            return false;
+        }
+        self.immediate_left -= 1;
+        W::spin_hint();
+        true
+    }
+
+    /// Buffer genuinely full/empty: yield the processor and retry.
+    pub fn yield_now(&mut self) {
+        self.yields += 1;
+        W::yield_now();
+        // A yield resets the immediate budget: conditions changed.
+        self.immediate_left = DEFAULT_IMMEDIATE_RETRIES;
+    }
+
+    /// Number of yields performed (metric for the stress reports).
+    pub fn yields(&self) -> u32 {
+        self.yields
+    }
+}
+
+impl<W: World> Default for Backoff<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+
+    #[test]
+    fn immediate_budget_is_bounded() {
+        let mut b = Backoff::<RealWorld>::with_limit(3);
+        assert!(b.immediate());
+        assert!(b.immediate());
+        assert!(b.immediate());
+        assert!(!b.immediate());
+        assert!(!b.immediate());
+    }
+
+    #[test]
+    fn yield_resets_immediate_budget() {
+        let mut b = Backoff::<RealWorld>::with_limit(1);
+        assert!(b.immediate());
+        assert!(!b.immediate());
+        b.yield_now();
+        assert!(b.immediate());
+        assert_eq!(b.yields(), 1);
+    }
+
+    #[test]
+    fn zero_limit_never_spins() {
+        let mut b = Backoff::<RealWorld>::with_limit(0);
+        assert!(!b.immediate());
+    }
+}

@@ -1,0 +1,119 @@
+//! Atomic finite state machines (Figures 3 and 4).
+//!
+//! The paper replaced the reference implementation's boolean status flags
+//! (valid/completed/cancelled) with explicit state transition diagrams
+//! verified by compare-and-swap: "verify with atomic compare-and-swap that
+//! an object is in the expected state before changing to the next state".
+//! This type is that mechanism; `mcapi::request` and `mcapi::queue` define
+//! the concrete diagrams.
+
+use super::mem::{Atom32, World};
+
+/// A CAS-verified state cell. States are small u32 constants defined by
+/// the embedding object together with a transition-legality function.
+pub struct AtomicFsm<W: World> {
+    state: W::U32,
+}
+
+impl<W: World> AtomicFsm<W> {
+    /// Start in `initial`.
+    pub fn new(initial: u32) -> Self {
+        AtomicFsm { state: W::U32::new(initial) }
+    }
+
+    /// Current state (racy snapshot).
+    pub fn state(&self) -> u32 {
+        self.state.load()
+    }
+
+    /// Attempt `from -> to`. Fails with the actual observed state if the
+    /// object was not in `from` — the caller's cue that another task won.
+    pub fn transition(&self, from: u32, to: u32) -> Result<(), u32> {
+        self.state.cas(from, to).map(|_| ()).map_err(|actual| actual)
+    }
+
+    /// Transition that must succeed (invariant violation otherwise) —
+    /// used where the protocol guarantees exclusive ownership.
+    pub fn transition_exact(&self, from: u32, to: u32) {
+        if let Err(actual) = self.transition(from, to) {
+            panic!("FSM invariant: expected state {from}, found {actual} (target {to})");
+        }
+    }
+
+    /// Spin until the object reaches `target` (bounded by `max_spins`;
+    /// returns false on budget exhaustion).
+    pub fn await_state(&self, target: u32, max_spins: u64) -> bool {
+        for _ in 0..max_spins {
+            if self.state() == target {
+                return true;
+            }
+            W::spin_hint();
+        }
+        self.state() == target
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::Arc;
+
+    type RFsm = AtomicFsm<RealWorld>;
+
+    const FREE: u32 = 0;
+    const VALID: u32 = 1;
+    const COMPLETED: u32 = 2;
+
+    #[test]
+    fn legal_transition_chain() {
+        let f = RFsm::new(FREE);
+        assert!(f.transition(FREE, VALID).is_ok());
+        assert!(f.transition(VALID, COMPLETED).is_ok());
+        assert_eq!(f.state(), COMPLETED);
+    }
+
+    #[test]
+    fn wrong_from_state_reports_actual() {
+        let f = RFsm::new(FREE);
+        assert_eq!(f.transition(VALID, COMPLETED), Err(FREE));
+        assert_eq!(f.state(), FREE);
+    }
+
+    #[test]
+    #[should_panic(expected = "FSM invariant")]
+    fn transition_exact_panics_on_violation() {
+        RFsm::new(FREE).transition_exact(VALID, COMPLETED);
+    }
+
+    #[test]
+    fn exactly_one_winner_under_contention() {
+        let f = Arc::new(RFsm::new(FREE));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                f.transition(FREE, VALID).is_ok() as u32
+            }));
+        }
+        let winners: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(winners, 1, "CAS admits exactly one allocator");
+    }
+
+    #[test]
+    fn await_state_observes_change() {
+        let f = Arc::new(RFsm::new(FREE));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            f2.transition_exact(FREE, VALID);
+        });
+        assert!(f.await_state(VALID, u64::MAX >> 1));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn await_state_budget_exhaustion() {
+        let f = RFsm::new(FREE);
+        assert!(!f.await_state(VALID, 10));
+    }
+}

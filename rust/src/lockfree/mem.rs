@@ -1,0 +1,299 @@
+//! The memory-backend abstraction (`World`) the lock-free algorithms are
+//! generic over.
+//!
+//! The paper's point is that the *same algorithms* behave differently on
+//! single-core and multicore machines. To reproduce that on a host with
+//! any core count, every algorithm in [`crate::lockfree`] and every MCAPI
+//! backend is written against this trait and instantiated twice:
+//!
+//! * [`RealWorld`] — zero-cost passthrough to `std::sync::atomic`; this is
+//!   the deployable library.
+//! * [`crate::sim::SimWorld`] — every operation charges virtual time on
+//!   the deterministic SMP simulator (cache-line directory, memory-bus
+//!   queue, OS cost profile), reproducing the paper's testbed.
+//!
+//! The trait surface is deliberately small: 32/64-bit atoms with the
+//! operations the paper's algorithms need (load/store/CAS/fetch-ops), a
+//! blocking kernel lock, yield/delay, bulk payload `touch`, and a
+//! monotonic clock for latency stamping.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A 32-bit atomic cell.
+pub trait Atom32: Send + Sync + 'static {
+    /// New cell; in simulated worlds this also assigns a cache-line address.
+    fn new(v: u32) -> Self;
+    /// Acquire load.
+    fn load(&self) -> u32;
+    /// Release store.
+    fn store(&self, v: u32);
+    /// AcqRel compare-and-swap; `Ok(previous)` on success, `Err(actual)`.
+    fn cas(&self, current: u32, new: u32) -> Result<u32, u32>;
+    /// AcqRel fetch-add (wrapping).
+    fn fetch_add(&self, v: u32) -> u32;
+    /// AcqRel fetch-or.
+    fn fetch_or(&self, v: u32) -> u32;
+    /// AcqRel fetch-and.
+    fn fetch_and(&self, v: u32) -> u32;
+    /// Raw relaxed load that bypasses cost accounting — ONLY for
+    /// destructors and post-run inspection (sim worlds have no task
+    /// context there). Not part of any algorithm's protocol.
+    fn peek(&self) -> u32;
+}
+
+/// A 64-bit atomic cell (same contract as [`Atom32`]).
+pub trait Atom64: Send + Sync + 'static {
+    /// New cell.
+    fn new(v: u64) -> Self;
+    /// Acquire load.
+    fn load(&self) -> u64;
+    /// Release store.
+    fn store(&self, v: u64);
+    /// AcqRel compare-and-swap.
+    fn cas(&self, current: u64, new: u64) -> Result<u64, u64>;
+    /// AcqRel fetch-add (wrapping).
+    fn fetch_add(&self, v: u64) -> u64;
+    /// AcqRel fetch-or.
+    fn fetch_or(&self, v: u64) -> u64;
+    /// AcqRel fetch-and.
+    fn fetch_and(&self, v: u64) -> u64;
+    /// Raw relaxed load bypassing cost accounting (see [`Atom32::peek`]).
+    fn peek(&self) -> u64;
+}
+
+/// A blocking kernel-mode lock (what MRAPI builds its user-mode
+/// synchronization on, and what the lock-based baseline pays for).
+pub trait KernelLock: Send + Sync + 'static {
+    /// New, unlocked.
+    fn new() -> Self;
+    /// Block until acquired.
+    fn acquire(&self);
+    /// Release; wakes one waiter if any.
+    fn release(&self);
+}
+
+/// An execution world: atoms + kernel lock + scheduling hooks.
+pub trait World: Sized + Send + Sync + 'static {
+    /// 32-bit atom type.
+    type U32: Atom32;
+    /// 64-bit atom type.
+    type U64: Atom64;
+    /// Kernel lock type.
+    type Lock: KernelLock;
+
+    /// Give up the processor (MRAPI explicit context switch).
+    fn yield_now();
+    /// Busy-wait hint between immediate retries (Table 1 semantics).
+    fn spin_hint();
+    /// Charge a bulk payload access of `bytes` (message copy). Real world:
+    /// no-op (the copy itself is the cost); sim world: cache/bus charges.
+    fn touch(region: u64, bytes: usize, write: bool);
+    /// Charge `ns` of pure CPU work (per-API-call overhead modelling).
+    fn work(ns: u64);
+    /// Monotonic nanoseconds (virtual in the sim world) for latency stamps.
+    fn now_ns() -> u64;
+    /// Allocate a synthetic address region for a payload buffer, used with
+    /// [`World::touch`]. Real world: 0 (unused).
+    fn alloc_region(bytes: usize) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// RealWorld: the deployable backend.
+// ---------------------------------------------------------------------------
+
+/// Passthrough to the host's real atomics and scheduler.
+pub struct RealWorld;
+
+/// `std::sync::atomic::AtomicU32` with the trait's fixed orderings.
+#[repr(transparent)]
+pub struct RealAtom32(AtomicU32);
+
+impl Atom32 for RealAtom32 {
+    #[inline]
+    fn new(v: u32) -> Self {
+        RealAtom32(AtomicU32::new(v))
+    }
+    #[inline]
+    fn load(&self) -> u32 {
+        self.0.load(Ordering::Acquire)
+    }
+    #[inline]
+    fn store(&self, v: u32) {
+        self.0.store(v, Ordering::Release)
+    }
+    #[inline]
+    fn cas(&self, current: u32, new: u32) -> Result<u32, u32> {
+        self.0
+            .compare_exchange(current, new, Ordering::AcqRel, Ordering::Acquire)
+    }
+    #[inline]
+    fn fetch_add(&self, v: u32) -> u32 {
+        self.0.fetch_add(v, Ordering::AcqRel)
+    }
+    #[inline]
+    fn fetch_or(&self, v: u32) -> u32 {
+        self.0.fetch_or(v, Ordering::AcqRel)
+    }
+    #[inline]
+    fn fetch_and(&self, v: u32) -> u32 {
+        self.0.fetch_and(v, Ordering::AcqRel)
+    }
+    #[inline]
+    fn peek(&self) -> u32 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// `std::sync::atomic::AtomicU64` with the trait's fixed orderings.
+#[repr(transparent)]
+pub struct RealAtom64(AtomicU64);
+
+impl Atom64 for RealAtom64 {
+    #[inline]
+    fn new(v: u64) -> Self {
+        RealAtom64(AtomicU64::new(v))
+    }
+    #[inline]
+    fn load(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+    #[inline]
+    fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Release)
+    }
+    #[inline]
+    fn cas(&self, current: u64, new: u64) -> Result<u64, u64> {
+        self.0
+            .compare_exchange(current, new, Ordering::AcqRel, Ordering::Acquire)
+    }
+    #[inline]
+    fn fetch_add(&self, v: u64) -> u64 {
+        self.0.fetch_add(v, Ordering::AcqRel)
+    }
+    #[inline]
+    fn fetch_or(&self, v: u64) -> u64 {
+        self.0.fetch_or(v, Ordering::AcqRel)
+    }
+    #[inline]
+    fn fetch_and(&self, v: u64) -> u64 {
+        self.0.fetch_and(v, Ordering::AcqRel)
+    }
+    #[inline]
+    fn peek(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Futex-style blocking mutex over `Mutex<bool>` + `Condvar` (what an OS
+/// kernel lock costs on the real host).
+pub struct RealKernelLock {
+    held: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl KernelLock for RealKernelLock {
+    fn new() -> Self {
+        RealKernelLock { held: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut held = self.held.lock().unwrap();
+        while *held {
+            held = self.cv.wait(held).unwrap();
+        }
+        *held = true;
+    }
+
+    fn release(&self) {
+        let mut held = self.held.lock().unwrap();
+        assert!(*held, "release of unheld kernel lock");
+        *held = false;
+        drop(held);
+        self.cv.notify_one();
+    }
+}
+
+impl World for RealWorld {
+    type U32 = RealAtom32;
+    type U64 = RealAtom64;
+    type Lock = RealKernelLock;
+
+    #[inline]
+    fn yield_now() {
+        std::thread::yield_now();
+    }
+    #[inline]
+    fn spin_hint() {
+        std::hint::spin_loop();
+    }
+    #[inline]
+    fn touch(_region: u64, _bytes: usize, _write: bool) {}
+    #[inline]
+    fn work(_ns: u64) {}
+    #[inline]
+    fn now_ns() -> u64 {
+        crate::os::monotonic_ns()
+    }
+    #[inline]
+    fn alloc_region(_bytes: usize) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn real_atom32_ops() {
+        let a = RealAtom32::new(5);
+        assert_eq!(a.load(), 5);
+        a.store(9);
+        assert_eq!(a.fetch_add(1), 9);
+        assert_eq!(a.load(), 10);
+        assert_eq!(a.cas(10, 20), Ok(10));
+        assert_eq!(a.cas(10, 30), Err(20));
+        assert_eq!(a.fetch_or(0b100), 20);
+        assert_eq!(a.fetch_and(0b100), 20 | 0b100);
+        assert_eq!(a.load(), 0b100);
+    }
+
+    #[test]
+    fn real_atom64_wrapping_add() {
+        let a = RealAtom64::new(u64::MAX);
+        a.fetch_add(1);
+        assert_eq!(a.load(), 0);
+    }
+
+    #[test]
+    fn kernel_lock_mutual_exclusion() {
+        let lock = Arc::new(RealKernelLock::new());
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let lock = lock.clone();
+            let counter = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    lock.acquire();
+                    // Non-atomic read-modify-write under the lock.
+                    let v = counter.load(Ordering::Relaxed);
+                    counter.store(v + 1, Ordering::Relaxed);
+                    lock.release();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 4000);
+    }
+
+    #[test]
+    #[should_panic(expected = "unheld")]
+    fn kernel_lock_release_unheld_panics() {
+        RealKernelLock::new().release();
+    }
+}

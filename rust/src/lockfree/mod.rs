@@ -1,0 +1,35 @@
+//! The paper's lock-free algorithm toolbox (Section 3).
+//!
+//! * [`nbw`] — Kopetz's Non-Blocking Write protocol for **state messages**
+//!   (single atomic version counter over a buffer array; readers detect
+//!   and retry collisions — optimistic concurrency).
+//! * [`nbb`] — Kim's Non-Blocking Buffer for **event messages** (ring FIFO
+//!   with writer/reader counters; the paper's Table 1 status semantics).
+//! * [`bitset`] — the lock-free bit-set request allocator that replaced
+//!   the infeasible lock-free doubly linked list (refactoring step 3).
+//! * [`freelist`] — tagged-index Treiber stack for buffer pools (ABA-safe
+//!   without hazard pointers because entries are indices, not pointers).
+//! * [`fsm`] — CAS-verified finite state machines replacing boolean status
+//!   flags (Figures 3 and 4).
+//! * [`backoff`] — the bounded immediate-retry / yield policy Table 1
+//!   prescribes for `*_BUT_*` statuses.
+//!
+//! Everything is generic over [`mem::World`] so identical code runs on
+//! real hardware ([`mem::RealWorld`]) and on the deterministic SMP
+//! simulator ([`crate::sim::SimWorld`]).
+
+pub mod backoff;
+pub mod bitset;
+pub mod freelist;
+pub mod fsm;
+pub mod mem;
+pub mod nbb;
+pub mod nbw;
+
+pub use backoff::Backoff;
+pub use bitset::BitSet;
+pub use freelist::FreeList;
+pub use fsm::AtomicFsm;
+pub use mem::{Atom32, Atom64, KernelLock, RealWorld, World};
+pub use nbb::{InsertStatus, Nbb, ReadStatus};
+pub use nbw::Nbw;

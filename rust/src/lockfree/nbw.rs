@@ -1,0 +1,225 @@
+//! Kopetz's Non-Blocking Write protocol (NBW) for **state messages**.
+//!
+//! State messages carry "the current value" — order is indeterminate and
+//! readers only ever want the freshest version. One atomic version counter
+//! serializes nothing: the writer increments it before and after each
+//! write (odd = write in progress); a reader snapshots the counter, reads
+//! the newest completed buffer, re-checks the counter and retries on a
+//! collision — optimistic concurrency, like database OCC [29].
+//!
+//! The paper's three properties hold by construction:
+//! * **Safety** — a successful read returns an uncorrupted version
+//!   (collision check).
+//! * **Timeliness** — reads never block; retries are bounded in practice
+//!   by the buffer depth (the more buffers, the fewer collisions).
+//! * **Non-blocking** — the writer is never blocked by readers.
+//!
+//! Slot payloads are accessed with volatile copies: the protocol is
+//! *designed* around potentially-torn concurrent access that is detected
+//! and discarded via the version check.
+
+use std::cell::UnsafeCell;
+
+use super::mem::{Atom64, World};
+
+/// A non-blocking state-message variable of depth `D` buffers.
+pub struct Nbw<T: Copy, W: World> {
+    version: W::U64,
+    slots: Box<[UnsafeCell<T>]>,
+    regions: Box<[u64]>,
+}
+
+unsafe impl<T: Copy + Send, W: World> Send for Nbw<T, W> {}
+unsafe impl<T: Copy + Send, W: World> Sync for Nbw<T, W> {}
+
+impl<T: Copy, W: World> Nbw<T, W> {
+    /// Create with `depth` buffers, initialised to `init` (version 0 means
+    /// "nothing published yet" — reads return `None` until first write).
+    pub fn new(depth: usize, init: T) -> Self {
+        assert!(depth >= 1, "NBW depth must be >= 1");
+        let item = std::mem::size_of::<T>().max(1);
+        Nbw {
+            version: W::U64::new(0),
+            slots: (0..depth).map(|_| UnsafeCell::new(init)).collect(),
+            regions: (0..depth).map(|_| W::alloc_region(item)).collect(),
+        }
+    }
+
+    /// Buffer depth.
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of completed writes.
+    pub fn writes(&self) -> u64 {
+        self.version.load() / 2
+    }
+
+    /// Publish a new state value. Single-writer; never blocks.
+    pub fn write(&self, v: T) {
+        let c = self.version.load();
+        debug_assert_eq!(c & 1, 0, "concurrent writers on NBW");
+        self.version.store(c + 1); // odd: write in progress
+        let idx = ((c / 2) % self.slots.len() as u64) as usize;
+        W::touch(self.regions[idx], std::mem::size_of::<T>().max(1), true);
+        unsafe { std::ptr::write_volatile(self.slots[idx].get(), v) };
+        self.version.store(c + 2);
+    }
+
+    /// Try to read the freshest completed value once. `Err(())` signals a
+    /// collision (caller retries); `Ok(None)` means nothing was ever
+    /// written.
+    pub fn try_read(&self) -> Result<Option<T>, ()> {
+        let c1 = self.version.load();
+        if c1 == 0 {
+            return Ok(None);
+        }
+        if c1 & 1 == 1 {
+            return Err(()); // writer mid-flight on the newest slot
+        }
+        let n = c1 / 2; // completed writes
+        let depth = self.slots.len() as u64;
+        let idx = ((n - 1) % depth) as usize;
+        W::touch(self.regions[idx], std::mem::size_of::<T>().max(1), false);
+        let v = unsafe { std::ptr::read_volatile(self.slots[idx].get()) };
+        let c2 = self.version.load();
+        // Our slot is clobbered once the writer *starts* write number
+        // (n-1) + depth, i.e. once the counter reaches 2*(n-1+depth)+1.
+        if c2 >= 2 * (n - 1 + depth) + 1 {
+            return Err(());
+        }
+        Ok(Some(v))
+    }
+
+    /// Read the freshest value, spinning through collisions. Returns
+    /// `(value, retries)`; `None` if nothing was ever written.
+    pub fn read(&self) -> (Option<T>, u32) {
+        let mut retries = 0;
+        loop {
+            match self.try_read() {
+                Ok(v) => return (v, retries),
+                Err(()) => {
+                    retries += 1;
+                    W::spin_hint();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    type RNbw<T> = Nbw<T, RealWorld>;
+
+    #[test]
+    fn unwritten_reads_none() {
+        let n = RNbw::new(4, 0u64);
+        assert_eq!(n.read().0, None);
+    }
+
+    #[test]
+    fn read_returns_latest() {
+        let n = RNbw::new(2, 0u64);
+        n.write(10);
+        assert_eq!(n.read().0, Some(10));
+        n.write(20);
+        n.write(30);
+        assert_eq!(n.read().0, Some(30));
+        assert_eq!(n.writes(), 3);
+    }
+
+    #[test]
+    fn depth_one_still_correct() {
+        let n = RNbw::new(1, 0u32);
+        for i in 1..50u32 {
+            n.write(i);
+            assert_eq!(n.read().0, Some(i));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "depth")]
+    fn zero_depth_rejected() {
+        let _ = RNbw::new(0, 0u8);
+    }
+
+    /// Safety property under real concurrency: a reader never observes a
+    /// torn state value (payload halves must always match).
+    #[test]
+    fn no_torn_reads_under_stress() {
+        let n = Arc::new(RNbw::new(4, [0u64; 4]));
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let n = n.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    i += 1;
+                    n.write([i, i.wrapping_mul(7), !i, i ^ 0xF00D]);
+                }
+                i
+            })
+        };
+        let mut reads = 0u64;
+        let mut last_seen = 0u64;
+        while reads < 100_000 {
+            if let Some([a, b, c, d]) = n.read().0 {
+                assert_eq!(b, a.wrapping_mul(7), "torn read");
+                assert_eq!(c, !a, "torn read");
+                assert_eq!(d, a ^ 0xF00D, "torn read");
+                // Freshness is monotone: state messages never go backwards.
+                assert!(a >= last_seen, "stale reordering: {a} < {last_seen}");
+                last_seen = a;
+            }
+            reads += 1;
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total = writer.join().unwrap();
+        assert!(total > 0);
+    }
+
+    /// Non-blocking property: the writer makes progress even while readers
+    /// hammer the variable continuously.
+    #[test]
+    fn writer_never_blocked() {
+        let n = Arc::new(RNbw::new(2, 0u64));
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let n = n.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let _ = n.read();
+                    }
+                })
+            })
+            .collect();
+        for i in 1..=50_000u64 {
+            n.write(i);
+        }
+        assert_eq!(n.writes(), 50_000);
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(n.read().0, Some(50_000));
+    }
+
+    #[test]
+    fn deeper_buffers_reduce_collisions() {
+        // Deterministic check in the simulator would be ideal; on the real
+        // host we only assert the retry counter is exposed and sane.
+        let n = RNbw::new(8, 0u32);
+        n.write(1);
+        let (v, retries) = n.read();
+        assert_eq!(v, Some(1));
+        assert_eq!(retries, 0);
+    }
+}

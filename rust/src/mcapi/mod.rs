@@ -1,0 +1,998 @@
+//! MCAPI — the Multicore Communications API runtime.
+//!
+//! Implements the paper's three communication formats over a shared
+//! memory partition (Figure 1 / Figure 2):
+//!
+//! 1. **Messages** — connection-less, priority-based FIFO between ad-hoc
+//!    endpoints;
+//! 2. **Packets** — connection-oriented FIFO channels; send buffer is the
+//!    caller's, receive buffer comes from the MCAPI pool;
+//! 3. **Scalars** — connection-oriented 8/16/32/64-bit values.
+//!
+//! Two interchangeable data paths ([`types::BackendKind`]):
+//!
+//! * `Locked` — the reference design: every operation takes the global
+//!   user-mode reader/writer lock (itself guarded by one kernel lock).
+//! * `LockFree` — the paper's refactoring: NBB receive queues, bit-set
+//!   request pool, Figure 3/4 FSMs, atomic metadata.
+//!
+//! The runtime is generic over [`crate::lockfree::mem::World`], so the
+//! same code runs on real hardware and on the deterministic SMP simulator.
+
+pub mod queue;
+pub mod request;
+pub mod types;
+
+use std::sync::Arc;
+
+use crate::lockfree::fsm::AtomicFsm;
+use crate::lockfree::mem::{Atom32, Atom64, World};
+use crate::lockfree::nbw::Nbw;
+use crate::mrapi::rwlock::RwLock;
+use crate::mrapi::shmem::{Lease, Partition};
+use queue::{entry_state, Entry, LockFreeQueue, LockedQueue};
+use request::{PendingOp, RequestHandle, RequestPool};
+use types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status, PRIORITIES};
+
+/// Endpoint FSM states.
+mod ep_state {
+    pub const FREE: u32 = 0;
+    pub const CREATING: u32 = 1;
+    pub const ACTIVE: u32 = 2;
+}
+
+/// Channel FSM states.
+mod ch_state {
+    pub const FREE: u32 = 0;
+    pub const CONNECTING: u32 = 1;
+    pub const CONNECTED: u32 = 2;
+}
+
+enum QueueImpl<W: World> {
+    Locked(LockedQueue),
+    LockFree(LockFreeQueue<W>),
+}
+
+struct EndpointSlot<W: World> {
+    state: AtomicFsm<W>,
+    /// Packed EndpointId (domain<<32 | node<<16 | port), valid when ACTIVE.
+    id: W::U64,
+    /// Dense node slot of the owner (producer lane index).
+    owner: W::U32,
+    /// Connected channel + 1 as receiver (0 = none).
+    rx_channel: W::U32,
+    queue: QueueImpl<W>,
+}
+
+struct ChannelSlot<W: World> {
+    state: AtomicFsm<W>,
+    kind: W::U32, // 0 = packet, 1 = scalar, 2 = state
+    tx_ep: W::U32,
+    rx_ep: W::U32,
+    tx_open: W::U32,
+    rx_open: W::U32,
+    /// NBW variable backing a *state* channel (paper §7 future work).
+    nbw: Nbw<u64, W>,
+}
+
+fn pack(id: EndpointId) -> u64 {
+    ((id.domain as u64) << 32) | ((id.node as u64) << 16) | id.port as u64 | (1 << 63)
+}
+
+/// The MCAPI runtime: one shared-memory communication domain.
+pub struct McapiRuntime<W: World> {
+    cfg: RuntimeCfg,
+    endpoints: Vec<EndpointSlot<W>>,
+    channels: Vec<ChannelSlot<W>>,
+    requests: RequestPool<W>,
+    pool: Partition<W>,
+    /// Figure 4 FSM per pooled buffer.
+    buffer_fsm: Vec<AtomicFsm<W>>,
+    /// The Figure 1 global lock (used only by the Locked backend).
+    global: RwLock<W>,
+}
+
+impl<W: World> McapiRuntime<W> {
+    /// Build a runtime (normally wrapped in an `Arc` and shared).
+    pub fn new(cfg: RuntimeCfg) -> Arc<Self> {
+        let endpoints = (0..cfg.max_endpoints)
+            .map(|_| EndpointSlot {
+                state: AtomicFsm::new(ep_state::FREE),
+                id: W::U64::new(0),
+                owner: W::U32::new(0),
+                rx_channel: W::U32::new(0),
+                queue: match cfg.backend {
+                    BackendKind::Locked => {
+                        // Same per-lane depth as the lock-free NBBs so the
+                        // queueing (Little's-law) component of latency is
+                        // comparable across backends.
+                        QueueImpl::Locked(LockedQueue::new(cfg.nbb_capacity))
+                    }
+                    BackendKind::LockFree => {
+                        QueueImpl::LockFree(LockFreeQueue::new(cfg.max_nodes, cfg.nbb_capacity))
+                    }
+                },
+            })
+            .collect();
+        let channels = (0..cfg.max_channels)
+            .map(|_| ChannelSlot {
+                state: AtomicFsm::new(ch_state::FREE),
+                kind: W::U32::new(0),
+                tx_ep: W::U32::new(0),
+                rx_ep: W::U32::new(0),
+                tx_open: W::U32::new(0),
+                rx_open: W::U32::new(0),
+                nbw: Nbw::new(4, 0),
+            })
+            .collect();
+        Arc::new(McapiRuntime {
+            endpoints,
+            channels,
+            requests: RequestPool::new(cfg.max_requests),
+            pool: Partition::new(cfg.pool_buffers, cfg.buf_len),
+            buffer_fsm: (0..cfg.pool_buffers)
+                .map(|_| AtomicFsm::new(entry_state::FREE))
+                .collect(),
+            global: RwLock::new(),
+            cfg,
+        })
+    }
+
+    /// Runtime configuration.
+    pub fn cfg(&self) -> &RuntimeCfg {
+        &self.cfg
+    }
+
+    /// Selected backend.
+    pub fn backend(&self) -> BackendKind {
+        self.cfg.backend
+    }
+
+    /// Requests currently in flight.
+    pub fn requests_in_use(&self) -> usize {
+        self.requests.in_use()
+    }
+
+    /// Pool buffers currently free.
+    pub fn buffers_available(&self) -> usize {
+        self.pool.available()
+    }
+
+    fn charge_api(&self) {
+        W::work(self.cfg.api_overhead_ns);
+    }
+
+    // -- endpoint management ------------------------------------------------
+
+    /// Create an endpoint `(domain, node, port)` owned by dense node slot
+    /// `owner`. Returns the endpoint table index.
+    pub fn create_endpoint(&self, id: EndpointId, owner: usize) -> Result<usize, Status> {
+        self.charge_api();
+        if owner >= self.cfg.max_nodes {
+            return Err(Status::InvalidEndpoint);
+        }
+        if self.lookup(id).is_some() {
+            return Err(Status::Busy);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => self.global.with_write(|| self.create_ep_inner(id, owner)),
+            BackendKind::LockFree => self.create_ep_inner(id, owner),
+        }
+    }
+
+    fn create_ep_inner(&self, id: EndpointId, owner: usize) -> Result<usize, Status> {
+        for (i, slot) in self.endpoints.iter().enumerate() {
+            if slot.state.transition(ep_state::FREE, ep_state::CREATING).is_ok() {
+                slot.id.store(pack(id));
+                slot.owner.store(owner as u32);
+                slot.rx_channel.store(0);
+                slot.state.transition_exact(ep_state::CREATING, ep_state::ACTIVE);
+                return Ok(i);
+            }
+        }
+        Err(Status::Exhausted)
+    }
+
+    /// Delete an endpoint (must not be connected).
+    pub fn delete_endpoint(&self, ep: usize) -> Result<(), Status> {
+        self.charge_api();
+        let slot = self.endpoints.get(ep).ok_or(Status::InvalidEndpoint)?;
+        if slot.rx_channel.load() != 0 {
+            return Err(Status::Busy);
+        }
+        slot.state
+            .transition(ep_state::ACTIVE, ep_state::FREE)
+            .map_err(|_| Status::InvalidEndpoint)?;
+        slot.id.store(0);
+        Ok(())
+    }
+
+    /// Find the endpoint table index for `id` (MCAPI `get_endpoint`).
+    pub fn lookup(&self, id: EndpointId) -> Option<usize> {
+        let packed = pack(id);
+        self.endpoints
+            .iter()
+            .position(|s| s.id.load() == packed && s.state.state() == ep_state::ACTIVE)
+    }
+
+    fn active_ep(&self, ep: usize) -> Result<&EndpointSlot<W>, Status> {
+        let slot = self.endpoints.get(ep).ok_or(Status::InvalidEndpoint)?;
+        if slot.state.state() != ep_state::ACTIVE {
+            return Err(Status::InvalidEndpoint);
+        }
+        Ok(slot)
+    }
+
+    // -- buffer lease helpers (Figure 4 lifecycle) ---------------------------
+
+    fn lease_filled(&self, data: &[u8]) -> Result<Lease, Status> {
+        if data.len() > self.cfg.buf_len {
+            return Err(Status::MessageLimit);
+        }
+        let lease = self.pool.acquire().ok_or(Status::MemLimit)?;
+        // Figure 4: FREE -> RESERVED (claimed) -> ALLOCATED (filled).
+        self.buffer_fsm[lease.index].transition_exact(entry_state::FREE, entry_state::RESERVED);
+        self.pool.write(&lease, data);
+        self.buffer_fsm[lease.index]
+            .transition_exact(entry_state::RESERVED, entry_state::ALLOCATED);
+        Ok(lease)
+    }
+
+    fn lease_of(&self, e: &Entry) -> Lease {
+        Lease {
+            index: e.buf_index as usize,
+            offset: e.buf_index as usize * self.cfg.buf_len,
+            len: self.cfg.buf_len,
+        }
+    }
+
+    fn consume_entry(&self, e: &Entry, out: &mut [u8]) -> usize {
+        if !e.has_buffer() {
+            return 0;
+        }
+        let lease = self.lease_of(e);
+        // Figure 4: ALLOCATED -> RECEIVED (head, being read) -> FREE.
+        self.buffer_fsm[lease.index]
+            .transition_exact(entry_state::ALLOCATED, entry_state::RECEIVED);
+        let n = (e.len as usize).min(out.len());
+        let copied = self.pool.read(&lease, &mut out[..n]);
+        self.buffer_fsm[lease.index]
+            .transition_exact(entry_state::RECEIVED, entry_state::FREE);
+        self.pool.release(lease);
+        copied
+    }
+
+    fn abort_lease(&self, lease: Lease) {
+        self.buffer_fsm[lease.index]
+            .transition_exact(entry_state::ALLOCATED, entry_state::FREE);
+        self.pool.release(lease);
+    }
+
+    // -- connectionless messages ---------------------------------------------
+
+    /// Non-blocking connection-less send from dense node `from` to
+    /// endpoint `to`; `priority` 0 (highest) .. 3.
+    pub fn msg_send(
+        &self,
+        from: usize,
+        to: EndpointId,
+        data: &[u8],
+        priority: u8,
+    ) -> Result<(), Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                // The reference design locks the shared-memory database for
+                // *every* subsystem access — endpoint metadata, the buffer
+                // pool, the receive queue ("MRAPI lock invocations for
+                // every asynchronous request or data exchange"). Each
+                // section is a separate lock round-trip; this is the
+                // convoy the paper measures, so keep it faithful.
+                let ep = self
+                    .global
+                    .with_read(|| self.lookup(to))
+                    .ok_or(Status::InvalidEndpoint)?;
+                let lease = self.global.with_write(|| self.lease_filled(data))?;
+                let entry = Entry::buffered(
+                    lease.index as u32,
+                    data.len() as u32,
+                    from as u32,
+                    priority % PRIORITIES as u8,
+                );
+                self.global.with_write(|| {
+                    let QueueImpl::Locked(q) = &self.endpoints[ep].queue else {
+                        unreachable!("locked backend uses locked queues");
+                    };
+                    // Safety: the global write lock is held.
+                    unsafe { q.push(entry) }.map_err(|s| {
+                        self.abort_lease(lease);
+                        s
+                    })
+                })
+            }
+            BackendKind::LockFree => {
+                let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
+                let lease = self.lease_filled(data)?;
+                let entry = Entry::buffered(
+                    lease.index as u32,
+                    data.len() as u32,
+                    from as u32,
+                    priority % PRIORITIES as u8,
+                );
+                let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
+                    unreachable!("lockfree backend uses NBB queues");
+                };
+                q.push(entry).map_err(|(s, _)| {
+                    self.abort_lease(lease);
+                    s
+                })
+            }
+        }
+    }
+
+    /// Non-blocking connection-less receive on endpoint table slot `ep`;
+    /// copies into `out`, returns the byte count.
+    pub fn msg_recv(&self, ep: usize, out: &mut [u8]) -> Result<usize, Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let entry = self.global.with_write(|| {
+                    let slot = self.active_ep(ep)?;
+                    let QueueImpl::Locked(q) = &slot.queue else {
+                        unreachable!();
+                    };
+                    // Safety: the global write lock is held.
+                    unsafe { q.pop() }.ok_or(Status::WouldBlock)
+                })?;
+                // Buffer read + release is a second lock round-trip in the
+                // reference design.
+                Ok(self.global.with_write(|| self.consume_entry(&entry, out)))
+            }
+            BackendKind::LockFree => {
+                let slot = self.active_ep(ep)?;
+                let QueueImpl::LockFree(q) = &slot.queue else {
+                    unreachable!();
+                };
+                let entry = q.pop()?;
+                Ok(self.consume_entry(&entry, out))
+            }
+        }
+    }
+
+    /// Number of messages waiting on `ep` (MCAPI `msg_available`).
+    pub fn msg_available(&self, ep: usize) -> Result<usize, Status> {
+        let slot = self.active_ep(ep)?;
+        Ok(match (&slot.queue, self.cfg.backend) {
+            (QueueImpl::Locked(q), _) => self.global.with_read(|| unsafe { q.len() }),
+            (QueueImpl::LockFree(q), _) => q.len(),
+        })
+    }
+
+    // -- connected channels ---------------------------------------------------
+
+    /// Connect a channel from `tx` to `rx` (both must be active; `rx` not
+    /// already connected). Returns the channel table index.
+    pub fn connect(&self, tx: EndpointId, rx: EndpointId, kind: ChannelKind) -> Result<usize, Status> {
+        self.charge_api();
+        let run = || -> Result<usize, Status> {
+            let tx_i = self.lookup(tx).ok_or(Status::InvalidEndpoint)?;
+            let rx_i = self.lookup(rx).ok_or(Status::InvalidEndpoint)?;
+            let ch = self
+                .channels
+                .iter()
+                .position(|c| c.state.transition(ch_state::FREE, ch_state::CONNECTING).is_ok())
+                .ok_or(Status::Exhausted)?;
+            let slot = &self.channels[ch];
+            // Claim the receive side exclusively.
+            if self.endpoints[rx_i]
+                .rx_channel
+                .cas(0, ch as u32 + 1)
+                .is_err()
+            {
+                slot.state.transition_exact(ch_state::CONNECTING, ch_state::FREE);
+                return Err(Status::Busy);
+            }
+            slot.kind.store(match kind {
+                ChannelKind::Packet => 0,
+                ChannelKind::Scalar => 1,
+                ChannelKind::State => 2,
+            });
+            slot.tx_ep.store(tx_i as u32);
+            slot.rx_ep.store(rx_i as u32);
+            slot.tx_open.store(0);
+            slot.rx_open.store(0);
+            slot.state.transition_exact(ch_state::CONNECTING, ch_state::CONNECTED);
+            Ok(ch)
+        };
+        match self.cfg.backend {
+            BackendKind::Locked => self.global.with_write(run),
+            BackendKind::LockFree => run(),
+        }
+    }
+
+    fn connected_ch(&self, ch: usize) -> Result<&ChannelSlot<W>, Status> {
+        let slot = self.channels.get(ch).ok_or(Status::InvalidChannel)?;
+        if slot.state.state() != ch_state::CONNECTED {
+            return Err(Status::InvalidChannel);
+        }
+        Ok(slot)
+    }
+
+    /// Open the send side (must be the owner's endpoint; MCAPI
+    /// `open_pkt_send` / `open_sclr_send`).
+    pub fn open_send(&self, ch: usize) -> Result<(), Status> {
+        self.charge_api();
+        let slot = self.connected_ch(ch)?;
+        slot.tx_open.cas(0, 1).map(|_| ()).map_err(|_| Status::Busy)
+    }
+
+    /// Open the receive side.
+    pub fn open_recv(&self, ch: usize) -> Result<(), Status> {
+        self.charge_api();
+        let slot = self.connected_ch(ch)?;
+        slot.rx_open.cas(0, 1).map(|_| ()).map_err(|_| Status::Busy)
+    }
+
+    /// Close both sides and release the channel + its receive claim.
+    pub fn close(&self, ch: usize) -> Result<(), Status> {
+        self.charge_api();
+        let slot = self.connected_ch(ch)?;
+        let rx = slot.rx_ep.load() as usize;
+        slot.state
+            .transition(ch_state::CONNECTED, ch_state::FREE)
+            .map_err(|_| Status::InvalidChannel)?;
+        let _ = self.endpoints[rx].rx_channel.cas(ch as u32 + 1, 0);
+        slot.tx_open.store(0);
+        slot.rx_open.store(0);
+        Ok(())
+    }
+
+    fn channel_ready(&self, ch: usize, kind: ChannelKind) -> Result<(usize, usize), Status> {
+        let slot = self.connected_ch(ch)?;
+        let want = match kind {
+            ChannelKind::Packet => 0,
+            ChannelKind::Scalar => 1,
+            ChannelKind::State => 2,
+        };
+        if slot.kind.load() != want {
+            return Err(Status::InvalidChannel);
+        }
+        if slot.tx_open.load() == 0 || slot.rx_open.load() == 0 {
+            return Err(Status::InvalidChannel);
+        }
+        Ok((slot.tx_ep.load() as usize, slot.rx_ep.load() as usize))
+    }
+
+    /// Packet send on an open channel (non-blocking).
+    pub fn pkt_send(&self, ch: usize, data: &[u8]) -> Result<(), Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let (tx_i, rx_i) =
+                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Packet))?;
+                let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
+                let lease = self.global.with_write(|| self.lease_filled(data))?;
+                let entry = Entry::buffered(lease.index as u32, data.len() as u32, from, 0);
+                self.global.with_write(|| {
+                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
+                        unreachable!();
+                    };
+                    // Safety: global write lock held.
+                    unsafe { q.push(entry) }.map_err(|s| {
+                        self.abort_lease(lease);
+                        s
+                    })
+                })
+            }
+            BackendKind::LockFree => {
+                let (tx_i, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
+                let from = self.endpoints[tx_i].owner.load();
+                let lease = self.lease_filled(data)?;
+                let entry = Entry::buffered(lease.index as u32, data.len() as u32, from, 0);
+                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
+                    unreachable!();
+                };
+                q.push(entry).map_err(|(s, _)| {
+                    self.abort_lease(lease);
+                    s
+                })
+            }
+        }
+    }
+
+    /// Packet receive on an open channel (non-blocking). The receive
+    /// buffer is pool-allocated per the spec; this copies out and
+    /// releases it.
+    pub fn pkt_recv(&self, ch: usize, out: &mut [u8]) -> Result<usize, Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let entry = self.global.with_write(|| {
+                    let (_, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
+                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
+                        unreachable!();
+                    };
+                    // Safety: global write lock held.
+                    unsafe { q.pop() }.ok_or(Status::WouldBlock)
+                })?;
+                Ok(self.global.with_write(|| self.consume_entry(&entry, out)))
+            }
+            BackendKind::LockFree => {
+                let (_, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
+                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
+                    unreachable!();
+                };
+                let entry = q.pop()?;
+                Ok(self.consume_entry(&entry, out))
+            }
+        }
+    }
+
+    /// Scalar send (8/16/32/64-bit payloads all travel as u64).
+    pub fn sclr_send(&self, ch: usize, value: u64) -> Result<(), Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let (tx_i, rx_i) =
+                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
+                let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
+                self.global.with_write(|| {
+                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
+                        unreachable!();
+                    };
+                    // Safety: global write lock held.
+                    unsafe { q.push(Entry::scalar(value, from)) }
+                })
+            }
+            BackendKind::LockFree => {
+                let (tx_i, rx_i) = self.channel_ready(ch, ChannelKind::Scalar)?;
+                let from = self.endpoints[tx_i].owner.load();
+                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
+                    unreachable!();
+                };
+                q.push(Entry::scalar(value, from)).map_err(|(s, _)| s)
+            }
+        }
+    }
+
+    /// Scalar receive.
+    pub fn sclr_recv(&self, ch: usize) -> Result<u64, Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let (_, rx_i) =
+                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
+                self.global.with_write(|| {
+                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
+                        unreachable!();
+                    };
+                    // Safety: global write lock held.
+                    unsafe { q.pop() }.map(|e| e.scalar).ok_or(Status::WouldBlock)
+                })
+            }
+            BackendKind::LockFree => {
+                let (_, rx_i) = self.channel_ready(ch, ChannelKind::Scalar)?;
+                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
+                    unreachable!();
+                };
+                q.pop().map(|e| e.scalar)
+            }
+        }
+    }
+
+    // -- state channels (paper §7 future work) --------------------------------
+
+    /// Publish the current value on a *state* channel. Never blocks: the
+    /// NBW protocol guarantees the writer is never blocked by readers,
+    /// and the FIFO requirement is dropped (order indeterminate).
+    pub fn state_send(&self, ch: usize, value: u64) -> Result<(), Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => self.global.with_write(|| {
+                self.channel_ready(ch, ChannelKind::State)?;
+                self.channels[ch].nbw.write(value);
+                Ok(())
+            }),
+            BackendKind::LockFree => {
+                self.channel_ready(ch, ChannelKind::State)?;
+                self.channels[ch].nbw.write(value);
+                Ok(())
+            }
+        }
+    }
+
+    /// Sample the freshest value on a *state* channel. `WouldBlock` until
+    /// the first write; collisions are retried internally (NBW Safety +
+    /// Timeliness properties).
+    pub fn state_recv(&self, ch: usize) -> Result<u64, Status> {
+        self.charge_api();
+        let read = || -> Result<u64, Status> {
+            self.channel_ready(ch, ChannelKind::State)?;
+            let (v, _retries) = self.channels[ch].nbw.read();
+            v.ok_or(Status::WouldBlock)
+        };
+        match self.cfg.backend {
+            BackendKind::Locked => self.global.with_write(read),
+            BackendKind::LockFree => read(),
+        }
+    }
+
+    // -- asynchronous operations (requests, Figure 3) -------------------------
+
+    /// Start an asynchronous message send; completes via [`Self::wait_send`].
+    pub fn msg_send_i(
+        &self,
+        from: usize,
+        to: EndpointId,
+        data: &[u8],
+        priority: u8,
+    ) -> Result<RequestHandle, Status> {
+        let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
+        let h = self.requests.allocate(PendingOp::MsgSend { ep })?;
+        match self.msg_send(from, to, data, priority) {
+            Ok(()) => {
+                // Exceptional send path: RECEIVED until receipt confirmed;
+                // buffer handoff is synchronous here, so confirm at once.
+                let _ = self.requests.mark_received(h);
+                self.requests.complete(h, Status::Success);
+                Ok(h)
+            }
+            Err(s) if s.is_would_block() => Ok(h), // pending; wait re-drives
+            Err(s) => {
+                self.requests.complete(h, s);
+                Ok(h)
+            }
+        }
+    }
+
+    /// Start an asynchronous message receive; completes via
+    /// [`Self::wait_recv`].
+    pub fn msg_recv_i(&self, ep: usize) -> Result<RequestHandle, Status> {
+        self.active_ep(ep)?;
+        self.requests.allocate(PendingOp::MsgRecv { ep })
+    }
+
+    /// Drive a pending send request to completion within `timeout_ns`
+    /// (virtual ns in simulated worlds). MCAPI `wait`.
+    pub fn wait_send(
+        &self,
+        h: RequestHandle,
+        from: usize,
+        to: EndpointId,
+        data: &[u8],
+        priority: u8,
+        timeout_ns: u64,
+    ) -> Status {
+        if self.requests.is_complete(h) {
+            return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+        }
+        let deadline = W::now_ns().saturating_add(timeout_ns);
+        loop {
+            match self.msg_send(from, to, data, priority) {
+                Ok(()) => {
+                    self.requests.complete(h, Status::Success);
+                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+                }
+                Err(s) if s.is_would_block() => {
+                    if W::now_ns() >= deadline {
+                        return Status::Timeout;
+                    }
+                    W::yield_now();
+                }
+                Err(s) => {
+                    self.requests.complete(h, s);
+                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+                }
+            }
+        }
+    }
+
+    /// Drive a pending receive request within `timeout_ns`; on success
+    /// returns the byte count. MCAPI `wait`.
+    pub fn wait_recv(
+        &self,
+        h: RequestHandle,
+        out: &mut [u8],
+        timeout_ns: u64,
+    ) -> Result<usize, Status> {
+        let PendingOp::MsgRecv { ep } = self.requests.slot(h).op() else {
+            return Err(Status::InvalidRequest);
+        };
+        let deadline = W::now_ns().saturating_add(timeout_ns);
+        loop {
+            match self.msg_recv(ep, out) {
+                Ok(n) => {
+                    self.requests.complete(h, Status::Success);
+                    let _ = self.requests.reap(h);
+                    return Ok(n);
+                }
+                Err(s) if s.is_would_block() => {
+                    if W::now_ns() >= deadline {
+                        return Err(Status::Timeout);
+                    }
+                    W::yield_now();
+                }
+                Err(s) => {
+                    self.requests.complete(h, s);
+                    let _ = self.requests.reap(h);
+                    return Err(s);
+                }
+            }
+        }
+    }
+
+    /// Non-destructive test for completion. MCAPI `test`.
+    pub fn test(&self, h: RequestHandle) -> bool {
+        self.requests.is_complete(h)
+    }
+
+    /// Cancel a pending *receive* request. Sends always complete.
+    pub fn cancel(&self, h: RequestHandle) -> Result<(), Status> {
+        match self.requests.slot(h).op() {
+            PendingOp::MsgRecv { .. } | PendingOp::PktRecv { .. } => self.requests.cancel(h),
+            _ => Err(Status::InvalidRequest),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+
+    fn rt(backend: BackendKind) -> Arc<McapiRuntime<RealWorld>> {
+        McapiRuntime::new(RuntimeCfg { backend, ..Default::default() })
+    }
+
+    fn both() -> [Arc<McapiRuntime<RealWorld>>; 2] {
+        [rt(BackendKind::Locked), rt(BackendKind::LockFree)]
+    }
+
+    #[test]
+    fn endpoint_create_lookup_delete() {
+        for rt in both() {
+            let id = EndpointId::new(0, 1, 5);
+            let ep = rt.create_endpoint(id, 1).unwrap();
+            assert_eq!(rt.lookup(id), Some(ep));
+            assert_eq!(rt.create_endpoint(id, 1).unwrap_err(), Status::Busy);
+            rt.delete_endpoint(ep).unwrap();
+            assert_eq!(rt.lookup(id), None);
+        }
+    }
+
+    #[test]
+    fn message_roundtrip_both_backends() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 2, 1);
+            let ep = rt.create_endpoint(dst, 2).unwrap();
+            rt.msg_send(1, dst, b"hello", 1).unwrap();
+            assert_eq!(rt.msg_available(ep).unwrap(), 1);
+            let mut buf = [0u8; 64];
+            let n = rt.msg_recv(ep, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"hello");
+            assert_eq!(rt.msg_recv(ep, &mut buf).unwrap_err(), Status::WouldBlock);
+            assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+        }
+    }
+
+    #[test]
+    fn message_priority_order() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 0, 9);
+            let ep = rt.create_endpoint(dst, 0).unwrap();
+            rt.msg_send(0, dst, b"low", 3).unwrap();
+            rt.msg_send(0, dst, b"high", 0).unwrap();
+            let mut buf = [0u8; 8];
+            let n = rt.msg_recv(ep, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"high", "priority 0 must dequeue first");
+        }
+    }
+
+    #[test]
+    fn oversized_message_rejected() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 0, 1);
+            rt.create_endpoint(dst, 0).unwrap();
+            let big = vec![0u8; rt.cfg().buf_len + 1];
+            assert_eq!(rt.msg_send(0, dst, &big, 0).unwrap_err(), Status::MessageLimit);
+        }
+    }
+
+    #[test]
+    fn send_to_unknown_endpoint_fails() {
+        for rt in both() {
+            assert_eq!(
+                rt.msg_send(0, EndpointId::new(9, 9, 9), b"x", 0).unwrap_err(),
+                Status::InvalidEndpoint
+            );
+        }
+    }
+
+    #[test]
+    fn queue_full_returns_would_block_and_leaks_nothing() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 1);
+            let _ep = rt.create_endpoint(dst, 1).unwrap();
+            let mut sent = 0;
+            loop {
+                match rt.msg_send(0, dst, b"m", 0) {
+                    Ok(()) => sent += 1,
+                    Err(s) => {
+                        assert!(s.is_would_block(), "{s:?}");
+                        break;
+                    }
+                }
+            }
+            assert!(sent > 0);
+            // Buffers: pool must have exactly `sent` leased out.
+            assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers - sent);
+        }
+    }
+
+    #[test]
+    fn packet_channel_roundtrip() {
+        for rt in both() {
+            let a = EndpointId::new(0, 1, 1);
+            let b = EndpointId::new(0, 2, 1);
+            rt.create_endpoint(a, 1).unwrap();
+            rt.create_endpoint(b, 2).unwrap();
+            let ch = rt.connect(a, b, ChannelKind::Packet).unwrap();
+            // Not open yet.
+            assert_eq!(rt.pkt_send(ch, b"x").unwrap_err(), Status::InvalidChannel);
+            rt.open_send(ch).unwrap();
+            rt.open_recv(ch).unwrap();
+            rt.pkt_send(ch, b"packet!").unwrap();
+            let mut buf = [0u8; 16];
+            let n = rt.pkt_recv(ch, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"packet!");
+            rt.close(ch).unwrap();
+            assert_eq!(rt.pkt_send(ch, b"x").unwrap_err(), Status::InvalidChannel);
+        }
+    }
+
+    #[test]
+    fn scalar_channel_roundtrip_and_kind_check() {
+        for rt in both() {
+            let a = EndpointId::new(0, 1, 2);
+            let b = EndpointId::new(0, 2, 2);
+            rt.create_endpoint(a, 1).unwrap();
+            rt.create_endpoint(b, 2).unwrap();
+            let ch = rt.connect(a, b, ChannelKind::Scalar).unwrap();
+            rt.open_send(ch).unwrap();
+            rt.open_recv(ch).unwrap();
+            rt.sclr_send(ch, 0xDEAD_BEEF_1234).unwrap();
+            assert_eq!(rt.sclr_recv(ch).unwrap(), 0xDEAD_BEEF_1234);
+            assert_eq!(rt.sclr_recv(ch).unwrap_err(), Status::WouldBlock);
+            // Packet ops on a scalar channel are rejected.
+            assert_eq!(rt.pkt_send(ch, b"x").unwrap_err(), Status::InvalidChannel);
+        }
+    }
+
+    #[test]
+    fn rx_endpoint_cannot_be_double_connected() {
+        for rt in both() {
+            let a = EndpointId::new(0, 1, 3);
+            let b = EndpointId::new(0, 2, 3);
+            let c = EndpointId::new(0, 3, 3);
+            rt.create_endpoint(a, 1).unwrap();
+            rt.create_endpoint(b, 2).unwrap();
+            rt.create_endpoint(c, 3).unwrap();
+            let _ch = rt.connect(a, b, ChannelKind::Packet).unwrap();
+            assert_eq!(rt.connect(c, b, ChannelKind::Packet).unwrap_err(), Status::Busy);
+        }
+    }
+
+    #[test]
+    fn async_send_completes_immediately_when_room() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 7);
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            let h = rt.msg_send_i(0, dst, b"async", 0).unwrap();
+            assert!(rt.test(h));
+            assert_eq!(rt.wait_send(h, 0, dst, b"async", 0, 1_000_000), Status::Success);
+            let mut buf = [0u8; 8];
+            assert_eq!(rt.msg_recv(ep, &mut buf).unwrap(), 5);
+            assert_eq!(rt.requests_in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn async_recv_waits_for_message() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 8);
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            let h = rt.msg_recv_i(ep).unwrap();
+            let mut buf = [0u8; 8];
+            // Nothing yet: times out.
+            assert_eq!(rt.wait_recv(h, &mut buf, 0).unwrap_err(), Status::Timeout);
+            rt.msg_send(0, dst, b"late", 0).unwrap();
+            let n = rt.wait_recv(h, &mut buf, 1_000_000).unwrap();
+            assert_eq!(&buf[..n], b"late");
+            assert_eq!(rt.requests_in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn cancel_only_receives() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 9);
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            let hr = rt.msg_recv_i(ep).unwrap();
+            rt.cancel(hr).unwrap();
+            // A fresh *send* request that is already complete can't cancel.
+            let hs = rt.msg_send_i(0, dst, b"x", 0).unwrap();
+            assert_eq!(rt.cancel(hs).unwrap_err(), Status::InvalidRequest);
+            let _ = rt.wait_send(hs, 0, dst, b"x", 0, 0);
+            let mut buf = [0u8; 4];
+            let _ = rt.msg_recv(ep, &mut buf);
+        }
+    }
+
+    #[test]
+    fn fifo_order_is_preserved_per_sender() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 4);
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            for i in 0..10u8 {
+                rt.msg_send(2, dst, &[i], 0).unwrap();
+            }
+            let mut buf = [0u8; 4];
+            for i in 0..10u8 {
+                let n = rt.msg_recv(ep, &mut buf).unwrap();
+                assert_eq!((n, buf[0]), (1, i), "FIFO broken at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_channel_delivers_freshest_value() {
+        for rt in both() {
+            let a = EndpointId::new(0, 1, 11);
+            let b = EndpointId::new(0, 2, 11);
+            rt.create_endpoint(a, 1).unwrap();
+            rt.create_endpoint(b, 2).unwrap();
+            let ch = rt.connect(a, b, ChannelKind::State).unwrap();
+            rt.open_send(ch).unwrap();
+            rt.open_recv(ch).unwrap();
+            // Nothing published yet.
+            assert_eq!(rt.state_recv(ch).unwrap_err(), Status::WouldBlock);
+            // Writers never block; readers always see the newest value.
+            rt.state_send(ch, 1).unwrap();
+            rt.state_send(ch, 2).unwrap();
+            rt.state_send(ch, 3).unwrap();
+            assert_eq!(rt.state_recv(ch).unwrap(), 3);
+            // Sampling again returns the same current value (state, not FIFO).
+            assert_eq!(rt.state_recv(ch).unwrap(), 3);
+        }
+    }
+
+    #[test]
+    fn state_ops_rejected_on_fifo_channels() {
+        for rt in both() {
+            let a = EndpointId::new(0, 1, 12);
+            let b = EndpointId::new(0, 2, 12);
+            rt.create_endpoint(a, 1).unwrap();
+            rt.create_endpoint(b, 2).unwrap();
+            let ch = rt.connect(a, b, ChannelKind::Scalar).unwrap();
+            rt.open_send(ch).unwrap();
+            rt.open_recv(ch).unwrap();
+            assert_eq!(rt.state_send(ch, 1).unwrap_err(), Status::InvalidChannel);
+            assert_eq!(rt.sclr_send(ch, 1), Ok(()));
+        }
+    }
+
+    #[test]
+    fn buffer_pool_exhaustion_reports_memlimit() {
+        let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+            backend: BackendKind::LockFree,
+            pool_buffers: 2,
+            nbb_capacity: 8,
+            ..Default::default()
+        });
+        let dst = EndpointId::new(0, 1, 1);
+        rt.create_endpoint(dst, 1).unwrap();
+        rt.msg_send(0, dst, b"a", 0).unwrap();
+        rt.msg_send(0, dst, b"b", 0).unwrap();
+        assert_eq!(rt.msg_send(0, dst, b"c", 0).unwrap_err(), Status::MemLimit);
+    }
+}

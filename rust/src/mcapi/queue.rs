@@ -1,0 +1,326 @@
+//! Endpoint receive queues: the lock-based and lock-free implementations.
+//!
+//! The queue entry carries a buffer lease plus metadata (a small POD, like
+//! the paper's queue entries binding reusable message buffers). Entries
+//! move through the Figure 4 FSM in the lock-free backend; the locked
+//! backend is the reference design — a plain deque guarded by the global
+//! reader/writer lock (acquired by the *runtime*, not here).
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+
+use crate::lockfree::mem::World;
+use crate::lockfree::nbb::{InsertStatus, Nbb, ReadStatus};
+use crate::mcapi::types::{Status, PRIORITIES};
+
+/// Queue-entry FSM states (Figure 4).
+pub mod entry_state {
+    /// No buffer associated.
+    pub const FREE: u32 = 0;
+    /// Entry claimed, buffer not yet linked.
+    pub const RESERVED: u32 = 1;
+    /// Buffer linked and filled.
+    pub const ALLOCATED: u32 = 2;
+    /// At the head, being read by the receiver.
+    pub const RECEIVED: u32 = 3;
+}
+
+/// One queued message/packet: lease metadata (POD; fits an NBB slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Entry {
+    /// Buffer index in the shared partition.
+    pub buf_index: u32,
+    /// Payload length in bytes.
+    pub len: u32,
+    /// Sender's dense node slot (producer lane).
+    pub from_node: u32,
+    /// Priority lane it was sent on.
+    pub priority: u8,
+    /// Scalar payload when the entry carries a scalar (no buffer lease).
+    pub scalar: u64,
+}
+
+impl Entry {
+    /// Entry carrying a pooled buffer.
+    pub fn buffered(buf_index: u32, len: u32, from_node: u32, priority: u8) -> Self {
+        Entry { buf_index, len, from_node, priority, scalar: 0 }
+    }
+
+    /// Entry carrying an inline scalar.
+    pub fn scalar(value: u64, from_node: u32) -> Self {
+        Entry { buf_index: u32::MAX, len: 0, from_node, priority: 0, scalar: value }
+    }
+
+    /// True when this entry owns a pooled buffer.
+    pub fn has_buffer(&self) -> bool {
+        self.buf_index != u32::MAX
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-based reference queue.
+// ---------------------------------------------------------------------------
+
+/// Priority deques guarded externally by the runtime's global RwLock —
+/// mirrors the reference implementation where the shared-memory database
+/// is one lock domain. The `UnsafeCell` is sound because every access goes
+/// through the runtime while it holds the global lock (asserted in debug
+/// builds via the lock's own state).
+pub struct LockedQueue {
+    lanes: UnsafeCell<[VecDeque<Entry>; PRIORITIES]>,
+    capacity: usize,
+}
+
+unsafe impl Send for LockedQueue {}
+unsafe impl Sync for LockedQueue {}
+
+impl LockedQueue {
+    /// Queue with `capacity` entries per priority lane.
+    pub fn new(capacity: usize) -> Self {
+        LockedQueue { lanes: UnsafeCell::new(Default::default()), capacity }
+    }
+
+    /// Push under the global write lock.
+    ///
+    /// # Safety
+    /// Caller must hold the runtime's global write lock.
+    pub unsafe fn push(&self, e: Entry) -> Result<(), Status> {
+        let lanes = &mut *self.lanes.get();
+        let lane = &mut lanes[e.priority as usize % PRIORITIES];
+        if lane.len() >= self.capacity {
+            return Err(Status::WouldBlock);
+        }
+        lane.push_back(e);
+        Ok(())
+    }
+
+    /// Pop the highest-priority entry under the global write lock.
+    ///
+    /// # Safety
+    /// Caller must hold the runtime's global write lock.
+    pub unsafe fn pop(&self) -> Option<Entry> {
+        let lanes = &mut *self.lanes.get();
+        lanes.iter_mut().find_map(|l| l.pop_front())
+    }
+
+    /// Entry count under the global (at least read) lock.
+    ///
+    /// # Safety
+    /// Caller must hold the runtime's global lock.
+    pub unsafe fn len(&self) -> usize {
+        (*self.lanes.get()).iter().map(|l| l.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free queue: composed NBB lanes.
+// ---------------------------------------------------------------------------
+
+/// Lock-free receive queue: one SPSC NBB per (priority, producer-node)
+/// lane, drained priority-major with a rotating fairness cursor — the
+/// NBB composition Kim et al. describe for fan-in patterns.
+pub struct LockFreeQueue<W: World> {
+    /// `lanes[priority][producer]`.
+    lanes: Vec<Vec<Nbb<Entry, W>>>,
+    producers: usize,
+    /// Receiver-private rotation cursor (single-consumer by MCAPI spec).
+    cursor: UnsafeCell<usize>,
+}
+
+unsafe impl<W: World> Send for LockFreeQueue<W> {}
+unsafe impl<W: World> Sync for LockFreeQueue<W> {}
+
+impl<W: World> LockFreeQueue<W> {
+    /// Queue with `producers` lanes per priority, each of `capacity`.
+    pub fn new(producers: usize, capacity: usize) -> Self {
+        LockFreeQueue {
+            lanes: (0..PRIORITIES)
+                .map(|_| (0..producers).map(|_| Nbb::new(capacity)).collect())
+                .collect(),
+            producers,
+            cursor: UnsafeCell::new(0),
+        }
+    }
+
+    /// Producer-side insert (wait-free except the bounded ring).
+    pub fn push(&self, e: Entry) -> Result<(), (Status, Entry)> {
+        let lane = &self.lanes[e.priority as usize % PRIORITIES][e.from_node as usize % self.producers];
+        lane.insert(e).map_err(|(s, e)| {
+            let status = match s {
+                InsertStatus::Full => Status::WouldBlock,
+                InsertStatus::FullButConsumerReading => Status::WouldBlockPeerActive,
+            };
+            (status, e)
+        })
+    }
+
+    /// Consumer-side pop: scan priorities high-to-low, rotating across
+    /// producer lanes for fairness. Single consumer only.
+    pub fn pop(&self) -> Result<Entry, Status> {
+        let cursor = unsafe { &mut *self.cursor.get() };
+        let mut saw_peer_active = false;
+        for prio in 0..PRIORITIES {
+            for i in 0..self.producers {
+                let lane = (*cursor + i) % self.producers;
+                match self.lanes[prio][lane].read() {
+                    ReadStatus::Ok(e) => {
+                        *cursor = (lane + 1) % self.producers;
+                        return Ok(e);
+                    }
+                    ReadStatus::EmptyButProducerInserting => saw_peer_active = true,
+                    ReadStatus::Empty => {}
+                }
+            }
+        }
+        Err(if saw_peer_active {
+            Status::WouldBlockPeerActive
+        } else {
+            Status::WouldBlock
+        })
+    }
+
+    /// Total buffered entries (approximate).
+    pub fn len(&self) -> usize {
+        self.lanes.iter().flatten().map(|n| n.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::Arc;
+
+    type LfQueue = LockFreeQueue<RealWorld>;
+
+    #[test]
+    fn entry_pod_size_is_cacheline_friendly() {
+        assert!(std::mem::size_of::<Entry>() <= 24);
+    }
+
+    #[test]
+    fn scalar_entries_have_no_buffer() {
+        let e = Entry::scalar(42, 1);
+        assert!(!e.has_buffer());
+        assert!(Entry::buffered(0, 10, 1, 0).has_buffer());
+    }
+
+    #[test]
+    fn locked_queue_priority_order() {
+        let q = LockedQueue::new(8);
+        unsafe {
+            q.push(Entry::buffered(1, 1, 0, 2)).unwrap();
+            q.push(Entry::buffered(2, 1, 0, 0)).unwrap();
+            q.push(Entry::buffered(3, 1, 0, 1)).unwrap();
+            assert_eq!(q.pop().unwrap().buf_index, 2); // prio 0 first
+            assert_eq!(q.pop().unwrap().buf_index, 3);
+            assert_eq!(q.pop().unwrap().buf_index, 1);
+            assert!(q.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn locked_queue_capacity_per_lane() {
+        let q = LockedQueue::new(2);
+        unsafe {
+            q.push(Entry::buffered(0, 1, 0, 0)).unwrap();
+            q.push(Entry::buffered(1, 1, 0, 0)).unwrap();
+            assert_eq!(q.push(Entry::buffered(2, 1, 0, 0)), Err(Status::WouldBlock));
+            // Other lanes unaffected.
+            q.push(Entry::buffered(3, 1, 0, 1)).unwrap();
+            assert_eq!(q.len(), 3);
+        }
+    }
+
+    #[test]
+    fn lockfree_fifo_per_producer() {
+        let q = LfQueue::new(2, 8);
+        q.push(Entry::buffered(10, 1, 0, 0)).unwrap();
+        q.push(Entry::buffered(11, 1, 0, 0)).unwrap();
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert_eq!((a.buf_index, b.buf_index), (10, 11), "per-producer FIFO");
+        assert_eq!(q.pop(), Err(Status::WouldBlock));
+    }
+
+    #[test]
+    fn lockfree_priority_precedence() {
+        let q = LfQueue::new(1, 8);
+        q.push(Entry::buffered(1, 1, 0, 3)).unwrap();
+        q.push(Entry::buffered(2, 1, 0, 0)).unwrap();
+        assert_eq!(q.pop().unwrap().buf_index, 2);
+        assert_eq!(q.pop().unwrap().buf_index, 1);
+    }
+
+    #[test]
+    fn lockfree_fairness_rotates_producers() {
+        let q = LfQueue::new(2, 8);
+        for i in 0..4 {
+            q.push(Entry::buffered(100 + i, 1, 0, 0)).unwrap();
+            q.push(Entry::buffered(200 + i, 1, 1, 0)).unwrap();
+        }
+        let mut from0 = 0;
+        let mut from1 = 0;
+        for _ in 0..4 {
+            let e = q.pop().unwrap();
+            if e.buf_index >= 200 {
+                from1 += 1;
+            } else {
+                from0 += 1;
+            }
+        }
+        assert!(from0 >= 1 && from1 >= 1, "rotation starves a producer");
+    }
+
+    #[test]
+    fn lockfree_full_lane_reports_wouldblock() {
+        let q = LfQueue::new(1, 2);
+        q.push(Entry::buffered(0, 1, 0, 0)).unwrap();
+        q.push(Entry::buffered(1, 1, 0, 0)).unwrap();
+        let (status, back) = q.push(Entry::buffered(2, 1, 0, 0)).unwrap_err();
+        assert_eq!(status, Status::WouldBlock);
+        assert_eq!(back.buf_index, 2);
+    }
+
+    #[test]
+    fn lockfree_mpsc_stress() {
+        const PER: u64 = 30_000;
+        let q = Arc::new(LfQueue::new(2, 32));
+        let producers: Vec<_> = (0..2u32)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        let mut e = Entry::buffered(i as u32, 8, p, 0);
+                        e.scalar = i;
+                        loop {
+                            match q.push(e) {
+                                Ok(()) => break,
+                                Err((_, back)) => {
+                                    e = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut next = [0u64; 2];
+        let mut got = 0;
+        while got < 2 * PER {
+            if let Ok(e) = q.pop() {
+                let lane = e.from_node as usize;
+                assert_eq!(e.scalar, next[lane], "per-producer FIFO violated");
+                next[lane] += 1;
+                got += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(q.len(), 0);
+    }
+}

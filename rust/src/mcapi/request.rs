@@ -1,0 +1,315 @@
+//! Asynchronous request objects (Figure 3).
+//!
+//! Every non-blocking MCAPI operation (`*_i`) allocates a request from a
+//! fixed pool. In the paper's refactoring the pool allocator is the
+//! lock-free **bit set** (step 3) and the per-request status booleans
+//! became the Figure 3 FSM:
+//!
+//! ```text
+//! FREE -> VALID -> {COMPLETED | RECEIVED -> COMPLETED | CANCELLED} -> FREE
+//! ```
+//!
+//! `RECEIVED` is the exceptional asynchronous-send state: the request is
+//! held until the receive side confirms buffer ownership transfer.
+
+use crate::lockfree::bitset::BitSet;
+use crate::lockfree::fsm::AtomicFsm;
+use crate::lockfree::mem::{Atom32, World};
+use crate::mcapi::types::Status;
+
+/// Figure 3 FSM states.
+pub mod request_state {
+    /// Available for allocation.
+    pub const FREE: u32 = 0;
+    /// Allocated; operation pending.
+    pub const VALID: u32 = 1;
+    /// Async send landed; awaiting buffer-receipt confirmation.
+    pub const RECEIVED: u32 = 2;
+    /// Operation finished (success or error recorded).
+    pub const COMPLETED: u32 = 3;
+    /// Receive cancelled (sends always complete).
+    pub const CANCELLED: u32 = 4;
+}
+use request_state::*;
+
+/// What a pending request is waiting to do (re-driven by `wait`/`test`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PendingOp {
+    /// Connectionless message send to endpoint table slot.
+    MsgSend { ep: usize },
+    /// Connectionless message receive from endpoint table slot.
+    MsgRecv { ep: usize },
+    /// Packet send on channel table slot.
+    PktSend { ch: usize },
+    /// Packet receive on channel table slot.
+    PktRecv { ch: usize },
+    /// Nothing (slot idle).
+    None,
+}
+
+/// Handle to a pool slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestHandle(pub usize);
+
+/// One pool slot: FSM + operation descriptor + completion record.
+pub struct RequestSlot<W: World> {
+    /// Figure 3 state machine.
+    pub fsm: AtomicFsm<W>,
+    /// Operation to re-drive (encoded; see [`PendingOp`]).
+    op_kind: W::U32,
+    op_arg: W::U32,
+    /// Completion status (valid once COMPLETED).
+    result: W::U32,
+}
+
+impl<W: World> RequestSlot<W> {
+    fn new() -> Self {
+        RequestSlot {
+            fsm: AtomicFsm::new(FREE),
+            op_kind: W::U32::new(0),
+            op_arg: W::U32::new(0),
+            result: W::U32::new(0),
+        }
+    }
+
+    fn set_op(&self, op: PendingOp) {
+        let (k, a) = encode(op);
+        self.op_kind.store(k);
+        self.op_arg.store(a);
+    }
+
+    /// The operation this request re-drives.
+    pub fn op(&self) -> PendingOp {
+        decode(self.op_kind.load(), self.op_arg.load())
+    }
+}
+
+fn encode(op: PendingOp) -> (u32, u32) {
+    match op {
+        PendingOp::None => (0, 0),
+        PendingOp::MsgSend { ep } => (1, ep as u32),
+        PendingOp::MsgRecv { ep } => (2, ep as u32),
+        PendingOp::PktSend { ch } => (3, ch as u32),
+        PendingOp::PktRecv { ch } => (4, ch as u32),
+    }
+}
+
+fn decode(k: u32, a: u32) -> PendingOp {
+    match k {
+        1 => PendingOp::MsgSend { ep: a as usize },
+        2 => PendingOp::MsgRecv { ep: a as usize },
+        3 => PendingOp::PktSend { ch: a as usize },
+        4 => PendingOp::PktRecv { ch: a as usize },
+        _ => PendingOp::None,
+    }
+}
+
+fn encode_status(s: Status) -> u32 {
+    match s {
+        Status::Success => 0,
+        Status::Timeout => 1,
+        Status::Cancelled => 2,
+        Status::MemLimit => 3,
+        Status::MessageLimit => 4,
+        _ => 5,
+    }
+}
+
+fn decode_status(v: u32) -> Status {
+    match v {
+        0 => Status::Success,
+        1 => Status::Timeout,
+        2 => Status::Cancelled,
+        3 => Status::MemLimit,
+        4 => Status::MessageLimit,
+        _ => Status::InvalidRequest,
+    }
+}
+
+/// The request pool: bit-set allocator over FSM slots.
+pub struct RequestPool<W: World> {
+    alloc: BitSet<W>,
+    slots: Vec<RequestSlot<W>>,
+}
+
+impl<W: World> RequestPool<W> {
+    /// Pool of `cap` requests.
+    pub fn new(cap: usize) -> Self {
+        RequestPool { alloc: BitSet::new(cap), slots: (0..cap).map(|_| RequestSlot::new()).collect() }
+    }
+
+    /// Allocate a request for `op`; FREE -> VALID.
+    pub fn allocate(&self, op: PendingOp) -> Result<RequestHandle, Status> {
+        let idx = self.alloc.alloc().ok_or(Status::Exhausted)?;
+        let slot = &self.slots[idx];
+        // The bit set grants exclusive ownership, so the slot must be FREE.
+        slot.fsm.transition_exact(FREE, VALID);
+        slot.set_op(op);
+        Ok(RequestHandle(idx))
+    }
+
+    /// Slot accessor.
+    pub fn slot(&self, h: RequestHandle) -> &RequestSlot<W> {
+        &self.slots[h.0]
+    }
+
+    /// Mark an async-send request as landed-awaiting-confirmation
+    /// (VALID -> RECEIVED), the paper's exceptional send path.
+    pub fn mark_received(&self, h: RequestHandle) -> Result<(), u32> {
+        self.slots[h.0].fsm.transition(VALID, RECEIVED)
+    }
+
+    /// Complete a request with `status` (VALID|RECEIVED -> COMPLETED).
+    pub fn complete(&self, h: RequestHandle, status: Status) {
+        let slot = &self.slots[h.0];
+        slot.result.store(encode_status(status));
+        if slot.fsm.transition(VALID, COMPLETED).is_err() {
+            slot.fsm.transition_exact(RECEIVED, COMPLETED);
+        }
+    }
+
+    /// Cancel a pending receive (VALID -> CANCELLED -> FREE). Sends cannot
+    /// be cancelled (they always complete) — callers enforce op kind.
+    pub fn cancel(&self, h: RequestHandle) -> Result<(), Status> {
+        let slot = &self.slots[h.0];
+        slot.fsm
+            .transition(VALID, CANCELLED)
+            .map_err(|_| Status::InvalidRequest)?;
+        slot.result.store(encode_status(Status::Cancelled));
+        slot.set_op(PendingOp::None);
+        slot.fsm.transition_exact(CANCELLED, FREE);
+        self.alloc.free(h.0);
+        Ok(())
+    }
+
+    /// Reap a COMPLETED request: read its status and return the slot to
+    /// the pool (COMPLETED -> FREE).
+    pub fn reap(&self, h: RequestHandle) -> Result<Status, Status> {
+        let slot = &self.slots[h.0];
+        slot.fsm
+            .transition(COMPLETED, FREE)
+            .map_err(|_| Status::InvalidRequest)?;
+        let status = decode_status(slot.result.load());
+        slot.set_op(PendingOp::None);
+        self.alloc.free(h.0);
+        Ok(status)
+    }
+
+    /// Non-destructive completion test.
+    pub fn is_complete(&self, h: RequestHandle) -> bool {
+        self.slots[h.0].fsm.state() == COMPLETED
+    }
+
+    /// Requests currently allocated (VALID/RECEIVED/COMPLETED).
+    pub fn in_use(&self) -> usize {
+        self.alloc.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::Arc;
+
+    type Pool = RequestPool<RealWorld>;
+
+    #[test]
+    fn lifecycle_free_valid_completed_free() {
+        let p = Pool::new(4);
+        let h = p.allocate(PendingOp::MsgRecv { ep: 3 }).unwrap();
+        assert_eq!(p.slot(h).op(), PendingOp::MsgRecv { ep: 3 });
+        assert!(!p.is_complete(h));
+        p.complete(h, Status::Success);
+        assert!(p.is_complete(h));
+        assert_eq!(p.reap(h), Ok(Status::Success));
+        assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    fn exceptional_send_path_via_received() {
+        let p = Pool::new(2);
+        let h = p.allocate(PendingOp::MsgSend { ep: 0 }).unwrap();
+        p.mark_received(h).unwrap();
+        assert_eq!(p.slot(h).fsm.state(), RECEIVED);
+        p.complete(h, Status::Success);
+        assert_eq!(p.reap(h), Ok(Status::Success));
+    }
+
+    #[test]
+    fn cancel_pending_receive() {
+        let p = Pool::new(2);
+        let h = p.allocate(PendingOp::MsgRecv { ep: 1 }).unwrap();
+        p.cancel(h).unwrap();
+        assert_eq!(p.in_use(), 0);
+        // Slot is reusable immediately.
+        let h2 = p.allocate(PendingOp::MsgRecv { ep: 2 }).unwrap();
+        assert_eq!(h2.0, h.0, "lowest slot reused");
+    }
+
+    #[test]
+    fn cancel_completed_request_fails() {
+        let p = Pool::new(2);
+        let h = p.allocate(PendingOp::MsgRecv { ep: 0 }).unwrap();
+        p.complete(h, Status::Success);
+        assert_eq!(p.cancel(h), Err(Status::InvalidRequest));
+        let _ = p.reap(h);
+    }
+
+    #[test]
+    fn reap_before_completion_fails() {
+        let p = Pool::new(2);
+        let h = p.allocate(PendingOp::MsgSend { ep: 0 }).unwrap();
+        assert_eq!(p.reap(h), Err(Status::InvalidRequest));
+        p.complete(h, Status::Timeout);
+        assert_eq!(p.reap(h), Ok(Status::Timeout));
+    }
+
+    #[test]
+    fn pool_exhaustion() {
+        let p = Pool::new(2);
+        let _a = p.allocate(PendingOp::None).unwrap();
+        let _b = p.allocate(PendingOp::None).unwrap();
+        assert_eq!(p.allocate(PendingOp::None).unwrap_err(), Status::Exhausted);
+    }
+
+    #[test]
+    fn concurrent_allocation_is_exclusive() {
+        let p = Arc::new(Pool::new(64));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    for _ in 0..16 {
+                        got.push(p.allocate(PendingOp::None).unwrap().0);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut all: Vec<usize> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 64, "duplicate request slots handed out");
+    }
+
+    #[test]
+    fn status_roundtrip_through_slot() {
+        for s in [
+            Status::Success,
+            Status::Timeout,
+            Status::Cancelled,
+            Status::MemLimit,
+            Status::MessageLimit,
+        ] {
+            let p = Pool::new(1);
+            let h = p.allocate(PendingOp::None).unwrap();
+            p.complete(h, s);
+            assert_eq!(p.reap(h), Ok(s));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! MCAPI identifiers, status codes and configuration.
+
+/// Maximum message priority lanes (MCAPI priorities 0 = highest .. 3).
+pub const PRIORITIES: usize = 4;
+
+/// Status codes (the subset of MCAPI's `mcapi_status_t` this runtime
+/// produces, plus the Table 1 would-block distinctions surfaced to the
+/// retry layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Operation completed.
+    Success,
+    /// Queue full / empty right now; yield and retry (Table 1).
+    WouldBlock,
+    /// Queue full/empty but the peer is mid-operation; retry immediately.
+    WouldBlockPeerActive,
+    /// Buffer pool exhausted (MCAPI_ERR_MEM_LIMIT).
+    MemLimit,
+    /// Endpoint id invalid or not active.
+    InvalidEndpoint,
+    /// Channel handle invalid or in the wrong state.
+    InvalidChannel,
+    /// Endpoint already connected / port in use.
+    Busy,
+    /// Payload larger than the configured buffer size.
+    MessageLimit,
+    /// Request handle invalid or not pending.
+    InvalidRequest,
+    /// Wait timed out.
+    Timeout,
+    /// Request was cancelled.
+    Cancelled,
+    /// Capacity exhausted (endpoints, channels or requests).
+    Exhausted,
+}
+
+impl Status {
+    /// True for the two retryable would-block cases.
+    pub fn is_would_block(self) -> bool {
+        matches!(self, Status::WouldBlock | Status::WouldBlockPeerActive)
+    }
+}
+
+/// Endpoint identifier: `(domain, node, port)` per the MCAPI spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EndpointId {
+    /// Domain id.
+    pub domain: u16,
+    /// Node id within the domain.
+    pub node: u16,
+    /// Port number on the node.
+    pub port: u16,
+}
+
+impl EndpointId {
+    /// Construct.
+    pub fn new(domain: u16, node: u16, port: u16) -> Self {
+        EndpointId { domain, node, port }
+    }
+}
+
+impl std::fmt::Display for EndpointId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}", self.domain, self.node, self.port)
+    }
+}
+
+/// Channel payload kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelKind {
+    /// Connected packet channel (pool-allocated receive buffers).
+    Packet,
+    /// Connected scalar channel (8/16/32/64-bit values).
+    Scalar,
+    /// Connected **state** channel (paper §7 future work): delivers "the
+    /// current value" via the NBW protocol — order indeterminate, reads
+    /// never block writes, FIFO requirement dropped.
+    State,
+}
+
+/// Runtime capacities and backend selection.
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeCfg {
+    /// Lock-based baseline or lock-free refactoring.
+    pub backend: BackendKind,
+    /// Endpoint table size.
+    pub max_endpoints: usize,
+    /// Channel table size.
+    pub max_channels: usize,
+    /// Dense node slots (producer lanes per endpoint).
+    pub max_nodes: usize,
+    /// Request pool size.
+    pub max_requests: usize,
+    /// Buffers in the shared pool.
+    pub pool_buffers: usize,
+    /// Bytes per pooled buffer (max message/packet size).
+    pub buf_len: usize,
+    /// NBB ring capacity per lane (lock-free backend).
+    pub nbb_capacity: usize,
+    /// CPU overhead charged per API call in simulated worlds (ns).
+    pub api_overhead_ns: u64,
+}
+
+impl Default for RuntimeCfg {
+    fn default() -> Self {
+        RuntimeCfg {
+            backend: BackendKind::LockFree,
+            max_endpoints: 64,
+            max_channels: 32,
+            max_nodes: 8,
+            max_requests: 256,
+            pool_buffers: 512,
+            buf_len: 256,
+            nbb_capacity: 16,
+            api_overhead_ns: 150,
+        }
+    }
+}
+
+impl RuntimeCfg {
+    /// Default configuration with the given backend.
+    pub fn with_backend(backend: BackendKind) -> Self {
+        RuntimeCfg { backend, ..Default::default() }
+    }
+}
+
+/// Which data-path implementation the runtime uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Global reader/writer lock over one kernel lock (Figure 1 baseline).
+    Locked,
+    /// NBB / bit-set / FSM refactoring (Figure 2).
+    LockFree,
+}
+
+impl BackendKind {
+    /// Parse from CLI/config text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "locked" | "lock-based" | "baseline" => Some(Self::Locked),
+            "lockfree" | "lock-free" | "nbb" => Some(Self::LockFree),
+            _ => None,
+        }
+    }
+
+    /// Stable report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Locked => "locked",
+            Self::LockFree => "lockfree",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_id_display_and_ord() {
+        let a = EndpointId::new(0, 1, 2);
+        assert_eq!(a.to_string(), "0:1:2");
+        assert!(a < EndpointId::new(0, 1, 3));
+        assert!(a < EndpointId::new(1, 0, 0));
+    }
+
+    #[test]
+    fn status_would_block_classification() {
+        assert!(Status::WouldBlock.is_would_block());
+        assert!(Status::WouldBlockPeerActive.is_would_block());
+        assert!(!Status::Success.is_would_block());
+        assert!(!Status::MemLimit.is_would_block());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(BackendKind::parse("locked"), Some(BackendKind::Locked));
+        assert_eq!(BackendKind::parse("lock-free"), Some(BackendKind::LockFree));
+        assert_eq!(BackendKind::parse("x"), None);
+    }
+
+    #[test]
+    fn default_cfg_sane() {
+        let c = RuntimeCfg::default();
+        assert!(c.max_endpoints > 0 && c.pool_buffers > 0 && c.nbb_capacity > 0);
+        assert!(c.buf_len >= 64, "must fit the paper's 24-byte messages");
+    }
+}

@@ -1,0 +1,177 @@
+//! Native Mean Value Analysis of the paper's QPN (closed network with a
+//! delay station — the cores — and one FIFO queueing station — the
+//! memory bus).
+//!
+//! Mirrors `python/compile/kernels/ref.py::mva_ref`; the unit tests pin
+//! both to the same closed forms so the artifact cross-check in
+//! [`super::qpn`] is meaningful.
+
+/// Workload parameters for one message type (nanoseconds), matching the
+/// L2 model's calibration (python/compile/model.py DEFAULTS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    /// Memory operations (cache-line touches) per message exchange.
+    pub nops: f64,
+    /// Per-core think time per message (ns). The Figure 6 grid scales
+    /// this with the core count so the system target rate is constant.
+    pub z: f64,
+    /// On-core cache hit cost (ns).
+    pub thit: f64,
+    /// Main-memory service time per miss (ns).
+    pub tmem: f64,
+}
+
+impl Workload {
+    /// The paper's "message" workload.
+    pub fn message() -> Self {
+        Workload { nops: 52.0, z: 1300.0, thit: 2.0, tmem: 60.0 }
+    }
+
+    /// The paper's "packet" workload.
+    pub fn packet() -> Self {
+        Workload { nops: 60.0, z: 1400.0, thit: 2.0, tmem: 60.0 }
+    }
+
+    /// The paper's "scalar" workload.
+    pub fn scalar() -> Self {
+        Workload { nops: 24.0, z: 900.0, thit: 2.0, tmem: 60.0 }
+    }
+
+    /// By-name lookup (message | packet | scalar).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "message" => Some(Self::message()),
+            "packet" => Some(Self::packet()),
+            "scalar" => Some(Self::scalar()),
+            _ => None,
+        }
+    }
+
+    /// MVA station demands at cache hit rate `h`:
+    /// `(d_think, d_bus)` in ns per message.
+    pub fn demands(&self, h: f64) -> (f64, f64) {
+        (self.z + self.nops * h * self.thit, self.nops * (1.0 - h) * self.tmem)
+    }
+
+    /// The workload's target rate for `cores` (msgs/s): one message per
+    /// `z/cores` ns system-wide — Figure 6's 100% line (z already scaled).
+    pub fn target_rate(&self, cores: u32) -> f64 {
+        cores as f64 / self.z * 1e9
+    }
+}
+
+/// MVA solution for one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MvaResult {
+    /// Throughput (messages per second).
+    pub throughput: f64,
+    /// Memory-bus utilization in [0, 1].
+    pub utilization: f64,
+    /// Fraction of the target rate achieved.
+    pub target_fraction: f64,
+    /// Mean bus queue length.
+    pub queue_len: f64,
+}
+
+/// Exact MVA for `cores` customers.
+pub fn mva(w: &Workload, h: f64, cores: u32) -> MvaResult {
+    assert!((0.0..=1.0).contains(&h), "hit rate in [0,1]");
+    assert!(cores >= 1);
+    let (d_think, d_bus) = w.demands(h);
+    let mut q = 0.0f64;
+    let mut x = 0.0f64;
+    for n in 1..=cores {
+        let r_bus = d_bus * (1.0 + q);
+        x = n as f64 / (d_think + r_bus);
+        q = x * r_bus;
+    }
+    let throughput = x * 1e9;
+    MvaResult {
+        throughput,
+        utilization: (x * d_bus).clamp(0.0, 1.0),
+        target_fraction: throughput / w.target_rate(cores),
+        queue_len: q,
+    }
+}
+
+/// The theoretical maximum exchange rate (msgs/s) the model admits for a
+/// workload at hit rate `h`: pure memory/cache transaction time, no
+/// queueing, no think time — the paper's 630 k msgs/s figure.
+pub fn theoretical_max(w: &Workload, h: f64) -> f64 {
+    let per_msg = w.nops * (h * w.thit + (1.0 - h) * w.tmem);
+    1e9 / per_msg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_customer_closed_form() {
+        // X = 1/(d_think + d_bus) with no queueing.
+        let w = Workload::message();
+        let r = mva(&w, 0.9, 1);
+        let (dt, db) = w.demands(0.9);
+        assert!((r.throughput - 1e9 / (dt + db)).abs() < 1.0);
+        assert!((r.utilization - db / (dt + db)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bus_demand_is_delay_only() {
+        let w = Workload { nops: 10.0, z: 500.0, thit: 2.0, tmem: 60.0 };
+        let r = mva(&w, 1.0, 4);
+        // d_bus = 0: X = n / d_think exactly, utilization 0.
+        assert!((r.throughput - 4.0 / 520.0 * 1e9).abs() < 1.0);
+        assert_eq!(r.utilization, 0.0);
+    }
+
+    #[test]
+    fn utilization_monotone_in_cores_and_bounded() {
+        let w = Workload::message();
+        let mut last = 0.0;
+        for c in 1..=8 {
+            let r = mva(&w, 0.6, c);
+            assert!(r.utilization >= last - 1e-12);
+            assert!(r.utilization <= 1.0);
+            last = r.utilization;
+        }
+    }
+
+    #[test]
+    fn throughput_increases_with_hit_rate() {
+        let w = Workload::packet();
+        let mut last = 0.0;
+        for i in 0..=10 {
+            let r = mva(&w, i as f64 / 10.0, 2);
+            assert!(r.throughput > last);
+            last = r.throughput;
+        }
+    }
+
+    #[test]
+    fn calibration_matches_paper_630k() {
+        // Paper Section 5: ~630,000 messages/s theoretical maximum
+        // (memory transactions only, at the reference hit rate).
+        let max = theoretical_max(&Workload::message(), 0.5);
+        assert!(
+            (500_000.0..800_000.0).contains(&max),
+            "theoretical max {max} out of the paper's band"
+        );
+    }
+
+    #[test]
+    fn workloads_ordering() {
+        let m = Workload::message();
+        let p = Workload::packet();
+        let s = Workload::scalar();
+        assert!(s.nops < m.nops && m.nops <= p.nops);
+        assert_eq!(Workload::by_name("scalar"), Some(s));
+        assert_eq!(Workload::by_name("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "hit rate")]
+    fn bad_hit_rate_rejected() {
+        mva(&Workload::message(), 1.5, 1);
+    }
+}

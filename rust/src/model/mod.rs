@@ -1,0 +1,23 @@
+//! The Section 5 performance model, Rust side.
+//!
+//! Two solvers, cross-checked against each other and against the paper:
+//!
+//! * [`analytic`] — native Mean Value Analysis of the closed network
+//!   (cores = delay station, shared memory bus = FIFO queue). Used as an
+//!   always-available fallback and as the cross-check for the artifact.
+//! * [`qpn`] — executes the JAX/Pallas-authored model that
+//!   `python/compile/aot.py` lowered to `artifacts/*.hlo.txt`, via the
+//!   PJRT CPU client. This is the L2/L1 compute path: the discrete-time
+//!   QPN sweep (Figure 6) and the batched MVA kernel.
+//! * [`stopcrit`] — the paper's refactoring stop criterion: compare the
+//!   measured lock-free exchange latency against the model's theoretical
+//!   minimum; refactoring may stop when the residual gap is explained by
+//!   CPU cost, not locking (Section 5's 7 µs vs 0.63 µs discussion).
+
+pub mod analytic;
+pub mod qpn;
+pub mod stopcrit;
+
+pub use analytic::{MvaResult, Workload};
+pub use qpn::{Fig6Point, QpnModel};
+pub use stopcrit::{stop_criterion, StopVerdict};

@@ -1,0 +1,204 @@
+//! The AOT model bridge: run the JAX/Pallas-authored QPN sweep and MVA
+//! solver from Rust via PJRT.
+//!
+//! Artifact contract (python/compile/aot.py): both modules take six
+//! `f32[256]` vectors `(h, ncores, nops, z, thit, tmem)` and return a
+//! tuple of `f32[256]` vectors — `(X, U, F)` for the sweep,
+//! `(X, U, F, Q)` for MVA. The Figure 6 grid builder below mirrors
+//! `model.figure6_grid` (including the per-core think-time scaling).
+
+use crate::model::analytic::Workload;
+use crate::runtime::{artifact_dir, ArtifactSpec, Executable, F32Input, PjrtRuntime};
+use crate::{Error, Result};
+
+/// Batch size the artifacts were built for.
+pub const BATCH: usize = 256;
+
+/// One Figure 6 grid point with model outputs.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig6Point {
+    /// Cache hit rate.
+    pub hit_rate: f64,
+    /// Core count.
+    pub cores: u32,
+    /// Throughput (msgs/s).
+    pub throughput: f64,
+    /// Bus utilization.
+    pub utilization: f64,
+    /// Fraction of the target rate.
+    pub target_fraction: f64,
+}
+
+/// Loaded AOT model executables.
+pub struct QpnModel {
+    mva: Executable,
+    sweep: Option<Executable>,
+}
+
+impl QpnModel {
+    /// Load and compile the artifacts (requires `make artifacts`).
+    pub fn load(rt: &PjrtRuntime) -> Result<Self> {
+        let dir = artifact_dir().ok_or_else(|| {
+            Error::Runtime("artifacts/ not found — run `make artifacts`".into())
+        })?;
+        let mva = rt.load_hlo_text(dir.join(ArtifactSpec::MvaSolver.file_name()))?;
+        // The sweep is optional (heavier artifact); fall back gracefully.
+        let sweep_path = dir.join(ArtifactSpec::QpnSweep.file_name());
+        let sweep =
+            if sweep_path.exists() { Some(rt.load_hlo_text(sweep_path)?) } else { None };
+        Ok(QpnModel { mva, sweep })
+    }
+
+    /// True when the discrete-time sweep artifact is available.
+    pub fn has_sweep(&self) -> bool {
+        self.sweep.is_some()
+    }
+
+    fn grid(w: &Workload, cores: &[u32], hits: &[f64]) -> (Vec<f32>, [Vec<f32>; 5], usize) {
+        let mut h = Vec::new();
+        let mut nc = Vec::new();
+        let mut z = Vec::new();
+        for &c in cores {
+            for &hh in hits {
+                h.push(hh as f32);
+                nc.push(c as f32);
+                // Per-core think time scales with core count (constant
+                // system demand) — must match model.figure6_grid.
+                z.push((w.z * c as f64) as f32);
+            }
+        }
+        let valid = h.len();
+        assert!(valid <= BATCH, "grid larger than artifact batch");
+        let pad = |v: &mut Vec<f32>| {
+            let last = *v.last().expect("non-empty grid");
+            v.resize(BATCH, last);
+        };
+        pad(&mut h);
+        pad(&mut nc);
+        pad(&mut z);
+        let nops = vec![w.nops as f32; BATCH];
+        let thit = vec![w.thit as f32; BATCH];
+        let tmem = vec![w.tmem as f32; BATCH];
+        (h.clone(), [nc, nops, z, thit, tmem], valid)
+    }
+
+    fn run(
+        exe: &Executable,
+        w: &Workload,
+        cores: &[u32],
+        hits: &[f64],
+    ) -> Result<Vec<Fig6Point>> {
+        let (h, [nc, nops, z, thit, tmem], valid) = Self::grid(w, cores, hits);
+        let dims = [BATCH as i64];
+        let outs = exe.run_f32(&[
+            F32Input::vec(&h, &dims),
+            F32Input::vec(&nc, &dims),
+            F32Input::vec(&nops, &dims),
+            F32Input::vec(&z, &dims),
+            F32Input::vec(&thit, &dims),
+            F32Input::vec(&tmem, &dims),
+        ])?;
+        if outs.len() < 3 {
+            return Err(Error::Runtime(format!(
+                "model artifact returned {} outputs, expected >= 3",
+                outs.len()
+            )));
+        }
+        Ok((0..valid)
+            .map(|i| Fig6Point {
+                hit_rate: h[i] as f64,
+                cores: nc[i] as u32,
+                throughput: outs[0][i] as f64,
+                utilization: outs[1][i] as f64,
+                target_fraction: outs[2][i] as f64,
+            })
+            .collect())
+    }
+
+    /// Figure 6 via the **analytic MVA kernel** artifact.
+    pub fn fig6_mva(
+        &self,
+        w: &Workload,
+        cores: &[u32],
+        hits: &[f64],
+    ) -> Result<Vec<Fig6Point>> {
+        Self::run(&self.mva, w, cores, hits)
+    }
+
+    /// Figure 6 via the **discrete-time simulation sweep** artifact
+    /// (the Pallas `qpn_step` kernel inside a scan).
+    pub fn fig6_sweep(
+        &self,
+        w: &Workload,
+        cores: &[u32],
+        hits: &[f64],
+    ) -> Result<Vec<Fig6Point>> {
+        let sweep = self
+            .sweep
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("qpn_sweep artifact missing".into()))?;
+        Self::run(sweep, w, cores, hits)
+    }
+
+    /// Default Figure 6 hit-rate axis (0.50 .. 1.00 in 0.02 steps).
+    pub fn default_hits() -> Vec<f64> {
+        (0..26).map(|i| 0.5 + 0.02 * i as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::analytic;
+
+    fn model() -> Option<(PjrtRuntime, QpnModel)> {
+        // Skip (not fail) when artifacts have not been built; the
+        // integration tests in rust/tests/ require them.
+        let rt = PjrtRuntime::cpu().ok()?;
+        let m = QpnModel::load(&rt).ok()?;
+        Some((rt, m))
+    }
+
+    #[test]
+    fn artifact_mva_matches_native_mva() {
+        let Some((_rt, m)) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let w = Workload::message();
+        let hits = [0.5, 0.8, 0.95];
+        let pts = m.fig6_mva(&w, &[1, 2], &hits).unwrap();
+        assert_eq!(pts.len(), 6);
+        for p in &pts {
+            // Native demands must scale z by cores, like the grid does.
+            let scaled = Workload { z: w.z * p.cores as f64, ..w };
+            let native = analytic::mva(&scaled, p.hit_rate, p.cores);
+            let rel = (p.throughput - native.throughput).abs() / native.throughput;
+            assert!(rel < 1e-3, "artifact {} vs native {}", p.throughput, native.throughput);
+            assert!((p.utilization - native.utilization).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn sweep_has_fig6_shape() {
+        let Some((_rt, m)) = model() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        if !m.has_sweep() {
+            return;
+        }
+        let w = Workload::message();
+        let hits = [0.5, 0.7, 0.9];
+        let pts = m.fig6_sweep(&w, &[1, 2], &hits).unwrap();
+        // Throughput fraction monotone in h for each core count; two-core
+        // utilization >= single-core at equal h.
+        for c in 0..2 {
+            let series = &pts[c * 3..c * 3 + 3];
+            assert!(series[0].target_fraction <= series[2].target_fraction + 1e-3);
+        }
+        for i in 0..3 {
+            assert!(pts[3 + i].utilization >= pts[i].utilization - 0.02);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The refactoring stop criterion (Section 5).
+//!
+//! "Simulation of model configurations ... gave us a theoretical maximum
+//! message throughput rate of 630,000 messages per second or one message
+//! every 0.63 microsecond. The minimum measured elapsed latency of the
+//! lock-free implementation on Linux is seven microseconds, an order of
+//! magnitude higher than the theoretical maximum. However, the
+//! theoretical maximum only considers ... cache and memory transactions
+//! ... and excludes CPU time, atomic instructions and OS tasks."
+//!
+//! The verdict: keep refactoring while measured latency is dominated by
+//! *lock overhead* (removable); stop when the residual gap over the
+//! memory-bound minimum is within the CPU/OS budget the model excludes.
+
+use super::analytic::{theoretical_max, Workload};
+
+/// Stop-criterion outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StopVerdict {
+    /// Model's memory-bound minimum exchange time (ns).
+    pub model_min_ns: f64,
+    /// Measured minimum latency (ns).
+    pub measured_min_ns: f64,
+    /// measured / model ratio.
+    pub ratio: f64,
+    /// True when further lock-removal is unlikely to pay off.
+    pub stop: bool,
+}
+
+/// Gap budget: the paper accepts roughly an order of magnitude between
+/// the memory-only model and a real exchange (CPU + atomics + OS). Above
+/// this, something structural (i.e. locking) is still in the path.
+pub const GAP_BUDGET: f64 = 15.0;
+
+/// Reference hit rate for the theoretical-maximum calculation. At 0.5 the
+/// message workload's pure memory-transaction time is ~1.6 us per exchange
+/// — the paper's "630,000 messages per second / 0.63 us" calibration point
+/// (their per-direction figure; ours is the full one-way exchange).
+pub const REFERENCE_HIT_RATE: f64 = 0.5;
+
+/// Evaluate the criterion for a workload at hit rate `h` against a
+/// measured minimum one-way latency.
+pub fn stop_criterion(w: &Workload, h: f64, measured_min_ns: f64) -> StopVerdict {
+    let model_min_ns = 1e9 / theoretical_max(w, h);
+    let ratio = measured_min_ns / model_min_ns;
+    StopVerdict { model_min_ns, measured_min_ns, ratio, stop: ratio <= GAP_BUDGET }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn papers_numbers_stop() {
+        // Paper: 7 us measured vs the memory-only model minimum => an
+        // order-of-magnitude-ish gap attributed to CPU cost => stop.
+        let w = Workload::message();
+        let v = stop_criterion(&w, REFERENCE_HIT_RATE, 7_000.0);
+        let max = theoretical_max(&w, REFERENCE_HIT_RATE);
+        assert!((500_000.0..800_000.0).contains(&max), "calibration: {max}");
+        assert!(v.ratio > 2.0 && v.ratio < GAP_BUDGET, "ratio {}", v.ratio);
+        assert!(v.stop);
+    }
+
+    #[test]
+    fn lock_dominated_latency_keeps_going() {
+        // A lock-based exchange at ~100 us is way over budget: keep
+        // refactoring.
+        let v = stop_criterion(&Workload::message(), REFERENCE_HIT_RATE, 100_000.0);
+        assert!(!v.stop);
+    }
+
+    #[test]
+    fn ratio_math() {
+        let w = Workload::message();
+        let v = stop_criterion(&w, REFERENCE_HIT_RATE, 2.0 * v_model(&w));
+        assert!((v.ratio - 2.0).abs() < 1e-9);
+    }
+
+    fn v_model(w: &Workload) -> f64 {
+        1e9 / theoretical_max(w, REFERENCE_HIT_RATE)
+    }
+}

@@ -1,0 +1,31 @@
+//! MRAPI — the Multicore Resource Management API substrate.
+//!
+//! The paper's Figure 1 stack builds MCAPI on MRAPI: a shared-memory
+//! partition holds all resource structures and metadata, guarded in the
+//! reference implementation by **a single user-mode reader/writer lock
+//! whose state changes are themselves guarded by a single OS kernel lock**
+//! — the red oval of Figure 1 and the bottleneck the whole paper is about.
+//!
+//! * [`shmem`] — the shared-memory partition: a fixed arena of slots with
+//!   offset-based addressing (mirroring the SysVR4 `shmget`/`shmat` model
+//!   the reference implementation portably wraps).
+//! * [`rwlock`] — the user-mode reader/writer lock over one kernel lock:
+//!   the **lock-based baseline** whose removal the paper measures.
+//! * [`sync`] — user-mode mutexes and counting semaphores built on the
+//!   same kernel-lock portability layer.
+//! * [`node`] — domains, nodes and run-up/run-down with atomic state
+//!   verification (contribution 4 of the refactoring).
+//! * [`resource`] — the metadata resource tree with filtered views and
+//!   change-triggered callbacks.
+
+pub mod node;
+pub mod resource;
+pub mod rwlock;
+pub mod shmem;
+pub mod sync;
+
+pub use node::{Domain, NodeRegistry, NodeState};
+pub use resource::{ResourceKind, ResourceTree};
+pub use rwlock::RwLock;
+pub use shmem::Partition;
+pub use sync::{Mutex, Semaphore};

@@ -1,0 +1,221 @@
+//! The MRAPI metadata resource tree.
+//!
+//! "Finally metadata management, including filtered resource trees and
+//! change triggered actions, is provided." Resources (nodes, endpoints,
+//! channels, buffers) hang off a tree; views can be filtered by kind and
+//! registered callbacks fire on attribute changes.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Kinds of resources tracked in the tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ResourceKind {
+    /// MRAPI domain.
+    Domain,
+    /// MRAPI node.
+    Node,
+    /// MCAPI endpoint.
+    Endpoint,
+    /// MCAPI channel.
+    Channel,
+    /// Shared-memory buffer pool.
+    BufferPool,
+}
+
+/// One resource entry.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    /// Kind.
+    pub kind: ResourceKind,
+    /// Display name.
+    pub name: String,
+    /// Parent id (0 = root).
+    pub parent: u64,
+    /// Attribute map.
+    pub attrs: BTreeMap<String, i64>,
+}
+
+type Trigger = Box<dyn Fn(u64, &str, i64) + Send>;
+
+/// Tree of resources with filtered iteration and change triggers.
+///
+/// Metadata operations are control-plane (node bring-up, tooling), not the
+/// data path, so an ordinary mutex is appropriate here — the paper removed
+/// locks from the *exchange* path, not from management metadata.
+pub struct ResourceTree {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    next_id: u64,
+    entries: BTreeMap<u64, Resource>,
+    triggers: Vec<(u64, String, Trigger)>,
+}
+
+impl Default for ResourceTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResourceTree {
+    /// Empty tree.
+    pub fn new() -> Self {
+        ResourceTree { inner: Mutex::new(Inner { next_id: 1, ..Default::default() }) }
+    }
+
+    /// Register a resource; returns its id.
+    pub fn add(&self, kind: ResourceKind, name: &str, parent: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.entries.insert(
+            id,
+            Resource { kind, name: to_owned(name), parent, attrs: BTreeMap::new() },
+        );
+        id
+    }
+
+    /// Remove a resource and its descendants; returns how many were removed.
+    pub fn remove(&self, id: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut doomed = vec![id];
+        let mut i = 0;
+        while i < doomed.len() {
+            let parent = doomed[i];
+            doomed.extend(
+                inner
+                    .entries
+                    .iter()
+                    .filter(|(_, r)| r.parent == parent)
+                    .map(|(&cid, _)| cid),
+            );
+            i += 1;
+        }
+        let mut removed = 0;
+        for d in doomed {
+            removed += inner.entries.remove(&d).is_some() as usize;
+        }
+        removed
+    }
+
+    /// Set an attribute, firing any matching change triggers.
+    pub fn set_attr(&self, id: u64, key: &str, value: i64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(r) = inner.entries.get_mut(&id) else {
+            return false;
+        };
+        r.attrs.insert(to_owned(key), value);
+        // Collect matching triggers, then fire outside the entry borrow.
+        let fires: Vec<usize> = inner
+            .triggers
+            .iter()
+            .enumerate()
+            .filter(|(_, (tid, tkey, _))| *tid == id && tkey == key)
+            .map(|(i, _)| i)
+            .collect();
+        for i in fires {
+            let (tid, tkey, cb) = &inner.triggers[i];
+            debug_assert_eq!(*tid, id);
+            cb(id, tkey, value);
+        }
+        true
+    }
+
+    /// Read an attribute.
+    pub fn attr(&self, id: u64, key: &str) -> Option<i64> {
+        self.inner.lock().unwrap().entries.get(&id)?.attrs.get(key).copied()
+    }
+
+    /// Register a change trigger on `(id, key)`.
+    pub fn on_change(&self, id: u64, key: &str, cb: impl Fn(u64, &str, i64) + Send + 'static) {
+        self.inner
+            .lock()
+            .unwrap()
+            .triggers
+            .push((id, to_owned(key), Box::new(cb)));
+    }
+
+    /// Snapshot of resources of `kind` (filtered view).
+    pub fn filtered(&self, kind: ResourceKind) -> Vec<(u64, Resource)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .filter(|(_, r)| r.kind == kind)
+            .map(|(&id, r)| (id, r.clone()))
+            .collect()
+    }
+
+    /// Total resources.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn to_owned(s: &str) -> String {
+    s.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicI64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn add_and_filter() {
+        let t = ResourceTree::new();
+        let d = t.add(ResourceKind::Domain, "d0", 0);
+        let n = t.add(ResourceKind::Node, "n0", d);
+        t.add(ResourceKind::Endpoint, "ep0", n);
+        t.add(ResourceKind::Endpoint, "ep1", n);
+        assert_eq!(t.filtered(ResourceKind::Endpoint).len(), 2);
+        assert_eq!(t.filtered(ResourceKind::Node).len(), 1);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn remove_cascades_to_descendants() {
+        let t = ResourceTree::new();
+        let d = t.add(ResourceKind::Domain, "d0", 0);
+        let n = t.add(ResourceKind::Node, "n0", d);
+        t.add(ResourceKind::Endpoint, "ep0", n);
+        assert_eq!(t.remove(d), 3);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn attrs_roundtrip() {
+        let t = ResourceTree::new();
+        let n = t.add(ResourceKind::Node, "n", 0);
+        assert!(t.set_attr(n, "priority", 7));
+        assert_eq!(t.attr(n, "priority"), Some(7));
+        assert_eq!(t.attr(n, "missing"), None);
+        assert!(!t.set_attr(999, "x", 0));
+    }
+
+    #[test]
+    fn change_trigger_fires() {
+        let t = ResourceTree::new();
+        let n = t.add(ResourceKind::Node, "n", 0);
+        let seen = Arc::new(AtomicI64::new(0));
+        let seen2 = seen.clone();
+        t.on_change(n, "qdepth", move |_, _, v| {
+            seen2.store(v, Ordering::SeqCst);
+        });
+        t.set_attr(n, "qdepth", 42);
+        assert_eq!(seen.load(Ordering::SeqCst), 42);
+        // Different key: no fire.
+        t.set_attr(n, "other", 1);
+        assert_eq!(seen.load(Ordering::SeqCst), 42);
+    }
+}

@@ -1,0 +1,211 @@
+//! The user-mode reader/writer lock of the MRAPI reference implementation.
+//!
+//! Paper, Section 2: "A user-mode reader/writer lock controls access to
+//! the partition and a single OS kernel lock guards changes to the
+//! reader/writer lock. Effectively, all write access to the global shared
+//! memory is serialized and the readers are blocked if a write is in
+//! progress."
+//!
+//! That design is reproduced literally: reader/writer counts live in
+//! user-mode words, but *every* state change takes the kernel lock, and
+//! blocked acquirers sleep on the kernel lock too (re-checking on wake).
+//! This is intentionally the paper's baseline, not a modern rwlock — its
+//! cost profile (kernel entries on contention, convoying on multicore) is
+//! what Table 2 measures.
+
+use crate::lockfree::mem::{Atom32, KernelLock, World};
+
+/// Lock-based baseline reader/writer lock, generic over the world.
+pub struct RwLock<W: World> {
+    kernel: W::Lock,
+    readers: W::U32,
+    writer: W::U32,
+}
+
+impl<W: World> Default for RwLock<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W: World> RwLock<W> {
+    /// New, unheld.
+    pub fn new() -> Self {
+        RwLock { kernel: W::Lock::new(), readers: W::U32::new(0), writer: W::U32::new(0) }
+    }
+
+    /// Acquire shared (read) access; writers block readers.
+    pub fn read_lock(&self) {
+        loop {
+            // The kernel lock guards the rwlock state words; contended
+            // acquires *block* in the kernel (the paper: "readers are
+            // blocked if a write is in progress") — a writer holds the
+            // kernel lock for its whole critical section.
+            self.kernel.acquire();
+            if self.writer.load() == 0 {
+                self.readers.fetch_add(1);
+                self.kernel.release();
+                return;
+            }
+            self.kernel.release();
+            W::yield_now();
+        }
+    }
+
+    /// Release shared access.
+    pub fn read_unlock(&self) {
+        let prev = self.readers.fetch_add(u32::MAX); // wrapping -1
+        assert!(prev > 0, "read_unlock without read_lock");
+    }
+
+    /// Acquire exclusive (write) access; blocks out readers and writers.
+    ///
+    /// The kernel lock is held until [`RwLock::write_unlock`] — all write
+    /// access to the global shared memory is serialized through one OS
+    /// lock, and any task touching the database meanwhile *blocks* in the
+    /// kernel. This is the reference design's convoy source that Table 2
+    /// measures; do not "fix" it.
+    pub fn write_lock(&self) {
+        self.kernel.acquire();
+        // Wait out any in-flight readers (they never hold the kernel lock
+        // across their critical section).
+        while self.readers.load() != 0 {
+            W::yield_now();
+        }
+        self.writer.store(1);
+    }
+
+    /// Release exclusive access.
+    pub fn write_unlock(&self) {
+        let prev = self.writer.load();
+        assert_eq!(prev, 1, "write_unlock without write_lock");
+        self.writer.store(0);
+        self.kernel.release();
+    }
+
+    /// Run `f` under the write lock.
+    pub fn with_write<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.write_lock();
+        let r = f();
+        self.write_unlock();
+        r
+    }
+
+    /// Run `f` under the read lock.
+    pub fn with_read<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.read_lock();
+        let r = f();
+        self.read_unlock();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    type RLock = RwLock<RealWorld>;
+
+    #[test]
+    fn writers_are_exclusive() {
+        let lock = Arc::new(RLock::new());
+        let value = Arc::new(AtomicU32::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let lock = lock.clone();
+            let value = value.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    lock.with_write(|| {
+                        let v = value.load(Ordering::Relaxed);
+                        value.store(v + 1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(value.load(Ordering::Relaxed), 8_000);
+    }
+
+    #[test]
+    fn readers_share() {
+        let lock = Arc::new(RLock::new());
+        let concurrent = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let lock = lock.clone();
+            let concurrent = concurrent.clone();
+            let peak = peak.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    lock.with_read(|| {
+                        let now = concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::yield_now();
+                        concurrent.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // At least sometimes two readers overlapped (not guaranteed on a
+        // 1-core box, so only assert it never exceeded the thread count).
+        assert!(peak.load(Ordering::SeqCst) <= 4);
+    }
+
+    #[test]
+    fn readers_excluded_during_write() {
+        let lock = Arc::new(RLock::new());
+        let in_write = Arc::new(AtomicU32::new(0));
+        let violations = Arc::new(AtomicU32::new(0));
+        let writer = {
+            let lock = lock.clone();
+            let in_write = in_write.clone();
+            std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    lock.with_write(|| {
+                        in_write.store(1, Ordering::SeqCst);
+                        in_write.store(0, Ordering::SeqCst);
+                    });
+                }
+            })
+        };
+        let reader = {
+            let lock = lock.clone();
+            let in_write = in_write.clone();
+            let violations = violations.clone();
+            std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    lock.with_read(|| {
+                        if in_write.load(Ordering::SeqCst) == 1 {
+                            violations.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+        assert_eq!(violations.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "read_unlock without")]
+    fn unbalanced_read_unlock_panics() {
+        RLock::new().read_unlock();
+    }
+
+    #[test]
+    #[should_panic(expected = "write_unlock without")]
+    fn unbalanced_write_unlock_panics() {
+        RLock::new().write_unlock();
+    }
+}

@@ -1,0 +1,204 @@
+//! MRAPI user-mode synchronization: mutexes and counting semaphores.
+//!
+//! "User-mode mutexes, semaphores and reader/writer locks are built on top
+//! of this base" (the SysVR4-style kernel lock). These are the primitives
+//! the lock-based MCAPI baseline and application code use; the lock-free
+//! refactoring removes them from the data path but node run-up/run-down
+//! still relies on them.
+
+use crate::lockfree::mem::{Atom32, KernelLock, World};
+
+/// User-mode mutex over the world's kernel lock.
+pub struct Mutex<W: World> {
+    kernel: W::Lock,
+    held: W::U32,
+}
+
+impl<W: World> Default for Mutex<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W: World> Mutex<W> {
+    /// New, unheld.
+    pub fn new() -> Self {
+        Mutex { kernel: W::Lock::new(), held: W::U32::new(0) }
+    }
+
+    /// Acquire.
+    pub fn lock(&self) {
+        loop {
+            self.kernel.acquire();
+            if self.held.load() == 0 {
+                self.held.store(1);
+                self.kernel.release();
+                return;
+            }
+            self.kernel.release();
+            W::yield_now();
+        }
+    }
+
+    /// Try to acquire without blocking.
+    pub fn try_lock(&self) -> bool {
+        self.kernel.acquire();
+        let free = self.held.load() == 0;
+        if free {
+            self.held.store(1);
+        }
+        self.kernel.release();
+        free
+    }
+
+    /// Release.
+    pub fn unlock(&self) {
+        self.kernel.acquire();
+        assert_eq!(self.held.load(), 1, "unlock of unheld mutex");
+        self.held.store(0);
+        self.kernel.release();
+    }
+
+    /// Run `f` under the mutex.
+    pub fn with<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.lock();
+        let r = f();
+        self.unlock();
+        r
+    }
+}
+
+/// Counting semaphore built on the kernel lock (SysVR4 `semop` shape).
+pub struct Semaphore<W: World> {
+    kernel: W::Lock,
+    count: W::U32,
+}
+
+impl<W: World> Semaphore<W> {
+    /// New with `initial` permits.
+    pub fn new(initial: u32) -> Self {
+        Semaphore { kernel: W::Lock::new(), count: W::U32::new(initial) }
+    }
+
+    /// Acquire one permit, blocking (spin+yield) until available.
+    pub fn wait(&self) {
+        loop {
+            if self.try_wait() {
+                return;
+            }
+            W::yield_now();
+        }
+    }
+
+    /// Try to acquire a permit.
+    pub fn try_wait(&self) -> bool {
+        self.kernel.acquire();
+        let c = self.count.load();
+        let ok = c > 0;
+        if ok {
+            self.count.store(c - 1);
+        }
+        self.kernel.release();
+        ok
+    }
+
+    /// Release one permit.
+    pub fn post(&self) {
+        self.kernel.acquire();
+        let c = self.count.load();
+        self.count.store(c + 1);
+        self.kernel.release();
+    }
+
+    /// Current permit count (racy snapshot).
+    pub fn permits(&self) -> u32 {
+        self.count.load()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_excludes() {
+        let m = Arc::new(Mutex::<RealWorld>::new());
+        let v = Arc::new(AtomicU32::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                let v = v.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..2_000 {
+                        m.with(|| {
+                            let x = v.load(Ordering::Relaxed);
+                            v.store(x + 1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(v.load(Ordering::Relaxed), 8_000);
+    }
+
+    #[test]
+    fn try_lock_fails_when_held() {
+        let m = Mutex::<RealWorld>::new();
+        assert!(m.try_lock());
+        assert!(!m.try_lock());
+        m.unlock();
+        assert!(m.try_lock());
+        m.unlock();
+    }
+
+    #[test]
+    #[should_panic(expected = "unlock of unheld")]
+    fn unbalanced_unlock_panics() {
+        Mutex::<RealWorld>::new().unlock();
+    }
+
+    #[test]
+    fn semaphore_counts() {
+        let s = Semaphore::<RealWorld>::new(2);
+        assert!(s.try_wait());
+        assert!(s.try_wait());
+        assert!(!s.try_wait());
+        s.post();
+        assert!(s.try_wait());
+        assert_eq!(s.permits(), 0);
+    }
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let s = Arc::new(Semaphore::<RealWorld>::new(2));
+        let inside = Arc::new(AtomicU32::new(0));
+        let peak = Arc::new(AtomicU32::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                let inside = inside.clone();
+                let peak = peak.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        s.wait();
+                        let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        inside.fetch_sub(1, Ordering::SeqCst);
+                        s.post();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "semaphore over-admitted");
+        assert_eq!(s.permits(), 2);
+    }
+}

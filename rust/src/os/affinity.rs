@@ -1,0 +1,86 @@
+//! CPU affinity control (`sched_setaffinity` on Linux).
+//!
+//! The paper's stress tests run in three placements (Section 4): all
+//! threads pinned to one core, threads free to migrate, and threads pinned
+//! one-per-core. [`AffinityMode`] names those; [`pin_to_core`] applies a
+//! pinning on the real host (the simulator applies it in virtual space).
+
+/// The three stress-test placements from Section 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AffinityMode {
+    /// All tasks pinned to a single core ("single core" column).
+    SingleCore,
+    /// No pinning; the scheduler may migrate tasks ("Task" column).
+    Free,
+    /// Tasks pinned round-robin across all cores ("Affinity Task" column).
+    PinnedSpread,
+}
+
+impl AffinityMode {
+    /// Parse from CLI/config text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "single" | "single-core" | "one" => Some(Self::SingleCore),
+            "free" | "none" | "task" => Some(Self::Free),
+            "pinned" | "spread" | "affinity" => Some(Self::PinnedSpread),
+            _ => None,
+        }
+    }
+
+    /// Stable label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::SingleCore => "single",
+            Self::Free => "task",
+            Self::PinnedSpread => "affinity",
+        }
+    }
+}
+
+/// Number of cores available to this process.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Pin the calling thread to `core` (mod the available core count).
+/// Returns false (and leaves affinity unchanged) if the syscall fails.
+#[cfg(target_os = "linux")]
+pub fn pin_to_core(core: usize) -> bool {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(core % available_cores(), &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+/// Non-Linux fallback: report failure, do nothing.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_core(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_parse_and_label() {
+        assert_eq!(AffinityMode::parse("single"), Some(AffinityMode::SingleCore));
+        assert_eq!(AffinityMode::parse("task"), Some(AffinityMode::Free));
+        assert_eq!(AffinityMode::parse("affinity"), Some(AffinityMode::PinnedSpread));
+        assert_eq!(AffinityMode::parse("bogus"), None);
+        assert_eq!(AffinityMode::PinnedSpread.label(), "affinity");
+    }
+
+    #[test]
+    fn at_least_one_core() {
+        assert!(available_cores() >= 1);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pinning_to_core_zero_succeeds() {
+        assert!(pin_to_core(0));
+    }
+}

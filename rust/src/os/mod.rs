@@ -1,0 +1,58 @@
+//! OS portability layer (the paper's MRAPI porting contribution).
+//!
+//! The paper's MRAPI port added: portable access to atomic CPU
+//! instructions, explicit context switching (yield) and timed delay, CPU
+//! affinity control, and OS-specific synchronization primitives. This
+//! module provides those, plus the parameterised **OS cost profiles** the
+//! deterministic SMP simulator uses to stand in for the paper's
+//! Windows Server 2008 / Fedora 15 rt guests (see DESIGN.md §3).
+
+pub mod affinity;
+pub mod profile;
+pub mod time;
+
+pub use affinity::{available_cores, pin_to_core, AffinityMode};
+pub use profile::OsProfile;
+pub use time::{delay_ns, monotonic_ns, yield_now};
+
+/// Cache line size assumed throughout (x86-64 and most ARM SoCs).
+pub const CACHE_LINE: usize = 64;
+
+/// Pads a value to a full cache line to prevent false sharing between
+/// adjacent atomics — the paper's Section 6 notes the exchange cost is
+/// dominated by cache-line ownership transfer, so unrelated hot words must
+/// not share a line.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct CachePadded<T>(pub T);
+
+impl<T> CachePadded<T> {
+    /// Wrap a value.
+    pub const fn new(value: T) -> Self {
+        CachePadded(value)
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_padded_is_line_aligned() {
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), CACHE_LINE);
+        assert!(std::mem::size_of::<CachePadded<u64>>() >= CACHE_LINE);
+    }
+}

@@ -1,0 +1,48 @@
+//! Monotonic time, explicit context switch (yield) and timed delay —
+//! the portability additions the paper made to MRAPI (Section 3).
+
+use std::time::{Duration, Instant};
+
+use once_cell::sync::Lazy;
+
+static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Monotonic nanoseconds since process start.
+pub fn monotonic_ns() -> u64 {
+    EPOCH.elapsed().as_nanos() as u64
+}
+
+/// Explicit context switch: give up the processor to another ready task.
+/// (MRAPI extension; the simulator's `World::yield_now` mirrors this.)
+pub fn yield_now() {
+    std::thread::yield_now();
+}
+
+/// Timed delay with nanosecond argument (MRAPI extension).
+pub fn delay_ns(ns: u64) {
+    std::thread::sleep(Duration::from_nanos(ns));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_is_monotonic() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn delay_advances_clock() {
+        let a = monotonic_ns();
+        delay_ns(1_000_000); // 1 ms
+        assert!(monotonic_ns() - a >= 900_000);
+    }
+
+    #[test]
+    fn yield_does_not_panic() {
+        yield_now();
+    }
+}

@@ -1,0 +1,80 @@
+//! Artifact discovery: locate `artifacts/*.hlo.txt` relative to the repo
+//! root regardless of the current working directory (tests, benches and
+//! examples all run from different places).
+
+use std::path::{Path, PathBuf};
+
+/// Known artifacts produced by `make artifacts` (`python/compile/aot.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactSpec {
+    /// Figure 6 sweep: batched QPN simulation over a (hit-rate × cores)
+    /// grid. Inputs: params grid; outputs: throughput + bus utilization.
+    QpnSweep,
+    /// Mean-value-analysis fixed point over the same grid (the analytic
+    /// cross-check for the simulation).
+    MvaSolver,
+}
+
+impl ArtifactSpec {
+    /// File name under `artifacts/`.
+    pub fn file_name(self) -> &'static str {
+        match self {
+            ArtifactSpec::QpnSweep => "qpn_sweep.hlo.txt",
+            ArtifactSpec::MvaSolver => "mva_solver.hlo.txt",
+        }
+    }
+
+    /// Absolute path, if the artifact directory can be located.
+    pub fn path(self) -> Option<PathBuf> {
+        artifact_dir().map(|d| d.join(self.file_name()))
+    }
+
+    /// True when the artifact exists on disk (i.e. `make artifacts` ran).
+    pub fn exists(self) -> bool {
+        self.path().map(|p| p.exists()).unwrap_or(false)
+    }
+}
+
+/// Locate the `artifacts/` directory by walking up from both the current
+/// working directory and the crate manifest directory.
+pub fn artifact_dir() -> Option<PathBuf> {
+    let mut starts: Vec<PathBuf> = Vec::new();
+    if let Ok(cwd) = std::env::current_dir() {
+        starts.push(cwd);
+    }
+    starts.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for start in starts {
+        let mut dir: &Path = &start;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.is_dir() {
+                return Some(cand);
+            }
+            match dir.parent() {
+                Some(p) => dir = p,
+                None => break,
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_file_names_are_distinct() {
+        assert_ne!(
+            ArtifactSpec::QpnSweep.file_name(),
+            ArtifactSpec::MvaSolver.file_name()
+        );
+    }
+
+    #[test]
+    fn artifact_dir_found_from_manifest() {
+        // The repo always contains artifacts/ (gitignored but created by the
+        // build scaffolding), so discovery must succeed.
+        assert!(artifact_dir().is_some());
+    }
+}

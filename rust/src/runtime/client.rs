@@ -1,0 +1,104 @@
+//! Thin, safe wrapper around the `xla` crate's PJRT CPU client.
+
+use crate::{Error, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+fn rt_err<E: std::fmt::Debug>(what: &str) -> impl FnOnce(E) -> Error + '_ {
+    move |e| Error::Runtime(format!("{what}: {e:?}"))
+}
+
+/// A process-wide PJRT runtime. Cheap to clone; the underlying client is
+/// reference counted.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+        Ok(Self { client: Arc::new(client) })
+    }
+
+    /// Platform name reported by PJRT (e.g. `"Host"`).
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO **text** file (produced by `python/compile/aot.py`) and
+    /// compile it into an [`Executable`].
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(rt_err(&format!("parse HLO text {}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(rt_err(&format!("compile {}", path.display())))?;
+        Ok(Executable { exe: Arc::new(exe), name: path.display().to_string() })
+    }
+}
+
+/// A compiled XLA executable plus metadata. Cheap to clone.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    name: String,
+}
+
+impl Executable {
+    /// Human-readable identifier (the artifact path it was loaded from).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with `f32` tensor inputs; returns every output tensor as a
+    /// flat `f32` vector (the module is lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let lit = xla::Literal::vec1(inp.data);
+                if inp.dims.len() == 1 && inp.dims[0] as usize == inp.data.len() {
+                    Ok(lit)
+                } else {
+                    lit.reshape(inp.dims).map_err(rt_err("reshape input"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(rt_err(&format!("execute {}", self.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(rt_err("to_literal_sync"))?;
+        let outs = lit.to_tuple().map_err(rt_err("to_tuple"))?;
+        outs.into_iter()
+            .map(|o| o.to_vec::<f32>().map_err(rt_err("to_vec<f32>")))
+            .collect()
+    }
+}
+
+/// A borrowed `f32` tensor input: flat data plus dims.
+pub struct F32Input<'a> {
+    /// Row-major data.
+    pub data: &'a [f32],
+    /// Tensor dimensions.
+    pub dims: &'a [i64],
+}
+
+impl<'a> F32Input<'a> {
+    /// 1-D input.
+    pub fn vec(data: &'a [f32], dims: &'a [i64]) -> Self {
+        Self { data, dims }
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT bridge: load AOT-compiled XLA artifacts and execute them from Rust.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the JAX performance
+//! model — including its Pallas kernel — to **HLO text** under
+//! `artifacts/`. This module loads those files with the `xla` crate
+//! (xla_extension 0.5.1, PJRT CPU client), compiles them once, and executes
+//! them from the coordinator with plain `f32`/`i32` buffers.
+//!
+//! HLO *text* (not a serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which XLA 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly.
+
+mod artifact;
+mod client;
+
+pub use artifact::{artifact_dir, ArtifactSpec};
+pub use client::{Executable, F32Input, PjrtRuntime};

@@ -1,0 +1,718 @@
+//! The DES machine: virtual cores, scheduler, cache directory, memory bus.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::os::{AffinityMode, OsProfile};
+
+/// Memory-hierarchy cost constants (nanoseconds), matching the L2 model's
+/// calibration (python/compile/model.py DEFAULTS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemCosts {
+    /// On-core cache hit.
+    pub hit_ns: u64,
+    /// Memory-bus service time per line transfer (miss / coherence).
+    pub bus_ns: u64,
+    /// Extra cost of an atomic read-modify-write over a plain access.
+    pub rmw_extra_ns: u64,
+    /// Pure-CPU overhead charged per API call by the runtime glue.
+    pub api_overhead_ns: u64,
+}
+
+impl Default for MemCosts {
+    fn default() -> Self {
+        MemCosts { hit_ns: 2, bus_ns: 60, rmw_extra_ns: 12, api_overhead_ns: 700 }
+    }
+}
+
+/// Machine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineCfg {
+    /// Number of virtual cores.
+    pub cores: usize,
+    /// OS cost profile (linux-rt / windows).
+    pub profile: OsProfile,
+    /// Task placement policy.
+    pub affinity: AffinityMode,
+    /// Memory costs.
+    pub mem: MemCosts,
+}
+
+impl MachineCfg {
+    /// Convenience constructor with default memory costs.
+    pub fn new(cores: usize, profile: OsProfile, affinity: AffinityMode) -> Self {
+        MachineCfg { cores, profile, affinity, mem: MemCosts::default() }
+    }
+}
+
+/// Counters exposed after a run (all in virtual nanoseconds / counts).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MachineStats {
+    /// Virtual makespan: max task clock at completion.
+    pub virtual_ns: u64,
+    /// Total bus busy time (utilization = busy / virtual).
+    pub bus_busy_ns: u64,
+    /// Cache hits.
+    pub hits: u64,
+    /// Cache misses (bus transactions).
+    pub misses: u64,
+    /// Context switches performed.
+    pub ctx_switches: u64,
+    /// Cross-core task migrations.
+    pub migrations: u64,
+    /// Kernel entries (contended lock paths, wakes).
+    pub syscalls: u64,
+}
+
+impl MachineStats {
+    /// Bus utilization in [0,1].
+    pub fn bus_utilization(&self) -> f64 {
+        if self.virtual_ns == 0 {
+            0.0
+        } else {
+            self.bus_busy_ns as f64 / self.virtual_ns as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    /// Waiting in a core's ready queue.
+    Ready,
+    /// Occupant of a core (may or may not be globally executing).
+    Current,
+    /// Asleep on a futex address.
+    Blocked,
+    /// Finished.
+    Done,
+}
+
+struct Tcb {
+    clock: u64,
+    core: usize,
+    pinned: bool,
+    state: TaskState,
+    quantum_start: u64,
+}
+
+struct Core {
+    ready: VecDeque<usize>,
+    current: Option<usize>,
+    /// Last task that ran here (context-switch detection).
+    last: Option<usize>,
+    time: u64,
+}
+
+#[derive(Default, Clone, Copy)]
+struct Line {
+    /// Bitmask of cores with a valid copy.
+    sharers: u64,
+    /// Core with write (exclusive) ownership, if dirty.
+    owner: Option<usize>,
+}
+
+struct State {
+    tasks: Vec<Tcb>,
+    cores: Vec<Core>,
+    lines: HashMap<u64, Line>,
+    futex: BTreeMap<u64, VecDeque<usize>>,
+    bus_free_at: u64,
+    running: Option<usize>,
+    live: usize,
+    aborted: bool,
+    stats: MachineStats,
+}
+
+struct Shared {
+    cfg: MachineCfg,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Handle to a simulated SMP machine. Clone freely.
+#[derive(Clone)]
+pub struct Machine {
+    shared: Arc<Shared>,
+}
+
+/// Lock that survives poisoning (a panicking task — e.g. the deadlock
+/// detector — must not turn every other lock().unwrap() into a second,
+/// unrelated panic).
+fn lock(shared: &Shared) -> std::sync::MutexGuard<'_, State> {
+    shared.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a>(
+    shared: &'a Shared,
+    guard: std::sync::MutexGuard<'a, State>,
+) -> std::sync::MutexGuard<'a, State> {
+    shared.cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Global synthetic address allocator for sim atoms / payload regions.
+/// Each allocation gets its own cache line; regions get a contiguous range.
+static NEXT_ADDR: AtomicU64 = AtomicU64::new(0x1000);
+
+/// Allocate a synthetic address range of `bytes`, cache-line granular.
+pub(crate) fn alloc_region(bytes: usize) -> u64 {
+    let lines = ((bytes + 63) / 64).max(1) as u64;
+    NEXT_ADDR.fetch_add(lines * 64, Ordering::Relaxed)
+}
+
+impl Machine {
+    /// Create a machine with no tasks.
+    pub fn new(cfg: MachineCfg) -> Self {
+        assert!(cfg.cores >= 1 && cfg.cores <= 64, "1..=64 cores");
+        let cores = (0..cfg.cores)
+            .map(|_| Core { ready: VecDeque::new(), current: None, last: None, time: 0 })
+            .collect();
+        Machine {
+            shared: Arc::new(Shared {
+                cfg,
+                state: Mutex::new(State {
+                    tasks: Vec::new(),
+                    cores,
+                    lines: HashMap::new(),
+                    futex: BTreeMap::new(),
+                    bus_free_at: 0,
+                    running: None,
+                    live: 0,
+                    aborted: false,
+                    stats: MachineStats::default(),
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Machine configuration.
+    pub fn cfg(&self) -> MachineCfg {
+        self.shared.cfg
+    }
+
+    /// Spawn a simulated task. Must be called before [`Machine::run`].
+    /// The closure runs on its own OS thread under the machine's monitor,
+    /// with the thread-local task context installed so `SimWorld`
+    /// operations charge this machine.
+    pub fn spawn<F>(&self, f: F) -> JoinHandle<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let id;
+        {
+            let mut st = lock(&self.shared);
+            id = st.tasks.len();
+            let core = match self.shared.cfg.affinity {
+                AffinityMode::SingleCore => 0,
+                AffinityMode::PinnedSpread | AffinityMode::Free => id % self.shared.cfg.cores,
+            };
+            let pinned = self.shared.cfg.affinity != AffinityMode::Free;
+            st.tasks.push(Tcb {
+                clock: 0,
+                core,
+                pinned,
+                state: TaskState::Ready,
+                quantum_start: 0,
+            });
+            st.cores[core].ready.push_back(id);
+            st.live += 1;
+        }
+        let machine = self.clone();
+        std::thread::spawn(move || {
+            super::world::install_ctx(machine.clone(), id);
+            machine.wait_until_running(id);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            super::world::clear_ctx();
+            machine.finish(id, result.is_err());
+            if let Err(e) = result {
+                std::panic::resume_unwind(e);
+            }
+        })
+    }
+
+    /// Start scheduling and block until every task finished. Returns the
+    /// machine statistics. Panics if any task panicked.
+    pub fn run(&self, handles: Vec<JoinHandle<()>>) -> MachineStats {
+        {
+            let mut st = lock(&self.shared);
+            self.schedule(&mut st);
+        }
+        self.shared.cv.notify_all();
+        let mut payloads = Vec::new();
+        for h in handles {
+            if let Err(e) = h.join() {
+                payloads.push(e);
+            }
+        }
+        if !payloads.is_empty() {
+            // Prefer the root cause over secondary "machine aborted" panics
+            // raised by tasks that were merely descheduled during shutdown.
+            let is_secondary = |p: &Box<dyn std::any::Any + Send>| {
+                p.downcast_ref::<String>()
+                    .map(|s| s.contains("machine aborted"))
+                    .unwrap_or(false)
+            };
+            let idx = payloads.iter().position(|p| !is_secondary(p)).unwrap_or(0);
+            std::panic::resume_unwind(payloads.swap_remove(idx));
+        }
+        let st = lock(&self.shared);
+        st.stats
+    }
+
+    /// Convenience: spawn `n` closures produced by `make` and run.
+    pub fn run_tasks<F>(&self, n: usize, mut make: impl FnMut(usize) -> F) -> MachineStats
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let handles: Vec<_> = (0..n).map(|i| self.spawn(make(i))).collect();
+        self.run(handles)
+    }
+
+    // -- monitor internals -------------------------------------------------
+
+    fn wait_until_running(&self, me: usize) {
+        let mut st = lock(&self.shared);
+        while st.running != Some(me) && !st.aborted {
+            st = wait(&self.shared, st);
+        }
+    }
+
+    /// Execute one instrumented operation under the monitor.
+    ///
+    /// `f` runs at the task's current virtual instant (the linearization
+    /// point: reads/writes of real memory inside `f` are serialized by the
+    /// monitor); it returns the operation's result. Afterwards the
+    /// scheduler may hand the (real) CPU to another task; the call returns
+    /// once this task is scheduled again.
+    pub(crate) fn op<R>(&self, f: impl FnOnce(&mut OpCtx<'_>) -> R) -> R {
+        let me = super::world::current_task(self);
+        let mut st = lock(&self.shared);
+        assert!(!st.aborted, "machine aborted");
+        assert_eq!(st.running, Some(me), "op from task not scheduled");
+        let r = {
+            let mut ctx = OpCtx { st: &mut st, cfg: &self.shared.cfg, me };
+            f(&mut ctx)
+        };
+        self.schedule(&mut st);
+        let handoff = st.running != Some(me);
+        if handoff {
+            self.shared.cv.notify_all();
+            while st.running != Some(me) && !st.aborted {
+                st = wait(&self.shared, st);
+            }
+            if st.aborted && st.running != Some(me) {
+                // Unblock panicking shutdown.
+                drop(st);
+                panic!("machine aborted while task {me} was descheduled");
+            }
+        }
+        r
+    }
+
+    fn finish(&self, me: usize, panic: bool) {
+        let mut st = lock(&self.shared);
+        if panic {
+            st.aborted = true;
+        }
+        let core = st.tasks[me].core;
+        st.tasks[me].state = TaskState::Done;
+        let clock = st.tasks[me].clock;
+        st.cores[core].time = st.cores[core].time.max(clock);
+        if st.cores[core].current == Some(me) {
+            st.cores[core].current = None;
+        } else {
+            // Was in a queue (e.g. finished immediately after spawn).
+            st.cores[core].ready.retain(|&t| t != me);
+        }
+        st.live -= 1;
+        st.stats.virtual_ns = st.stats.virtual_ns.max(clock);
+        if !st.aborted {
+            self.schedule(&mut st);
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Scheduling pass: fill cores, rotate expired quanta, pick the global
+    /// min-clock occupant as the running task.
+    fn schedule(&self, st: &mut State) {
+        let cfg = &self.shared.cfg;
+        // Fill empty cores and rotate expired quanta until stable.
+        loop {
+            let mut changed = false;
+            for c in 0..st.cores.len() {
+                if st.cores[c].current.is_none() {
+                    if let Some(t) = st.cores[c].ready.pop_front() {
+                        let switch = st.cores[c].last != Some(t);
+                        if switch {
+                            st.cores[c].time += cfg.profile.context_switch_ns;
+                            st.stats.ctx_switches += 1;
+                        }
+                        let start = st.tasks[t].clock.max(st.cores[c].time);
+                        st.tasks[t].clock = start;
+                        st.tasks[t].quantum_start = start;
+                        st.tasks[t].state = TaskState::Current;
+                        st.cores[c].current = Some(t);
+                        st.cores[c].last = Some(t);
+                        changed = true;
+                    }
+                } else {
+                    let t = st.cores[c].current.unwrap();
+                    let ran = st.tasks[t].clock.saturating_sub(st.tasks[t].quantum_start);
+                    if ran >= cfg.profile.quantum_ns && !st.cores[c].ready.is_empty() {
+                        st.cores[c].time = st.tasks[t].clock;
+                        st.tasks[t].state = TaskState::Ready;
+                        st.cores[c].ready.push_back(t);
+                        st.cores[c].current = None;
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        // Pick the min-clock occupant (tie-break: lowest task id).
+        st.running = st
+            .cores
+            .iter()
+            .filter_map(|c| c.current)
+            .min_by_key(|&t| (st.tasks[t].clock, t));
+        if st.running.is_none() && st.live > 0 {
+            // All live tasks blocked: deadlock in the simulated program.
+            let waiting: Vec<_> = st.futex.iter().map(|(a, q)| (*a, q.len())).collect();
+            st.aborted = true;
+            self.shared.cv.notify_all();
+            panic!("simulated deadlock: {} live tasks all blocked; futex queues: {waiting:?}", st.live);
+        }
+    }
+}
+
+/// Mutable view of the machine passed to instrumented operations.
+pub(crate) struct OpCtx<'a> {
+    st: &'a mut State,
+    cfg: &'a MachineCfg,
+    me: usize,
+}
+
+impl OpCtx<'_> {
+    /// This task's virtual clock.
+    pub fn now(&self) -> u64 {
+        self.st.tasks[self.me].clock
+    }
+
+    /// Charge pure CPU time.
+    pub fn charge(&mut self, ns: u64) {
+        self.st.tasks[self.me].clock += ns;
+    }
+
+    /// One cache-line access; models MESI-lite coherence + bus FIFO.
+    pub fn mem_access(&mut self, addr: u64, write: bool, rmw: bool) {
+        let line_addr = addr >> 6;
+        let core = self.st.tasks[self.me].core;
+        let bit = 1u64 << core;
+        let line = self.st.lines.entry(line_addr).or_default();
+        let hit = if write {
+            line.owner == Some(core) && line.sharers == bit
+        } else {
+            line.sharers & bit != 0
+        };
+        if hit {
+            self.st.tasks[self.me].clock += self.cfg.mem.hit_ns;
+            self.st.stats.hits += 1;
+        } else {
+            // Miss: line transfer over the shared bus (FIFO in virtual time).
+            let t = self.st.tasks[self.me].clock;
+            let start = t.max(self.st.bus_free_at);
+            let end = start + self.cfg.mem.bus_ns;
+            self.st.bus_free_at = end;
+            self.st.stats.bus_busy_ns += self.cfg.mem.bus_ns;
+            self.st.tasks[self.me].clock = end + self.cfg.mem.hit_ns;
+            self.st.stats.misses += 1;
+            let line = self.st.lines.get_mut(&line_addr).unwrap();
+            if write {
+                line.sharers = bit;
+                line.owner = Some(core);
+            } else {
+                line.sharers |= bit;
+                if line.owner != Some(core) {
+                    line.owner = None;
+                }
+            }
+        }
+        if rmw {
+            self.st.tasks[self.me].clock += self.cfg.mem.rmw_extra_ns;
+        }
+        if write && !rmw {
+            // Plain store invalidates other sharers (no extra latency charge
+            // beyond the transfer; invalidation traffic is folded into bus_ns).
+            let line = self.st.lines.get_mut(&line_addr).unwrap();
+            line.sharers = bit;
+            line.owner = Some(core);
+        }
+    }
+
+    /// Bulk payload access (message copy): sequential line accesses.
+    pub fn touch(&mut self, region: u64, bytes: usize, write: bool) {
+        let lines = ((bytes + 63) / 64).max(1);
+        for i in 0..lines {
+            self.mem_access(region + (i as u64) * 64, write, false);
+        }
+    }
+
+    /// Charge the profile's uncontended lock entry cost. On profiles with
+    /// kernel dispatcher locks (Windows) even the fast path is a syscall.
+    pub fn lock_fast(&mut self) {
+        if self.cfg.profile.kernel_always {
+            self.syscall();
+        } else {
+            self.charge(self.cfg.profile.lock_fast_ns);
+        }
+    }
+
+    /// Charge a kernel entry.
+    pub fn syscall(&mut self) {
+        self.charge(self.cfg.profile.syscall_ns);
+        self.st.stats.syscalls += 1;
+    }
+
+    /// Explicit yield: charge and rotate this core's occupancy.
+    pub fn yield_now(&mut self) {
+        self.charge(self.cfg.profile.yield_ns);
+        let core = self.st.tasks[self.me].core;
+        if !self.st.cores[core].ready.is_empty() {
+            self.st.cores[core].time = self.st.tasks[self.me].clock;
+            self.st.tasks[self.me].state = TaskState::Ready;
+            self.st.cores[core].ready.push_back(self.me);
+            self.st.cores[core].current = None;
+        }
+    }
+
+    /// Sleep on `addr` if `still` holds (checked race-free under the
+    /// monitor). The task parks until another task calls `futex_wake`.
+    pub fn futex_wait(&mut self, addr: u64, still: impl FnOnce() -> bool) {
+        if !still() {
+            return;
+        }
+        let core = self.st.tasks[self.me].core;
+        self.st.tasks[self.me].state = TaskState::Blocked;
+        self.st.futex.entry(addr).or_default().push_back(self.me);
+        self.st.cores[core].time = self.st.tasks[self.me].clock;
+        self.st.cores[core].current = None;
+    }
+
+    /// Wake up to `n` sleepers on `addr`; returns how many woke.
+    pub fn futex_wake(&mut self, addr: u64, n: usize) -> usize {
+        let now = self.st.tasks[self.me].clock;
+        let mut woke = 0;
+        for _ in 0..n {
+            let Some(t) = self.st.futex.get_mut(&addr).and_then(|q| q.pop_front()) else {
+                break;
+            };
+            self.st.tasks[t].state = TaskState::Ready;
+            self.st.tasks[t].clock =
+                self.st.tasks[t].clock.max(now + self.cfg.profile.sched_latency_ns);
+            let dest = if self.st.tasks[t].pinned {
+                self.st.tasks[t].core
+            } else {
+                // Migrate to the least-loaded core (deterministic tie-break).
+                let (dest, _) = self
+                    .st
+                    .cores
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| (i, c.ready.len() + c.current.is_some() as usize))
+                    .min_by_key(|&(i, load)| (load, i))
+                    .unwrap();
+                dest
+            };
+            if dest != self.st.tasks[t].core {
+                self.st.tasks[t].core = dest;
+                self.st.stats.migrations += 1;
+            }
+            self.st.cores[dest].ready.push_back(t);
+            woke += 1;
+        }
+        if self.st.futex.get(&addr).map_or(false, |q| q.is_empty()) {
+            self.st.futex.remove(&addr);
+        }
+        woke
+    }
+
+    /// Number of sleepers on `addr` (for the release-side wake decision).
+    pub fn futex_waiters(&self, addr: u64) -> usize {
+        self.st.futex.get(&addr).map_or(0, |q| q.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::{Atom32, World};
+    use crate::sim::SimWorld;
+    use std::sync::Arc;
+
+    fn cfg(cores: usize) -> MachineCfg {
+        MachineCfg::new(cores, OsProfile::linux_rt(), AffinityMode::PinnedSpread)
+    }
+
+    #[test]
+    fn empty_machine_runs() {
+        let m = Machine::new(cfg(2));
+        let stats = m.run(Vec::new());
+        assert_eq!(stats.virtual_ns, 0);
+    }
+
+    #[test]
+    fn single_task_charges_work() {
+        let m = Machine::new(cfg(1));
+        let stats = m.run_tasks(1, |_| || SimWorld::work(5_000));
+        assert!(stats.virtual_ns >= 5_000, "{stats:?}");
+    }
+
+    #[test]
+    fn parallel_tasks_overlap_in_virtual_time() {
+        // Two CPU-bound tasks: on 2 cores the makespan is ~1x the work;
+        // on 1 core it is ~2x (plus switches).
+        let work = 100_000;
+        let m2 = Machine::new(cfg(2));
+        let s2 = m2.run_tasks(2, |_| move || SimWorld::work(work));
+        let m1 = Machine::new(cfg(1));
+        let s1 = m1.run_tasks(2, |_| move || SimWorld::work(work));
+        assert!(s2.virtual_ns < s1.virtual_ns, "{s2:?} vs {s1:?}");
+        assert!(s1.virtual_ns >= 2 * work);
+    }
+
+    #[test]
+    fn deterministic_stats() {
+        let run = || {
+            let m = Machine::new(cfg(4));
+            let a = Arc::new(<SimWorld as World>::U32::new(0));
+            m.run_tasks(4, |_| {
+                let a = a.clone();
+                move || {
+                    for _ in 0..200 {
+                        a.fetch_add(1);
+                    }
+                }
+            })
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn atomic_contention_pingpongs_on_multicore_only() {
+        let run = |cores| {
+            let m = Machine::new(cfg(cores));
+            let a = Arc::new(<SimWorld as World>::U32::new(0));
+            m.run_tasks(2, |_| {
+                let a = a.clone();
+                move || {
+                    for _ in 0..500 {
+                        a.fetch_add(1);
+                    }
+                }
+            })
+        };
+        let s1 = run(1);
+        let s4 = run(4);
+        // On one core the line stays resident; on four it ping-pongs.
+        assert!(s4.misses > 10 * s1.misses.max(1), "{s1:?} vs {s4:?}");
+    }
+
+    #[test]
+    fn futex_roundtrip() {
+        let m = Machine::new(cfg(2));
+        let flag = Arc::new(<SimWorld as World>::U32::new(0));
+        let f2 = flag.clone();
+        let h1 = m.spawn(move || {
+            // Wait until the flag is set. The condition closure runs inside
+            // the monitor: it must use peek(), never a charged op.
+            SimWorld::futex_wait_on(0xF00D, || f2.peek() == 0);
+            assert_eq!(f2.load(), 1);
+        });
+        let f3 = flag.clone();
+        let h2 = m.spawn(move || {
+            SimWorld::work(10_000);
+            f3.store(1);
+            SimWorld::futex_wake_on(0xF00D, usize::MAX);
+        });
+        let stats = m.run(vec![h1, h2]);
+        assert!(stats.virtual_ns >= 10_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "simulated deadlock")]
+    fn deadlock_detected() {
+        let m = Machine::new(cfg(1));
+        let h = m.spawn(|| {
+            SimWorld::futex_wait_on(0xDEAD, || true); // nobody will wake us
+        });
+        m.run(vec![h]);
+    }
+
+    #[test]
+    fn quantum_rotation_lets_spinner_progress() {
+        // A spinner and a setter pinned to ONE core: only quantum expiry
+        // lets the setter run; the spinner must still terminate.
+        let m = Machine::new(MachineCfg::new(
+            1,
+            OsProfile::linux_rt(),
+            AffinityMode::SingleCore,
+        ));
+        let flag = Arc::new(<SimWorld as World>::U32::new(0));
+        let f1 = flag.clone();
+        let h1 = m.spawn(move || {
+            while f1.load() == 0 {
+                SimWorld::spin_hint();
+            }
+        });
+        let f2 = flag.clone();
+        let h2 = m.spawn(move || {
+            f2.store(1);
+        });
+        let stats = m.run(vec![h1, h2]);
+        assert!(stats.ctx_switches >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn bus_serializes_misses() {
+        // 4 cores all missing constantly: bus busy time ~ total misses * bus_ns
+        // and utilization approaches 1.
+        let m = Machine::new(cfg(4));
+        let stats = m.run_tasks(4, |i| {
+            move || {
+                // Each task writes its own distinct lines: all cold misses.
+                let base = alloc_region(64 * 300);
+                for j in 0..300u64 {
+                    SimWorld::touch(base + j * 64, 1, true);
+                    let _ = i;
+                }
+            }
+        });
+        assert_eq!(stats.misses, 1200);
+        assert!(stats.bus_utilization() > 0.8, "{stats:?}");
+    }
+
+    #[test]
+    fn free_affinity_migrates_on_wake() {
+        let m = Machine::new(MachineCfg::new(2, OsProfile::linux_rt(), AffinityMode::Free));
+        let flag = Arc::new(<SimWorld as World>::U32::new(0));
+        let f1 = flag.clone();
+        // Three tasks on 2 cores; task 2 blocks then wakes and may migrate.
+        let h0 = m.spawn(move || {
+            SimWorld::work(200_000);
+            f1.store(1);
+            SimWorld::futex_wake_on(0xBEEF, usize::MAX);
+        });
+        let f2 = flag.clone();
+        let h1 = m.spawn(move || {
+            SimWorld::futex_wait_on(0xBEEF, || f2.peek() == 0);
+            SimWorld::work(1_000);
+        });
+        let h2 = m.spawn(move || SimWorld::work(500_000));
+        let stats = m.run(vec![h0, h1, h2]);
+        assert!(stats.virtual_ns >= 200_000);
+    }
+}

@@ -1,0 +1,34 @@
+//! Deterministic discrete-event SMP simulator.
+//!
+//! The paper's evaluation ran on 4-core KVM guests; this host may have any
+//! number of cores (the CI machine has one). The simulator reproduces the
+//! paper's *causal mechanisms* — lock convoys, cache-line ping-pong,
+//! kernel-lock context switches, scheduling quanta, CPU affinity — in
+//! virtual time, deterministically, while executing the **real algorithm
+//! code** (the same generic implementations that run on real atomics).
+//!
+//! Execution model (conservative serialization):
+//!
+//! * Every simulated task runs on its own OS thread, but a global monitor
+//!   allows exactly **one** task to execute user code at a time: the task
+//!   with the minimal virtual clock among the current core occupants.
+//!   Interactions therefore happen in virtual-time order and the whole
+//!   run is a deterministic function of the configuration.
+//! * Each virtual core has a ready queue, an occupant and a core clock.
+//!   Quantum expiry and blocking rotate occupants, charging the OS cost
+//!   profile's context-switch price.
+//! * A MESI-lite cache-line directory decides hit vs. miss per access;
+//!   misses queue FIFO on a single memory bus (the paper's QPN bottleneck
+//!   resource), whose busy time yields the utilization statistic.
+//! * Kernel locks are futex-style: user-mode fast path, syscall + block on
+//!   contention, wake with scheduling latency — all priced by
+//!   [`crate::os::OsProfile`].
+//!
+//! [`SimWorld`] (in [`world`]) implements [`crate::lockfree::mem::World`]
+//! on top of this machine via a thread-local task context.
+
+mod machine;
+pub mod world;
+
+pub use machine::{Machine, MachineCfg, MachineStats, MemCosts};
+pub use world::SimWorld;

@@ -1,0 +1,192 @@
+//! Minimal CLI argument parser (offline substitute for clap).
+//!
+//! Model: `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may use `--key=value` or `--key value`; unknown keys are reported
+//! by the caller via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token, if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    args.positional.extend(iter.by_ref());
+                    break;
+                }
+                let (key, val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // `--key value` unless the next token is a flag or
+                        // missing, then it is a boolean `true`.
+                        let takes_value = iter
+                            .peek()
+                            .map(|n| !n.starts_with("--"))
+                            .unwrap_or(false);
+                        if takes_value {
+                            (body.to_string(), iter.next().unwrap())
+                        } else {
+                            (body.to_string(), "true".to_string())
+                        }
+                    }
+                };
+                if args.options.insert(key.clone(), val).is_some() {
+                    return Err(Error::Config(format!("duplicate option --{key}")));
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer option.
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// Integer option with default.
+    pub fn get_u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.get_u64(key)?.unwrap_or(default))
+    }
+
+    /// Float option with default.
+    pub fn get_f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| Error::Config(format!("--{key} expects a float, got `{v}`"))),
+        }
+    }
+
+    /// Boolean flag (present without value, or explicit true/false).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Error if any provided option was never consumed (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for key in self.options.keys() {
+            if !consumed.iter().any(|c| c == key) {
+                return Err(Error::Config(format!("unknown option --{key}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("stress --cores 4 --backend lockfree topo.toml");
+        assert_eq!(a.command.as_deref(), Some("stress"));
+        assert_eq!(a.get_u64("cores").unwrap(), Some(4));
+        assert_eq!(a.get("backend"), Some("lockfree"));
+        assert_eq!(a.positional, vec!["topo.toml"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --cores=8");
+        assert_eq!(a.get_u64("cores").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("run --verbose --affinity");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("affinity"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --out x.txt");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run -- --not-a-flag");
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        assert!(Args::parse(["--x", "1", "--x", "2"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn unknown_option_caught_by_finish() {
+        let a = parse("run --nope 3");
+        assert!(a.finish().is_err());
+        let b = parse("run --cores 3");
+        assert_eq!(b.get_u64("cores").unwrap(), Some(3));
+        assert!(b.finish().is_ok());
+    }
+
+    #[test]
+    fn bad_integer_reports_key() {
+        let a = parse("run --cores banana");
+        let err = a.get_u64("cores").unwrap_err().to_string();
+        assert!(err.contains("cores"), "{err}");
+    }
+}

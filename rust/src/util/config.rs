@@ -1,0 +1,305 @@
+//! TOML-subset parser for topology and experiment configuration.
+//!
+//! Supports the subset the coordinator needs:
+//!
+//! * `key = value` pairs with string, integer, float, boolean and
+//!   homogeneous inline-array values;
+//! * `[section]` and repeated `[[array-of-tables]]` headers;
+//! * `#` comments and blank lines.
+//!
+//! No datetimes, no dotted keys, no multi-line strings — topology files do
+//! not need them. Errors carry line numbers.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// 64-bit signed integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (accepting exact floats too).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As float (accepting integers).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One table of key/value pairs.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parsed document: top-level table, named tables, arrays-of-tables.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    /// Keys before any section header.
+    pub root: Table,
+    /// `[name]` sections.
+    pub tables: BTreeMap<String, Table>,
+    /// `[[name]]` sections in file order.
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl Document {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Document> {
+        enum Target {
+            Root,
+            Table(String),
+            Array(String, usize),
+        }
+        let mut doc = Document::default();
+        let mut target = Target::Root;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| Error::Config(format!("line {}: {}", lineno + 1, msg));
+
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(err("empty [[array]] name"));
+                }
+                let list = doc.arrays.entry(name.clone()).or_default();
+                list.push(Table::new());
+                target = Target::Array(name, list.len() - 1);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(err("empty [table] name"));
+                }
+                doc.tables.entry(name.clone()).or_default();
+                target = Target::Table(name);
+            } else {
+                let (key, val) = line
+                    .split_once('=')
+                    .ok_or_else(|| err("expected `key = value`"))?;
+                let key = key.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(val.trim())
+                    .map_err(|m| err(&format!("bad value for `{key}`: {m}")))?;
+                let table = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Table(name) => doc.tables.get_mut(name).unwrap(),
+                    Target::Array(name, i) => &mut doc.arrays.get_mut(name).unwrap()[*i],
+                };
+                table.insert(key.to_string(), value);
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Fetch from the root table.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.root.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unrecognised value `{s}`"))
+}
+
+/// Split on commas that are not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_comments() {
+        let doc = Document::parse(
+            r#"
+            # topology
+            name = "simple"   # trailing
+            cores = 4
+            rate = 0.5
+            rt = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("simple"));
+        assert_eq!(doc.get("cores").unwrap().as_int(), Some(4));
+        assert_eq!(doc.get("rate").unwrap().as_float(), Some(0.5));
+        assert_eq!(doc.get("rt").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn tables_and_arrays_of_tables() {
+        let doc = Document::parse(
+            r#"
+            [machine]
+            cores = 2
+            [[channel]]
+            from = "n1:0"
+            to = "n2:0"
+            [[channel]]
+            from = "n2:1"
+            to = "n1:1"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.tables["machine"]["cores"].as_int(), Some(2));
+        let chans = &doc.arrays["channel"];
+        assert_eq!(chans.len(), 2);
+        assert_eq!(chans[1]["from"].as_str(), Some("n2:1"));
+    }
+
+    #[test]
+    fn inline_arrays() {
+        let doc = Document::parse(r#"hits = [0.5, 0.75, 1.0]"#).unwrap();
+        let arr = doc.get("hits").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_float(), Some(1.0));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = Document::parse(r#"m = [[1, 2], [3, 4]]"#).unwrap();
+        let outer = doc.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Document::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.get("tag").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(Document::parse("x = @nope").is_err());
+        assert!(Document::parse("x = \"unterminated").is_err());
+        assert!(Document::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = Document::parse("x = []").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_array().unwrap().len(), 0);
+    }
+}

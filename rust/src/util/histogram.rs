@@ -1,0 +1,226 @@
+//! Log-bucketed latency histogram (HDR-style, fixed footprint).
+//!
+//! Records u64 nanosecond samples into 2^k log2 buckets with 16 linear
+//! sub-buckets each, supporting count/mean/percentiles with bounded
+//! (~6%) relative quantile error — plenty for the paper's latency-speedup
+//! factors, which span 2x–25x.
+
+const SUB_BITS: u32 = 4; // 16 linear sub-buckets per octave
+const SUB: usize = 1 << SUB_BITS;
+const OCTAVES: usize = 40; // covers up to ~2^40 ns (~18 min)
+
+/// Fixed-size log-linear histogram of u64 samples.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; OCTAVES * SUB],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let msb = 63 - v.leading_zeros();
+        if msb < SUB_BITS {
+            return v as usize;
+        }
+        let octave = (msb - SUB_BITS + 1) as usize;
+        let sub = (v >> (msb - SUB_BITS)) as usize & (SUB - 1);
+        ((octave * SUB) + sub + SUB).min(OCTAVES * SUB - 1)
+    }
+
+    /// Lower bound of the bucket a value falls into (used for quantiles).
+    fn bucket_floor(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let octave = (idx - SUB) / SUB;
+        let sub = (idx - SUB) % SUB;
+        // Invert index(): msb = octave + SUB_BITS - 1; the sub-bucket adds
+        // sub units of base/SUB.
+        let base = 1u64 << (octave as u32 + SUB_BITS - 1);
+        base + (sub as u64) * (base >> SUB_BITS)
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index(value)] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Arithmetic mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Exact minimum sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile `q` in [0,1] (bucket lower bound).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_floor(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median shorthand.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th percentile shorthand.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram {{ n: {}, mean: {:.1}, min: {}, p50: {}, p99: {}, max: {} }}",
+            self.total,
+            self.mean(),
+            self.min(),
+            self.p50(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn exact_min_max_mean() {
+        let mut h = Histogram::new();
+        for v in [10, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_bounded_error() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5) as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.10, "p50={p50}");
+        let p99 = h.quantile(0.99) as f64;
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.10, "p99={p99}");
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in 1..500u64 {
+            a.record(v);
+            c.record(v);
+        }
+        for v in 500..1000u64 {
+            b.record(v * 7);
+            c.record(v * 7);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.9), c.quantile(0.9));
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn huge_values_clamp_not_panic() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.max(), u64::MAX);
+        assert!(h.quantile(1.0) <= u64::MAX);
+    }
+}

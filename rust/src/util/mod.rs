@@ -1,0 +1,18 @@
+//! Hand-rolled substrates: PRNG, histogram, TOML-subset parser, property
+//! testing and CLI parsing.
+//!
+//! The reproduction builds fully offline, so the usual ecosystem crates
+//! (rand, hdrhistogram, serde/toml, proptest, clap, criterion) are
+//! re-implemented here at the scale this project needs. Each is a small,
+//! tested module rather than a full clone.
+
+pub mod args;
+pub mod config;
+pub mod histogram;
+pub mod prop;
+pub mod rng;
+
+pub use args::Args;
+pub use config::Value;
+pub use histogram::Histogram;
+pub use rng::XorShift;

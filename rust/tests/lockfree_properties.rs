@@ -1,0 +1,276 @@
+//! Property-based integration tests over the lock-free toolbox and the
+//! MCAPI runtime, using the in-tree property harness (`util::prop`).
+//!
+//! Each property runs dozens of randomized cases; failures print the seed
+//! (replay with MCAPI_PROP_SEED=<seed>).
+
+use mcapi::lockfree::{BitSet, FreeList, Nbb, Nbw, ReadStatus, RealWorld};
+use mcapi::mcapi::types::{BackendKind, EndpointId, RuntimeCfg, Status};
+use mcapi::mcapi::McapiRuntime;
+use mcapi::util::prop::{check, check_res};
+use mcapi::util::rng::XorShift;
+
+#[test]
+fn prop_nbb_is_a_fifo_queue() {
+    check_res(
+        "NBB behaves as a bounded FIFO under arbitrary op sequences",
+        60,
+        |rng: &mut XorShift| {
+            let cap = rng.range(1, 16) as usize;
+            let ops: Vec<bool> = (0..rng.range(1, 200)).map(|_| rng.chance(0.55)).collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let q = Nbb::<u64, RealWorld>::new(*cap);
+            let mut model = std::collections::VecDeque::new();
+            let mut next = 0u64;
+            for &push in ops {
+                if push {
+                    match q.insert(next) {
+                        Ok(()) => {
+                            model.push_back(next);
+                            if model.len() > *cap {
+                                return Err("exceeded capacity".into());
+                            }
+                        }
+                        Err((_, v)) => {
+                            if model.len() != *cap {
+                                return Err(format!("spurious full at {}/{}", model.len(), cap));
+                            }
+                            if v != next {
+                                return Err("lost item on failed insert".into());
+                            }
+                        }
+                    }
+                    next += 1;
+                } else {
+                    match q.read() {
+                        ReadStatus::Ok(v) => {
+                            let want = model.pop_front().ok_or("read from empty model")?;
+                            if v != want {
+                                return Err(format!("FIFO violated: got {v}, want {want}"));
+                            }
+                        }
+                        ReadStatus::Empty => {
+                            if !model.is_empty() {
+                                return Err("spurious empty".into());
+                            }
+                        }
+                        ReadStatus::EmptyButProducerInserting => {
+                            return Err("peer-active status without a peer".into())
+                        }
+                    }
+                }
+                if q.len() != model.len() {
+                    return Err(format!("len {} != model {}", q.len(), model.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nbw_read_always_returns_last_write() {
+    check(
+        "NBW single-threaded read == last write",
+        40,
+        |rng: &mut XorShift| {
+            let depth = rng.range(1, 8) as usize;
+            let writes: Vec<u64> = (0..rng.range(1, 50)).map(|_| rng.next_u64()).collect();
+            (depth, writes)
+        },
+        |(depth, writes)| {
+            let n = Nbw::<u64, RealWorld>::new(*depth, 0);
+            let mut last = None;
+            for &w in writes {
+                n.write(w);
+                last = Some(w);
+            }
+            n.read().0 == last
+        },
+    );
+}
+
+#[test]
+fn prop_bitset_alloc_free_bijective() {
+    check_res(
+        "bitset never double-allocates across random interleavings",
+        50,
+        |rng: &mut XorShift| {
+            let bits = rng.range(1, 100) as usize;
+            let steps: Vec<bool> = (0..rng.range(1, 300)).map(|_| rng.chance(0.6)).collect();
+            (bits, steps)
+        },
+        |(bits, steps)| {
+            let b = BitSet::<RealWorld>::new(*bits);
+            let mut live = std::collections::BTreeSet::new();
+            for &alloc in steps {
+                if alloc {
+                    match b.alloc() {
+                        Some(i) => {
+                            if !live.insert(i) {
+                                return Err(format!("double alloc {i}"));
+                            }
+                            if i >= *bits {
+                                return Err("out of range".into());
+                            }
+                        }
+                        None => {
+                            if live.len() != *bits {
+                                return Err("spurious exhaustion".into());
+                            }
+                        }
+                    }
+                } else if let Some(&i) = live.iter().next() {
+                    live.remove(&i);
+                    if !b.free(i) {
+                        return Err(format!("free({i}) found clear bit"));
+                    }
+                }
+            }
+            if b.count() != live.len() {
+                return Err("count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_freelist_conserves_indices() {
+    check_res(
+        "treiber free-list conserves the index set",
+        40,
+        |rng: &mut XorShift| {
+            let cap = rng.range(1, 64) as usize;
+            let steps: Vec<bool> = (0..rng.range(1, 200)).map(|_| rng.chance(0.5)).collect();
+            (cap, steps)
+        },
+        |(cap, steps)| {
+            let f = FreeList::<RealWorld>::new_full(*cap);
+            let mut held = Vec::new();
+            for &pop in steps {
+                if pop {
+                    if let Some(i) = f.pop() {
+                        if held.contains(&i) {
+                            return Err(format!("duplicate {i}"));
+                        }
+                        held.push(i);
+                    } else if held.len() != *cap {
+                        return Err("spurious exhaustion".into());
+                    }
+                } else if let Some(i) = held.pop() {
+                    f.push(i);
+                }
+                if f.free_count() + held.len() != *cap {
+                    return Err("index leak".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mcapi_message_sequences_roundtrip() {
+    check_res(
+        "random message batches roundtrip on both backends",
+        25,
+        |rng: &mut XorShift| {
+            let backend =
+                if rng.chance(0.5) { BackendKind::Locked } else { BackendKind::LockFree };
+            let batches: Vec<(u8, u8)> = (0..rng.range(1, 40))
+                .map(|_| (rng.below(4) as u8, rng.range(1, 24) as u8))
+                .collect();
+            (backend, batches)
+        },
+        |(backend, batches)| {
+            let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg::with_backend(*backend));
+            let dst = EndpointId::new(0, 1, 1);
+            let ep = rt.create_endpoint(dst, 1).map_err(|e| format!("{e:?}"))?;
+            // Send batch (bounded by queue capacity), then drain and match.
+            let mut sent: Vec<(u8, Vec<u8>)> = Vec::new();
+            for (i, &(prio, len)) in batches.iter().enumerate() {
+                let payload = vec![i as u8; len as usize];
+                match rt.msg_send(0, dst, &payload, prio) {
+                    Ok(()) => sent.push((prio % 4, payload)),
+                    Err(s) if s.is_would_block() || s == Status::MemLimit => {}
+                    Err(e) => return Err(format!("{e:?}")),
+                }
+            }
+            // Drain: priority classes come out class-by-class ascending, and
+            // FIFO within a class.
+            let mut by_prio: Vec<Vec<Vec<u8>>> = vec![Vec::new(); 4];
+            for (p, payload) in &sent {
+                by_prio[*p as usize].push(payload.clone());
+            }
+            let expected: Vec<Vec<u8>> = by_prio.into_iter().flatten().collect();
+            let mut got = Vec::new();
+            let mut buf = [0u8; 64];
+            loop {
+                match rt.msg_recv(ep, &mut buf) {
+                    Ok(n) => got.push(buf[..n].to_vec()),
+                    Err(Status::WouldBlock) => break,
+                    Err(e) => return Err(format!("recv {e:?}")),
+                }
+            }
+            if got != expected {
+                return Err(format!("drain mismatch: {} vs {} items", got.len(), expected.len()));
+            }
+            if rt.buffers_available() != rt.cfg().pool_buffers {
+                return Err("buffer leak".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_stress_deterministic_for_any_small_topology() {
+    use mcapi::coordinator::{run_stress_sim, ChannelSpec, MsgKind, StressOpts, Topology};
+    use mcapi::os::{AffinityMode, OsProfile};
+    use mcapi::sim::{Machine, MachineCfg};
+    check_res(
+        "random small topologies run deterministically on the simulator",
+        8,
+        |rng: &mut XorShift| {
+            let kinds = [MsgKind::Message, MsgKind::Packet, MsgKind::Scalar];
+            let n = rng.range(1, 3) as u16;
+            let channels: Vec<ChannelSpec> = (0..n)
+                .map(|i| ChannelSpec {
+                    // Distinct ports per role: a chain node both sends and
+                    // receives, and endpoints are unique by (node, port).
+                    from: (i, 100 + i),
+                    to: (i + 1, 1 + i),
+                    kind: kinds[rng.below(3) as usize],
+                    count: rng.range(20, 60),
+                })
+                .collect();
+            let cores = rng.range(1, 4) as usize;
+            (Topology { channels }, cores)
+        },
+        |(topo, cores)| {
+            let run = || {
+                let m = Machine::new(MachineCfg::new(
+                    *cores,
+                    OsProfile::linux_rt(),
+                    AffinityMode::PinnedSpread,
+                ));
+                run_stress_sim(&m, RuntimeCfg::default(), topo, StressOpts::default())
+            };
+            let a = run();
+            let b = run();
+            if a.elapsed_ns != b.elapsed_ns {
+                return Err(format!("nondeterministic: {} vs {}", a.elapsed_ns, b.elapsed_ns));
+            }
+            if a.delivered != topo.total_transactions() {
+                return Err("lost messages".into());
+            }
+            if a.order_violations != 0 {
+                return Err("order violations".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,106 @@
+//! Integration: the Section 6 matrix reproduces the paper's *shape* —
+//! who wins, by roughly what factor, where the contrasts lie. Reduced
+//! transaction counts keep CI fast; the full counts run in `cargo bench`.
+
+use mcapi::coordinator::experiment::{run_cell, run_cell_latency, Cell, Matrix, MULTI_CORES};
+use mcapi::coordinator::MsgKind;
+use mcapi::mcapi::types::BackendKind;
+use mcapi::os::{AffinityMode, OsProfile};
+
+const TX: u64 = 300;
+
+fn cell(os: OsProfile, cores: usize, kind: MsgKind, backend: BackendKind) -> Cell {
+    Cell { os, cores, kind, backend, affinity: AffinityMode::PinnedSpread }
+}
+
+#[test]
+fn table2_shape_lockbased_penalty() {
+    for os in [OsProfile::linux_rt(), OsProfile::windows()] {
+        for kind in [MsgKind::Message, MsgKind::Scalar] {
+            let single = run_cell(cell(os, 1, kind, BackendKind::Locked), TX);
+            let multi = run_cell(cell(os, MULTI_CORES, kind, BackendKind::Locked), TX);
+            let speedup = multi.report.throughput() / single.report.throughput();
+            assert!(
+                speedup < 0.9,
+                "{}/{}: lock-based multicore must be slower (got {speedup:.2}x)",
+                os.name,
+                kind.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn table2_linux_penalty_much_harsher_than_windows() {
+    let penalty = |os: OsProfile| {
+        let single = run_cell(cell(os, 1, MsgKind::Message, BackendKind::Locked), TX);
+        let multi = run_cell(cell(os, MULTI_CORES, MsgKind::Message, BackendKind::Locked), TX);
+        multi.report.throughput() / single.report.throughput()
+    };
+    let linux = penalty(OsProfile::linux_rt());
+    let windows = penalty(OsProfile::windows());
+    assert!(
+        linux < 0.6 * windows,
+        "paper: Linux penalty at least ~3x worse (linux {linux:.2}, windows {windows:.2})"
+    );
+}
+
+#[test]
+fn fig7_lockfree_beats_locked_everywhere() {
+    for os in [OsProfile::linux_rt(), OsProfile::windows()] {
+        for cores in [1usize, MULTI_CORES] {
+            for kind in MsgKind::all() {
+                let locked = run_cell(cell(os, cores, kind, BackendKind::Locked), TX);
+                let lockfree = run_cell(cell(os, cores, kind, BackendKind::LockFree), TX);
+                assert!(
+                    lockfree.report.throughput() > locked.report.throughput(),
+                    "{}/{}c/{}",
+                    os.name,
+                    cores,
+                    kind.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig8_multicore_latency_speedup_dominates_single_core() {
+    let speedup = |cores: usize| {
+        let locked = run_cell_latency(
+            cell(OsProfile::linux_rt(), cores, MsgKind::Message, BackendKind::Locked),
+            200,
+        );
+        let lockfree = run_cell_latency(
+            cell(OsProfile::linux_rt(), cores, MsgKind::Message, BackendKind::LockFree),
+            200,
+        );
+        locked.mean() / lockfree.mean()
+    };
+    let single = speedup(1);
+    let multi = speedup(MULTI_CORES);
+    assert!(multi > 3.0 * single, "single {single:.1}x vs multi {multi:.1}x");
+    assert!(multi > 8.0, "double-digit multicore payoff expected, got {multi:.1}x");
+}
+
+#[test]
+fn lockfree_multicore_not_penalized() {
+    // The paper: migration degrades lock-based and *increases* lock-free
+    // performance. At minimum, lock-free must not collapse like the
+    // lock-based path does.
+    let single = run_cell(cell(OsProfile::linux_rt(), 1, MsgKind::Scalar, BackendKind::LockFree), TX);
+    let multi = run_cell(
+        cell(OsProfile::linux_rt(), MULTI_CORES, MsgKind::Scalar, BackendKind::LockFree),
+        TX,
+    );
+    let speedup = multi.report.throughput() / single.report.throughput();
+    assert!(speedup > 1.0, "lock-free scalar must speed up on multicore, got {speedup:.2}x");
+}
+
+#[test]
+fn matrix_builders_cover_full_dimensions() {
+    let m = Matrix::new(50);
+    assert_eq!(m.table2().len(), 6); // 2 OS x 3 kinds
+    assert_eq!(m.fig7().len(), 36); // 2 OS x 3 kinds x 2 backends x 3 configs
+    assert_eq!(m.fig8().len(), 18); // 2 OS x 3 kinds x 3 configs
+}

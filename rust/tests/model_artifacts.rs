@@ -1,0 +1,107 @@
+//! Integration: the AOT model artifacts (JAX/Pallas → HLO text → PJRT)
+//! against the native analytic solver and the paper's Section 5 claims.
+//!
+//! Requires `make artifacts`.
+
+use mcapi::model::stopcrit::{stop_criterion, GAP_BUDGET, REFERENCE_HIT_RATE};
+use mcapi::model::{analytic, QpnModel, Workload};
+use mcapi::runtime::{ArtifactSpec, PjrtRuntime};
+
+fn model() -> (PjrtRuntime, QpnModel) {
+    assert!(
+        ArtifactSpec::MvaSolver.exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let m = QpnModel::load(&rt).expect("load artifacts");
+    (rt, m)
+}
+
+#[test]
+fn pjrt_platform_is_cpu() {
+    let (rt, _) = model();
+    assert_eq!(rt.platform_name().to_lowercase(), "cpu");
+    assert!(rt.device_count() >= 1);
+}
+
+#[test]
+fn artifact_mva_matches_native_solver_across_workloads() {
+    let (_rt, m) = model();
+    let hits = [0.5, 0.7, 0.9, 1.0];
+    for name in ["message", "packet", "scalar"] {
+        let w = Workload::by_name(name).unwrap();
+        let pts = m.fig6_mva(&w, &[1, 2, 4], &hits).unwrap();
+        assert_eq!(pts.len(), 12);
+        for p in &pts {
+            let scaled = Workload { z: w.z * p.cores as f64, ..w };
+            let native = analytic::mva(&scaled, p.hit_rate, p.cores);
+            let rel = (p.throughput - native.throughput).abs() / native.throughput;
+            assert!(rel < 1e-3, "{name} h={} c={}: {rel}", p.hit_rate, p.cores);
+            assert!((p.utilization - native.utilization).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn fig6_paper_shape_via_artifacts() {
+    let (_rt, m) = model();
+    let w = Workload::message();
+    let hits = QpnModel::default_hits();
+    let pts = m.fig6_mva(&w, &[1, 2], &hits).unwrap();
+    let n = hits.len();
+    // Single core: fraction monotone in h, never reaches target, ends >85%.
+    for i in 1..n {
+        assert!(pts[i].target_fraction >= pts[i - 1].target_fraction - 1e-4);
+    }
+    assert!(pts[n - 1].target_fraction < 1.0 && pts[n - 1].target_fraction > 0.85);
+    // Dual core: utilization >= single core at the same h; closer to target.
+    for i in 0..n {
+        assert!(pts[n + i].utilization >= pts[i].utilization - 1e-3);
+    }
+    assert!(pts[2 * n - 1].target_fraction > pts[n - 1].target_fraction);
+}
+
+#[test]
+fn sweep_artifact_tracks_mva_shape() {
+    let (_rt, m) = model();
+    if !m.has_sweep() {
+        eprintln!("sweep artifact missing; skipping");
+        return;
+    }
+    let w = Workload::message();
+    let hits = [0.5, 0.7, 0.9];
+    let sweep = m.fig6_sweep(&w, &[2], &hits).unwrap();
+    let mva = m.fig6_mva(&w, &[2], &hits).unwrap();
+    for (s, a) in sweep.iter().zip(&mva) {
+        assert!((s.utilization - a.utilization).abs() < 0.2, "h={}", s.hit_rate);
+    }
+    // Monotone throughput in h.
+    assert!(sweep[2].throughput > sweep[0].throughput);
+}
+
+#[test]
+fn theoretical_max_calibration_and_stop_criterion() {
+    // ~630k msgs/s at the reference hit rate (paper Section 5).
+    let w = Workload::message();
+    let max = analytic::theoretical_max(&w, REFERENCE_HIT_RATE);
+    assert!((500_000.0..800_000.0).contains(&max), "{max}");
+    // The paper's own numbers: 7 us measured is within the budget, a
+    // lock-dominated 100 us is not.
+    assert!(stop_criterion(&w, REFERENCE_HIT_RATE, 7_000.0).stop);
+    assert!(!stop_criterion(&w, REFERENCE_HIT_RATE, 100_000.0).stop);
+    assert!(GAP_BUDGET > 1.0);
+}
+
+#[test]
+fn artifact_execution_is_reentrant() {
+    // Two executions of the same loaded executable must agree bit-for-bit
+    // (PJRT buffers are not reused across calls).
+    let (_rt, m) = model();
+    let w = Workload::scalar();
+    let a = m.fig6_mva(&w, &[1], &[0.6, 0.8]).unwrap();
+    let b = m.fig6_mva(&w, &[1], &[0.6, 0.8]).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.throughput, y.throughput);
+        assert_eq!(x.utilization, y.utilization);
+    }
+}
