@@ -56,19 +56,42 @@ pub mod util;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. (Hand-rolled `Display`/`Error` impls: the
+/// reproduction builds fully offline, so no `thiserror`.)
+#[derive(Debug)]
 pub enum Error {
     /// MCAPI status code mapped to an error (anything except `Success`).
-    #[error("mcapi status: {0:?}")]
     Status(crate::mcapi::types::Status),
     /// Configuration / topology parse problem.
-    #[error("config: {0}")]
     Config(String),
     /// PJRT / XLA runtime problem.
-    #[error("runtime: {0}")]
     Runtime(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Status(s) => write!(f, "mcapi status: {s:?}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }

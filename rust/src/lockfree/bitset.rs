@@ -8,11 +8,20 @@
 //! micro_lockfree` ablation compares this against a mutex-guarded free
 //! list to show why the paper switched.
 
-use super::mem::{Atom64, World};
+use super::mem::{Atom64, CachePadded, World};
 
 /// Fixed-capacity lock-free bit set.
+///
+/// Besides the alloc/free protocol the paper's request pool needs, the
+/// set doubles as a concurrent *flag board* (set/clear/snapshot) — the
+/// occupancy bitmap behind `mcapi::queue::LockFreeQueue` uses one
+/// instance per priority so an empty-queue poll costs one word load
+/// instead of a scan over every producer lane.
 pub struct BitSet<W: World> {
-    words: Box<[W::U64]>,
+    /// Each word padded to its own line: adjacent words are hammered by
+    /// unrelated allocator/producer cores, and false sharing between them
+    /// would serialize otherwise-independent CAS loops.
+    words: Box<[CachePadded<W::U64>]>,
     bits: usize,
 }
 
@@ -21,12 +30,20 @@ impl<W: World> BitSet<W> {
     pub fn new(bits: usize) -> Self {
         assert!(bits >= 1);
         let words = (bits + 63) / 64;
-        BitSet { words: (0..words).map(|_| W::U64::new(0)).collect(), bits }
+        BitSet {
+            words: (0..words).map(|_| CachePadded::new(W::U64::new(0))).collect(),
+            bits,
+        }
     }
 
     /// Capacity in bits.
     pub fn capacity(&self) -> usize {
         self.bits
+    }
+
+    /// Number of backing words (snapshot iteration bound).
+    pub fn num_words(&self) -> usize {
+        self.words.len()
     }
 
     /// Claim the lowest clear bit; `None` when all are set.
@@ -55,15 +72,30 @@ impl<W: World> BitSet<W> {
         prev & (1u64 << (idx % 64)) != 0
     }
 
+    /// Set a specific bit (flag-board use: not an allocation — any caller
+    /// may set any bit). Returns whether it was already set.
+    pub fn set(&self, idx: usize) -> bool {
+        assert!(idx < self.bits, "bit {idx} out of range {}", self.bits);
+        let prev = self.words[idx / 64].fetch_or(1u64 << (idx % 64));
+        prev & (1u64 << (idx % 64)) != 0
+    }
+
     /// Test a bit.
     pub fn is_set(&self, idx: usize) -> bool {
         assert!(idx < self.bits);
         self.words[idx / 64].load() & (1u64 << (idx % 64)) != 0
     }
 
+    /// Snapshot one backing word (bits `wi*64 ..`). Relaxed: flag-board
+    /// consumers re-synchronize through the flagged structure's own
+    /// acquire loads before trusting any bit.
+    pub fn snapshot_word(&self, wi: usize) -> u64 {
+        self.words[wi].load_relaxed() & self.usable_mask(wi)
+    }
+
     /// Number of set bits (approximate under concurrency).
     pub fn count(&self) -> usize {
-        self.words.iter().map(|w| w.load().count_ones() as usize).sum()
+        self.words.iter().map(|w| w.load_relaxed().count_ones() as usize).sum()
     }
 
     /// Bits of word `wi` that map to valid slots (last word may be partial).
@@ -139,6 +171,21 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn free_out_of_range_panics() {
         RBitSet::new(8).free(8);
+    }
+
+    #[test]
+    fn flag_board_set_clear_snapshot() {
+        let b = RBitSet::new(70); // spans two words
+        assert_eq!(b.num_words(), 2);
+        assert!(!b.set(3));
+        assert!(b.set(3), "second set reports already-set");
+        assert!(!b.set(69));
+        assert_eq!(b.snapshot_word(0), 1 << 3);
+        assert_eq!(b.snapshot_word(1), 1 << 5);
+        assert!(b.free(3));
+        assert_eq!(b.snapshot_word(0), 0);
+        // Snapshot masks bits beyond capacity in the last word.
+        assert_eq!(b.snapshot_word(1) & !((1u64 << 6) - 1), 0);
     }
 
     #[test]

@@ -7,14 +7,17 @@
 //! pointers: `head = tag(32) | index+1(32)`, tag incremented on every
 //! successful push/pop.
 
-use super::mem::{Atom32, Atom64, World};
+use super::mem::{Atom32, Atom64, CachePadded, World};
 
 const NIL: u32 = 0;
 
 /// Lock-free stack of slot indices `0..cap`.
 pub struct FreeList<W: World> {
-    /// `tag << 32 | (index + 1)`; index 0 encodes empty.
-    head: W::U64,
+    /// `tag << 32 | (index + 1)`; index 0 encodes empty. Every pop and
+    /// push from every core CASes this word — padding keeps that
+    /// unavoidable contention from also invalidating the `next` links
+    /// that sit behind it.
+    head: CachePadded<W::U64>,
     next: Box<[W::U32]>,
 }
 
@@ -26,14 +29,14 @@ impl<W: World> FreeList<W> {
         let next = (0..cap)
             .map(|i| W::U32::new(if i + 1 < cap { (i + 2) as u32 } else { NIL }))
             .collect::<Vec<_>>();
-        FreeList { head: W::U64::new(1), next: next.into_boxed_slice() }
+        FreeList { head: CachePadded::new(W::U64::new(1)), next: next.into_boxed_slice() }
     }
 
     /// New pool with no free indices (fill with [`FreeList::push`]).
     pub fn new_empty(cap: usize) -> Self {
         assert!(cap >= 1 && cap < u32::MAX as usize - 1);
         let next = (0..cap).map(|_| W::U32::new(NIL)).collect::<Vec<_>>();
-        FreeList { head: W::U64::new(0), next: next.into_boxed_slice() }
+        FreeList { head: CachePadded::new(W::U64::new(0)), next: next.into_boxed_slice() }
     }
 
     /// Pool capacity.
@@ -77,13 +80,13 @@ impl<W: World> FreeList<W> {
     }
 
     /// Number of free indices (O(n) walk; approximate under concurrency —
-    /// meant for tests and reports, not hot paths).
+    /// meant for tests and reports, not hot paths, hence relaxed loads).
     pub fn free_count(&self) -> usize {
         let mut n = 0;
         let mut enc = (self.head.load() & 0xFFFF_FFFF) as u32;
         while enc != NIL && n <= self.next.len() {
             n += 1;
-            enc = self.next[(enc - 1) as usize].load();
+            enc = self.next[(enc - 1) as usize].load_relaxed();
         }
         n
     }

@@ -20,12 +20,53 @@
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
+/// Pads (and aligns) a value to a full cache line to prevent false
+/// sharing between adjacent hot words. The paper's Section 6 observes
+/// that the exchange cost is dominated by cache-line *ownership
+/// transfer*; when a producer-written counter and a consumer-written
+/// counter share a line, every operation on either side ping-pongs the
+/// line between cores even though the words are logically independent.
+/// Every producer/consumer-split atomic pair in this crate ([`crate::
+/// lockfree::nbb::Nbb`], [`crate::lockfree::nbw::Nbw`],
+/// [`crate::lockfree::freelist::FreeList`],
+/// [`crate::lockfree::bitset::BitSet`], `mrapi::rwlock::RwLock`) wraps
+/// its sides in this type.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct CachePadded<T>(pub T);
+
+impl<T> CachePadded<T> {
+    /// Wrap a value.
+    pub const fn new(value: T) -> Self {
+        CachePadded(value)
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
 /// A 32-bit atomic cell.
 pub trait Atom32: Send + Sync + 'static {
     /// New cell; in simulated worlds this also assigns a cache-line address.
     fn new(v: u32) -> Self;
     /// Acquire load.
     fn load(&self) -> u32;
+    /// Relaxed load — same coherence cost as [`Atom32::load`] (the line
+    /// still has to be present), but no ordering: for monitoring reads
+    /// and protocol words whose consumers re-synchronize through another
+    /// acquire load before dereferencing anything. Priced by simulated
+    /// worlds exactly like `load` (unlike [`Atom32::peek`]).
+    fn load_relaxed(&self) -> u32;
     /// Release store.
     fn store(&self, v: u32);
     /// AcqRel compare-and-swap; `Ok(previous)` on success, `Err(actual)`.
@@ -48,6 +89,8 @@ pub trait Atom64: Send + Sync + 'static {
     fn new(v: u64) -> Self;
     /// Acquire load.
     fn load(&self) -> u64;
+    /// Relaxed load (see [`Atom32::load_relaxed`]).
+    fn load_relaxed(&self) -> u64;
     /// Release store.
     fn store(&self, v: u64);
     /// AcqRel compare-and-swap.
@@ -119,6 +162,10 @@ impl Atom32 for RealAtom32 {
         self.0.load(Ordering::Acquire)
     }
     #[inline]
+    fn load_relaxed(&self) -> u32 {
+        self.0.load(Ordering::Relaxed)
+    }
+    #[inline]
     fn store(&self, v: u32) {
         self.0.store(v, Ordering::Release)
     }
@@ -157,6 +204,10 @@ impl Atom64 for RealAtom64 {
     #[inline]
     fn load(&self) -> u64 {
         self.0.load(Ordering::Acquire)
+    }
+    #[inline]
+    fn load_relaxed(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
     }
     #[inline]
     fn store(&self, v: u64) {
@@ -265,6 +316,38 @@ mod tests {
         let a = RealAtom64::new(u64::MAX);
         a.fetch_add(1);
         assert_eq!(a.load(), 0);
+    }
+
+    #[test]
+    fn relaxed_load_observes_stores() {
+        let a = RealAtom64::new(7);
+        assert_eq!(a.load_relaxed(), 7);
+        a.store(9);
+        assert_eq!(a.load_relaxed(), 9);
+        let b = RealAtom32::new(1);
+        b.store(2);
+        assert_eq!(b.load_relaxed(), 2);
+    }
+
+    #[test]
+    fn cache_padded_separates_lines() {
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 64);
+        assert!(std::mem::size_of::<CachePadded<RealAtom64>>() >= 64);
+        // Two padded atoms in one struct must not share a line.
+        struct Pair {
+            a: CachePadded<RealAtom64>,
+            b: CachePadded<RealAtom64>,
+        }
+        let p = Pair {
+            a: CachePadded::new(RealAtom64::new(0)),
+            b: CachePadded::new(RealAtom64::new(0)),
+        };
+        let pa = &p.a.0 as *const _ as usize;
+        let pb = &p.b.0 as *const _ as usize;
+        assert!(pa.abs_diff(pb) >= 64, "padded atoms share a cache line");
+        // Deref passes method calls through to the wrapped atom.
+        p.a.store(3);
+        assert_eq!(p.a.load(), 3);
     }
 
     #[test]

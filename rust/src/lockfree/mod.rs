@@ -6,7 +6,8 @@
 //! * [`nbb`] — Kim's Non-Blocking Buffer for **event messages** (ring FIFO
 //!   with writer/reader counters; the paper's Table 1 status semantics).
 //! * [`bitset`] — the lock-free bit-set request allocator that replaced
-//!   the infeasible lock-free doubly linked list (refactoring step 3).
+//!   the infeasible lock-free doubly linked list (refactoring step 3),
+//!   doubling as the occupancy flag board for `mcapi::queue`.
 //! * [`freelist`] — tagged-index Treiber stack for buffer pools (ABA-safe
 //!   without hazard pointers because entries are indices, not pointers).
 //! * [`fsm`] — CAS-verified finite state machines replacing boolean status
@@ -17,6 +18,39 @@
 //! Everything is generic over [`mem::World`] so identical code runs on
 //! real hardware ([`mem::RealWorld`]) and on the deterministic SMP
 //! simulator ([`crate::sim::SimWorld`]).
+//!
+//! # Coherence-optimization design notes
+//!
+//! Being lock-free is necessary but not sufficient for the paper's
+//! "multicore migration gains" result: a lock-free structure whose hot
+//! words share cache lines, or which re-loads its peer's counter on
+//! every operation, still serializes on cache-line ownership transfer
+//! (Virtual-Link, arXiv:2012.05181; Cederman et al., arXiv:1302.2757).
+//! Three mechanisms in [`mem`] and [`nbb`] remove that traffic:
+//!
+//! 1. **[`mem::CachePadded`]** — every producer/consumer-split atomic
+//!    pair lives on separate 64-byte lines (`Nbb` counters, `Nbw`
+//!    version, `FreeList` head, each `BitSet` word, the MRAPI rwlock
+//!    state words). False sharing between logically independent words is
+//!    pure waste; padding is free at these object counts.
+//! 2. **Cached peer counters** ([`nbb`]) — the producer re-loads the
+//!    consumer's `ack` only when its private snapshot says *full*, the
+//!    consumer re-loads `update` only when its snapshot says *empty*.
+//!    Snapshots are conservative (counters only grow), so the safety
+//!    argument is unchanged; the steady-state SPSC path performs one
+//!    cross-core load per ring wrap instead of one (or two) per message.
+//!    `Atom32::load_relaxed`/`Atom64::load_relaxed` support the
+//!    monitoring/flag reads this enables; simulated worlds price them
+//!    like any load (coherence cost is ordering-independent).
+//! 3. **Batched exchange** ([`nbb::Nbb::insert_batch`] /
+//!    [`nbb::Nbb::read_batch`]) — one enter/exit counter-store pair
+//!    amortized over N items, preserving the Table 1 `*_BUT_*` statuses
+//!    via [`nbb::BatchStatus`]. The MCAPI runtime surfaces this as
+//!    `msg_send_batch`/`msg_recv_batch`.
+//!
+//! `benches/micro_lockfree` measures each mechanism against an
+//! unpadded/uncached baseline and feeds `scripts/bench_snapshot.sh`
+//! (`BENCH_micro.json`) so regressions are visible per-PR.
 
 pub mod backoff;
 pub mod bitset;
@@ -30,6 +64,6 @@ pub use backoff::Backoff;
 pub use bitset::BitSet;
 pub use freelist::FreeList;
 pub use fsm::AtomicFsm;
-pub use mem::{Atom32, Atom64, KernelLock, RealWorld, World};
-pub use nbb::{InsertStatus, Nbb, ReadStatus};
+pub use mem::{Atom32, Atom64, CachePadded, KernelLock, RealWorld, World};
+pub use nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 pub use nbw::Nbw;

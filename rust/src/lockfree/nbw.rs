@@ -20,11 +20,14 @@
 
 use std::cell::UnsafeCell;
 
-use super::mem::{Atom64, World};
+use super::mem::{Atom64, CachePadded, World};
 
 /// A non-blocking state-message variable of depth `D` buffers.
 pub struct Nbw<T: Copy, W: World> {
-    version: W::U64,
+    /// Version counter on its own line: the writer bumps it around every
+    /// write, readers poll it around every read — sharing a line with the
+    /// slot metadata would drag the whole struct into the ping-pong.
+    version: CachePadded<W::U64>,
     slots: Box<[UnsafeCell<T>]>,
     regions: Box<[u64]>,
 }
@@ -39,7 +42,7 @@ impl<T: Copy, W: World> Nbw<T, W> {
         assert!(depth >= 1, "NBW depth must be >= 1");
         let item = std::mem::size_of::<T>().max(1);
         Nbw {
-            version: W::U64::new(0),
+            version: CachePadded::new(W::U64::new(0)),
             slots: (0..depth).map(|_| UnsafeCell::new(init)).collect(),
             regions: (0..depth).map(|_| W::alloc_region(item)).collect(),
         }
@@ -50,9 +53,9 @@ impl<T: Copy, W: World> Nbw<T, W> {
         self.slots.len()
     }
 
-    /// Number of completed writes.
+    /// Number of completed writes (monitoring only, hence relaxed).
     pub fn writes(&self) -> u64 {
-        self.version.load() / 2
+        self.version.load_relaxed() / 2
     }
 
     /// Publish a new state value. Single-writer; never blocks.

@@ -61,7 +61,7 @@ fn usage() {
          \n\
          commands:\n\
          \x20 stress      [topology.toml] --kind message|packet|scalar --tx N\n\
-         \x20             --backend locked|lockfree --plane sim|real\n\
+         \x20             --backend locked|lockfree --plane sim|real --batch N\n\
          \x20             --cores N --os linux|windows --affinity single|task|affinity\n\
          \x20 experiment  table2|fig7|fig8 [--tx N]\n\
          \x20 model       fig6 [--kind K] [--solver artifact|native|sweep] | stopcrit [--measured-ns X]\n\
@@ -81,6 +81,7 @@ fn cmd_stress(args: &Args) -> mcapi::Result<()> {
         .ok_or_else(|| mcapi::Error::Config("bad --os".into()))?;
     let affinity = AffinityMode::parse(&args.get_or("affinity", "affinity"))
         .ok_or_else(|| mcapi::Error::Config("bad --affinity".into()))?;
+    let batch = args.get_u64_or("batch", 1)? as usize;
     args.finish()?;
 
     let topo = match args.positional.first() {
@@ -88,11 +89,12 @@ fn cmd_stress(args: &Args) -> mcapi::Result<()> {
         None => Topology::one_way(kind, tx),
     };
     let cfg = RuntimeCfg::with_backend(backend);
+    let opts = StressOpts::with_batch(batch);
     let report = match plane.as_str() {
-        "real" => run_stress_real(cfg, &topo, StressOpts::default()),
+        "real" => run_stress_real(cfg, &topo, opts),
         "sim" => {
             let machine = Machine::new(MachineCfg::new(cores, os, affinity));
-            run_stress_sim(&machine, cfg, &topo, StressOpts::default())
+            run_stress_sim(&machine, cfg, &topo, opts)
         }
         other => return Err(mcapi::Error::Config(format!("bad --plane `{other}`"))),
     };

@@ -359,6 +359,119 @@ impl<W: World> McapiRuntime<W> {
         }
     }
 
+    /// Batched connection-less send: enqueue as many of `payloads` as fit,
+    /// in order, to endpoint `to` — amortizing endpoint lookup and (on the
+    /// lock-free path) the NBB enter/exit counter stores over the whole
+    /// prefix. Returns how many messages were enqueued; `Err` only when
+    /// none were. The locked backend loops the scalar path (the reference
+    /// design has no batch primitive — that asymmetry is part of what the
+    /// `micro_lockfree` batch ablation measures).
+    pub fn msg_send_batch(
+        &self,
+        from: usize,
+        to: EndpointId,
+        payloads: &[&[u8]],
+        priority: u8,
+    ) -> Result<usize, Status> {
+        if payloads.is_empty() {
+            return Ok(0);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut sent = 0;
+                for data in payloads {
+                    match self.msg_send(from, to, data, priority) {
+                        Ok(()) => sent += 1,
+                        Err(s) if sent == 0 => return Err(s),
+                        Err(_) => break,
+                    }
+                }
+                Ok(sent)
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
+                let prio = priority % PRIORITIES as u8;
+                // Lease and fill buffers first; entries become one lane batch.
+                let mut entries = Vec::with_capacity(payloads.len());
+                let mut lease_err = None;
+                for data in payloads {
+                    match self.lease_filled(data) {
+                        Ok(lease) => entries.push(Entry::buffered(
+                            lease.index as u32,
+                            data.len() as u32,
+                            from as u32,
+                            prio,
+                        )),
+                        Err(s) => {
+                            lease_err = Some(s);
+                            break;
+                        }
+                    }
+                }
+                if entries.is_empty() {
+                    return Err(lease_err.unwrap_or(Status::WouldBlock));
+                }
+                let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
+                    unreachable!("lockfree backend uses NBB queues");
+                };
+                let result = q.push_batch(&mut entries);
+                // Whatever did not go in stays in `entries`: hand its
+                // buffers back (Figure 4 abort path).
+                for e in &entries {
+                    self.abort_lease(self.lease_of(e));
+                }
+                result
+            }
+        }
+    }
+
+    /// Batched connection-less receive: drain up to `max` messages from
+    /// `ep` into `out` (one `Vec<u8>` per message, appended in queue
+    /// order). Returns how many arrived; `Err` when none were pending.
+    pub fn msg_recv_batch(
+        &self,
+        ep: usize,
+        out: &mut Vec<Vec<u8>>,
+        max: usize,
+    ) -> Result<usize, Status> {
+        if max == 0 {
+            return Ok(0);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut buf = vec![0u8; self.cfg.buf_len];
+                let mut got = 0;
+                while got < max {
+                    match self.msg_recv(ep, &mut buf) {
+                        Ok(n) => {
+                            out.push(buf[..n].to_vec());
+                            got += 1;
+                        }
+                        Err(s) if got == 0 => return Err(s),
+                        Err(_) => break,
+                    }
+                }
+                Ok(got)
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                let slot = self.active_ep(ep)?;
+                let QueueImpl::LockFree(q) = &slot.queue else {
+                    unreachable!("lockfree backend uses NBB queues");
+                };
+                let mut entries = Vec::with_capacity(max.min(64));
+                let n = q.pop_batch(&mut entries, max)?;
+                let mut buf = vec![0u8; self.cfg.buf_len];
+                for e in &entries {
+                    let len = self.consume_entry(e, &mut buf);
+                    out.push(buf[..len].to_vec());
+                }
+                Ok(n)
+            }
+        }
+    }
+
     /// Number of messages waiting on `ep` (MCAPI `msg_available`).
     pub fn msg_available(&self, ep: usize) -> Result<usize, Status> {
         let slot = self.active_ep(ep)?;
@@ -978,6 +1091,64 @@ mod tests {
             rt.open_recv(ch).unwrap();
             assert_eq!(rt.state_send(ch, 1).unwrap_err(), Status::InvalidChannel);
             assert_eq!(rt.sclr_send(ch, 1), Ok(()));
+        }
+    }
+
+    #[test]
+    fn batch_send_recv_roundtrip_both_backends() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 13);
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            let payloads: Vec<Vec<u8>> = (0u8..6).map(|i| vec![i; (i + 1) as usize]).collect();
+            let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+            assert_eq!(rt.msg_send_batch(0, dst, &refs, 1), Ok(6));
+            assert_eq!(rt.msg_available(ep).unwrap(), 6);
+            let mut out = Vec::new();
+            assert_eq!(rt.msg_recv_batch(ep, &mut out, 4), Ok(4));
+            assert_eq!(rt.msg_recv_batch(ep, &mut out, 10), Ok(2));
+            assert_eq!(out, payloads, "batch FIFO and payload integrity");
+            assert_eq!(
+                rt.msg_recv_batch(ep, &mut out, 1).unwrap_err(),
+                Status::WouldBlock
+            );
+            assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers, "no leaked leases");
+        }
+    }
+
+    #[test]
+    fn batch_send_partial_on_full_queue_leaks_nothing() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 1, 14);
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            // Fill one lane to capacity with a batch larger than the ring.
+            let big: Vec<Vec<u8>> = (0..rt.cfg().nbb_capacity + 5).map(|_| vec![7u8; 4]).collect();
+            let refs: Vec<&[u8]> = big.iter().map(|p| p.as_slice()).collect();
+            let sent = rt.msg_send_batch(0, dst, &refs, 0).unwrap();
+            assert!(sent >= rt.cfg().nbb_capacity.min(refs.len()) - 1 && sent <= refs.len());
+            // Unsent messages must have returned their pool buffers.
+            assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers - sent);
+            let mut out = Vec::new();
+            assert_eq!(rt.msg_recv_batch(ep, &mut out, usize::MAX).unwrap(), sent);
+            assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+        }
+    }
+
+    #[test]
+    fn batch_send_respects_message_limit_and_unknown_endpoint() {
+        for rt in both() {
+            assert_eq!(
+                rt.msg_send_batch(0, EndpointId::new(9, 9, 9), &[b"x".as_slice()], 0)
+                    .unwrap_err(),
+                Status::InvalidEndpoint
+            );
+            let dst = EndpointId::new(0, 1, 15);
+            rt.create_endpoint(dst, 1).unwrap();
+            let big = vec![0u8; rt.cfg().buf_len + 1];
+            assert_eq!(
+                rt.msg_send_batch(0, dst, &[big.as_slice()], 0).unwrap_err(),
+                Status::MessageLimit
+            );
+            assert_eq!(rt.msg_send_batch(0, dst, &[], 0), Ok(0));
         }
     }
 

@@ -9,8 +9,9 @@
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 
+use crate::lockfree::bitset::BitSet;
 use crate::lockfree::mem::World;
-use crate::lockfree::nbb::{InsertStatus, Nbb, ReadStatus};
+use crate::lockfree::nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 use crate::mcapi::types::{Status, PRIORITIES};
 
 /// Queue-entry FSM states (Figure 4).
@@ -119,12 +120,36 @@ impl LockedQueue {
 /// Lock-free receive queue: one SPSC NBB per (priority, producer-node)
 /// lane, drained priority-major with a rotating fairness cursor — the
 /// NBB composition Kim et al. describe for fan-in patterns.
+///
+/// # Occupancy bitmap
+///
+/// The textbook composition scans every `PRIORITIES × producers` lane on
+/// every pop, touching each lane's `update` counter — O(lanes) cross-core
+/// loads even when the endpoint is idle. Instead, a lock-free occupancy
+/// bitmap (one [`BitSet`] word per priority) tracks which lanes *may*
+/// hold entries: producers set their lane bit after a successful insert,
+/// the consumer clears a bit when it observes the lane empty. A poll of
+/// an idle endpoint is then one relaxed word-load per priority — O(1) in
+/// the producer count — and a busy poll scans only flagged lanes.
+///
+/// Lost-wakeup freedom: the producer *completes* the insert (release
+/// store) before setting the bit; the consumer re-checks the lane
+/// *after* clearing its bit and re-sets the bit if the re-check finds
+/// anything. Whichever order the clear and the insert land in, either
+/// the consumer's re-check sees the entry or the producer's subsequent
+/// `set` re-flags the lane. A bit may be *spuriously* set (lane already
+/// drained) — that costs one extra lane probe, never a lost entry.
 pub struct LockFreeQueue<W: World> {
     /// `lanes[priority][producer]`.
     lanes: Vec<Vec<Nbb<Entry, W>>>,
+    /// `occupancy[priority]`, one bit per producer lane.
+    occupancy: Vec<BitSet<W>>,
     producers: usize,
     /// Receiver-private rotation cursor (single-consumer by MCAPI spec).
     cursor: UnsafeCell<usize>,
+    /// Receiver-private word-snapshot scratch (avoids per-pop allocation
+    /// when `producers > 64`).
+    scratch: UnsafeCell<Vec<u64>>,
 }
 
 unsafe impl<W: World> Send for LockFreeQueue<W> {}
@@ -137,38 +162,105 @@ impl<W: World> LockFreeQueue<W> {
             lanes: (0..PRIORITIES)
                 .map(|_| (0..producers).map(|_| Nbb::new(capacity)).collect())
                 .collect(),
+            occupancy: (0..PRIORITIES).map(|_| BitSet::new(producers)).collect(),
             producers,
             cursor: UnsafeCell::new(0),
+            scratch: UnsafeCell::new(vec![0u64; (producers + 63) / 64]),
         }
     }
 
     /// Producer-side insert (wait-free except the bounded ring).
     pub fn push(&self, e: Entry) -> Result<(), (Status, Entry)> {
-        let lane = &self.lanes[e.priority as usize % PRIORITIES][e.from_node as usize % self.producers];
-        lane.insert(e).map_err(|(s, e)| {
-            let status = match s {
-                InsertStatus::Full => Status::WouldBlock,
-                InsertStatus::FullButConsumerReading => Status::WouldBlockPeerActive,
-            };
-            (status, e)
-        })
+        let prio = e.priority as usize % PRIORITIES;
+        let lane = e.from_node as usize % self.producers;
+        match self.lanes[prio][lane].insert(e) {
+            Ok(()) => {
+                // Flag AFTER the insert's release store (see type docs).
+                self.occupancy[prio].set(lane);
+                Ok(())
+            }
+            Err((s, e)) => {
+                let status = match s {
+                    InsertStatus::Full => Status::WouldBlock,
+                    InsertStatus::FullButConsumerReading => Status::WouldBlockPeerActive,
+                };
+                Err((status, e))
+            }
+        }
     }
 
-    /// Consumer-side pop: scan priorities high-to-low, rotating across
-    /// producer lanes for fairness. Single consumer only.
+    /// Producer-side batched insert: all entries must target the same
+    /// (priority, producer) lane — one batch NBB insert plus at most one
+    /// occupancy RMW. Enqueued entries are drained from the front of
+    /// `entries`; returns how many went in (`Err` with the Table 1
+    /// distinction when none did).
+    pub fn push_batch(&self, entries: &mut Vec<Entry>) -> Result<usize, Status> {
+        let Some(first) = entries.first() else {
+            return Ok(0);
+        };
+        let prio = first.priority as usize % PRIORITIES;
+        let lane = first.from_node as usize % self.producers;
+        debug_assert!(
+            entries.iter().all(|e| {
+                e.priority as usize % PRIORITIES == prio
+                    && e.from_node as usize % self.producers == lane
+            }),
+            "push_batch entries must share one (priority, producer) lane"
+        );
+        match self.lanes[prio][lane].insert_batch(entries) {
+            Ok(n) => {
+                self.occupancy[prio].set(lane);
+                Ok(n)
+            }
+            Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
+            Err(BatchStatus::PeerActive) => Err(Status::WouldBlockPeerActive),
+        }
+    }
+
+    /// Consumer-side pop: priorities high-to-low; within a priority,
+    /// snapshot the occupancy words (one relaxed load each) and probe
+    /// only flagged lanes, rotating for fairness. Single consumer only.
     pub fn pop(&self) -> Result<Entry, Status> {
         let cursor = unsafe { &mut *self.cursor.get() };
+        let scratch = unsafe { &mut *self.scratch.get() };
         let mut saw_peer_active = false;
-        for prio in 0..PRIORITIES {
+        for (prio, occ) in self.occupancy.iter().enumerate() {
+            let mut any = 0u64;
+            for wi in 0..occ.num_words() {
+                scratch[wi] = occ.snapshot_word(wi);
+                any |= scratch[wi];
+            }
+            if any == 0 {
+                continue; // idle priority: cost was num_words loads, no lane probes
+            }
             for i in 0..self.producers {
                 let lane = (*cursor + i) % self.producers;
+                if scratch[lane / 64] & (1u64 << (lane % 64)) == 0 {
+                    continue;
+                }
                 match self.lanes[prio][lane].read() {
                     ReadStatus::Ok(e) => {
                         *cursor = (lane + 1) % self.producers;
                         return Ok(e);
                     }
                     ReadStatus::EmptyButProducerInserting => saw_peer_active = true,
-                    ReadStatus::Empty => {}
+                    ReadStatus::Empty => {
+                        // Stale flag: clear it, then re-check the lane so a
+                        // concurrent insert-then-set cannot be lost.
+                        occ.free(lane);
+                        match self.lanes[prio][lane].read() {
+                            ReadStatus::Ok(e) => {
+                                occ.set(lane); // conservatively re-flag (may hold more)
+                                *cursor = (lane + 1) % self.producers;
+                                return Ok(e);
+                            }
+                            ReadStatus::EmptyButProducerInserting => {
+                                occ.set(lane);
+                                saw_peer_active = true;
+                            }
+                            ReadStatus::Empty => {}
+                        }
+                    }
                 }
             }
         }
@@ -177,6 +269,75 @@ impl<W: World> LockFreeQueue<W> {
         } else {
             Status::WouldBlock
         })
+    }
+
+    /// Consumer-side batched pop: drain up to `max` entries into `out`,
+    /// priority-major with the same rotation/occupancy discipline as
+    /// [`LockFreeQueue::pop`]. Returns how many were appended (`Err` with
+    /// the would-block distinction when none were).
+    pub fn pop_batch(&self, out: &mut Vec<Entry>, max: usize) -> Result<usize, Status> {
+        if max == 0 {
+            return Ok(0);
+        }
+        let cursor = unsafe { &mut *self.cursor.get() };
+        let scratch = unsafe { &mut *self.scratch.get() };
+        let mut saw_peer_active = false;
+        let mut total = 0usize;
+        for (prio, occ) in self.occupancy.iter().enumerate() {
+            let mut any = 0u64;
+            for wi in 0..occ.num_words() {
+                scratch[wi] = occ.snapshot_word(wi);
+                any |= scratch[wi];
+            }
+            if any == 0 {
+                continue;
+            }
+            // Fixed scan base: the cursor moves as lanes are drained, so
+            // lane selection must not track it mid-pass.
+            let start = *cursor;
+            for i in 0..self.producers {
+                if total >= max {
+                    return Ok(total);
+                }
+                let lane = (start + i) % self.producers;
+                if scratch[lane / 64] & (1u64 << (lane % 64)) == 0 {
+                    continue;
+                }
+                match self.lanes[prio][lane].read_batch(out, max - total) {
+                    Ok(n) => {
+                        total += n;
+                        *cursor = (lane + 1) % self.producers;
+                    }
+                    Err(BatchStatus::PeerActive) => saw_peer_active = true,
+                    Err(BatchStatus::WouldBlock) => {
+                        occ.free(lane);
+                        match self.lanes[prio][lane].read_batch(out, max - total) {
+                            Ok(n) => {
+                                occ.set(lane);
+                                total += n;
+                                *cursor = (lane + 1) % self.producers;
+                            }
+                            Err(BatchStatus::PeerActive) => {
+                                occ.set(lane);
+                                saw_peer_active = true;
+                            }
+                            Err(BatchStatus::WouldBlock) => {}
+                        }
+                    }
+                }
+            }
+            if total > 0 {
+                // Do not spill into lower priorities past a non-empty
+                // class: callers drain class-by-class, like `pop`.
+                return Ok(total);
+            }
+        }
+        // Only reachable with total == 0 (non-zero passes return above).
+        if saw_peer_active {
+            Err(Status::WouldBlockPeerActive)
+        } else {
+            Err(Status::WouldBlock)
+        }
     }
 
     /// Total buffered entries (approximate).
@@ -280,6 +441,102 @@ mod tests {
         let (status, back) = q.push(Entry::buffered(2, 1, 0, 0)).unwrap_err();
         assert_eq!(status, Status::WouldBlock);
         assert_eq!(back.buf_index, 2);
+    }
+
+    #[test]
+    fn occupancy_tracks_push_pop() {
+        let q = LfQueue::new(2, 4);
+        // Idle queue: no bits set anywhere.
+        for p in 0..PRIORITIES {
+            assert_eq!(q.occupancy[p].count(), 0);
+        }
+        q.push(Entry::buffered(1, 1, 0, 2)).unwrap();
+        assert!(q.occupancy[2].is_set(0), "push must flag its lane");
+        assert_eq!(q.pop().unwrap().buf_index, 1);
+        // The entry came out; the flag may linger until the next empty
+        // probe clears it.
+        assert_eq!(q.pop(), Err(Status::WouldBlock));
+        assert!(
+            !q.occupancy[2].is_set(0),
+            "empty probe must clear the stale flag"
+        );
+        // Cleared flag doesn't lose later entries.
+        q.push(Entry::buffered(2, 1, 0, 2)).unwrap();
+        assert_eq!(q.pop().unwrap().buf_index, 2);
+    }
+
+    #[test]
+    fn batch_push_pop_roundtrip() {
+        let q = LfQueue::new(2, 8);
+        let mut entries: Vec<Entry> =
+            (0..5).map(|i| Entry::buffered(i, 1, 1, 0)).collect();
+        assert_eq!(q.push_batch(&mut entries), Ok(5));
+        assert!(entries.is_empty());
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch(&mut out, 3), Ok(3));
+        assert_eq!(q.pop_batch(&mut out, 8), Ok(2));
+        let got: Vec<u32> = out.iter().map(|e| e.buf_index).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4], "batch FIFO per lane");
+        assert_eq!(q.pop_batch(&mut out, 1), Err(Status::WouldBlock));
+    }
+
+    #[test]
+    fn batch_pop_respects_priority_classes() {
+        let q = LfQueue::new(1, 8);
+        q.push(Entry::buffered(10, 1, 0, 1)).unwrap();
+        q.push(Entry::buffered(20, 1, 0, 0)).unwrap();
+        q.push(Entry::buffered(21, 1, 0, 0)).unwrap();
+        let mut out = Vec::new();
+        // One call drains only the highest non-empty class.
+        assert_eq!(q.pop_batch(&mut out, 8), Ok(2));
+        assert_eq!(out.iter().map(|e| e.buf_index).collect::<Vec<_>>(), vec![20, 21]);
+        assert_eq!(q.pop_batch(&mut out, 8), Ok(1));
+        assert_eq!(out.last().unwrap().buf_index, 10);
+    }
+
+    #[test]
+    fn batch_push_overflow_hands_back_remainder() {
+        let q = LfQueue::new(1, 2);
+        let mut entries: Vec<Entry> =
+            (0..4).map(|i| Entry::buffered(i, 1, 0, 0)).collect();
+        assert_eq!(q.push_batch(&mut entries), Ok(2));
+        assert_eq!(entries.len(), 2, "overflow stays with the caller");
+        assert_eq!(q.push_batch(&mut entries), Err(Status::WouldBlock));
+        assert_eq!(entries.len(), 2);
+    }
+
+    #[test]
+    fn empty_poll_cost_is_constant_in_producer_count() {
+        // The acceptance gate for the occupancy bitmap: polling an
+        // all-empty queue charges the simulated memory system one word
+        // load per priority, independent of how many producer lanes
+        // exist (the seed scanned every lane's NBB counter).
+        use crate::os::{AffinityMode, OsProfile};
+        use crate::sim::{Machine, MachineCfg, SimWorld};
+        let accesses = |producers: usize| {
+            let m = Machine::new(MachineCfg::new(
+                1,
+                OsProfile::linux_rt(),
+                AffinityMode::SingleCore,
+            ));
+            let stats = m.run_tasks(1, |_| {
+                move || {
+                    let q = LockFreeQueue::<SimWorld>::new(producers, 4);
+                    for _ in 0..10 {
+                        assert_eq!(q.pop(), Err(Status::WouldBlock));
+                    }
+                }
+            });
+            stats.hits + stats.misses
+        };
+        let small = accesses(2);
+        let large = accesses(32);
+        assert_eq!(
+            small, large,
+            "empty-poll line accesses must not scale with producers"
+        );
+        // 10 polls x PRIORITIES word snapshots, nothing else.
+        assert_eq!(small, 10 * PRIORITIES as u64);
     }
 
     #[test]

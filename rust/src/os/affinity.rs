@@ -44,14 +44,22 @@ pub fn available_cores() -> usize {
 
 /// Pin the calling thread to `core` (mod the available core count).
 /// Returns false (and leaves affinity unchanged) if the syscall fails.
+///
+/// Declared against glibc directly (no `libc` crate — the build is fully
+/// offline): `cpu_set_t` is a fixed 1024-bit mask on Linux.
 #[cfg(target_os = "linux")]
 pub fn pin_to_core(core: usize) -> bool {
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(core % available_cores(), &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16], // 1024 CPUs, glibc's sizeof(cpu_set_t) == 128
     }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let mut set = CpuSet { bits: [0; 16] };
+    let c = core % available_cores();
+    set.bits[(c / 64) % 16] |= 1u64 << (c % 64);
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
 }
 
 /// Non-Linux fallback: report failure, do nothing.

@@ -18,33 +18,9 @@ pub use time::{delay_ns, monotonic_ns, yield_now};
 /// Cache line size assumed throughout (x86-64 and most ARM SoCs).
 pub const CACHE_LINE: usize = 64;
 
-/// Pads a value to a full cache line to prevent false sharing between
-/// adjacent atomics — the paper's Section 6 notes the exchange cost is
-/// dominated by cache-line ownership transfer, so unrelated hot words must
-/// not share a line.
-#[repr(align(64))]
-#[derive(Debug, Default)]
-pub struct CachePadded<T>(pub T);
-
-impl<T> CachePadded<T> {
-    /// Wrap a value.
-    pub const fn new(value: T) -> Self {
-        CachePadded(value)
-    }
-}
-
-impl<T> std::ops::Deref for CachePadded<T> {
-    type Target = T;
-    fn deref(&self) -> &T {
-        &self.0
-    }
-}
-
-impl<T> std::ops::DerefMut for CachePadded<T> {
-    fn deref_mut(&mut self) -> &mut T {
-        &mut self.0
-    }
-}
+// Canonical home is the memory-backend module next to the atom traits it
+// wraps; re-exported here for the OS-layer constants' neighbours.
+pub use crate::lockfree::mem::CachePadded;
 
 #[cfg(test)]
 mod tests {

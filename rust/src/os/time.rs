@@ -1,15 +1,14 @@
 //! Monotonic time, explicit context switch (yield) and timed delay —
 //! the portability additions the paper made to MRAPI (Section 3).
 
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
-use once_cell::sync::Lazy;
-
-static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
 
 /// Monotonic nanoseconds since process start.
 pub fn monotonic_ns() -> u64 {
-    EPOCH.elapsed().as_nanos() as u64
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }
 
 /// Explicit context switch: give up the processor to another ready task.

@@ -6,6 +6,10 @@
 //! (xla_extension 0.5.1, PJRT CPU client), compiles them once, and executes
 //! them from the coordinator with plain `f32`/`i32` buffers.
 //!
+//! In the fully-offline build the `xla` crate is not vendored and
+//! [`client`] is a same-API stub whose `PjrtRuntime::cpu()` returns
+//! `Err`; model consumers fall back to the native MVA solver.
+//!
 //! HLO *text* (not a serialized `HloModuleProto`) is the interchange format:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids which XLA 0.5.1
 //! rejects; the text parser reassigns ids and round-trips cleanly.

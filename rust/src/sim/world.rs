@@ -93,6 +93,18 @@ impl Atom32 for SimAtom32 {
         })
     }
 
+    // Ordering does not change coherence traffic: a relaxed load still
+    // has to bring the line in, so it is priced exactly like `load`
+    // (only `peek` bypasses accounting, and only outside protocols).
+    fn load_relaxed(&self) -> u32 {
+        with_machine(|m| {
+            m.op(|ctx| {
+                ctx.mem_access(self.addr, false, false);
+                self.value.load(Ordering::Relaxed)
+            })
+        })
+    }
+
     fn store(&self, v: u32) {
         with_machine(|m| {
             m.op(|ctx| {
@@ -156,6 +168,16 @@ impl Atom64 for SimAtom64 {
     }
 
     fn load(&self) -> u64 {
+        with_machine(|m| {
+            m.op(|ctx| {
+                ctx.mem_access(self.addr, false, false);
+                self.value.load(Ordering::Relaxed)
+            })
+        })
+    }
+
+    // Priced like `load`; see SimAtom32::load_relaxed.
+    fn load_relaxed(&self) -> u64 {
         with_machine(|m| {
             m.op(|ctx| {
                 ctx.mem_access(self.addr, false, false);

@@ -227,6 +227,189 @@ fn prop_mcapi_message_sequences_roundtrip() {
 }
 
 #[test]
+fn mpsc_stress_over_occupancy_bitmap_queue() {
+    // Many producers x several priority lanes through the occupancy-
+    // bitmap LockFreeQueue under real thread nondeterminism: nothing is
+    // lost (no lost-wakeup from the clear/re-check protocol), per-
+    // (producer, priority) FIFO holds, and the drained queue is empty.
+    use mcapi::mcapi::queue::{Entry, LockFreeQueue};
+    use std::sync::Arc;
+
+    const PRODUCERS: u32 = 4;
+    const PER: u64 = 20_000;
+    let q = Arc::new(LockFreeQueue::<RealWorld>::new(PRODUCERS as usize, 32));
+    let handles: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER {
+                    // Priority varies per message; scalar carries the
+                    // per-(producer, priority) sequence number.
+                    let prio = (i % 3) as u8;
+                    let mut e = Entry::buffered(i as u32, 8, p, prio);
+                    e.scalar = i / 3;
+                    loop {
+                        match q.push(e) {
+                            Ok(()) => break,
+                            Err((_, back)) => {
+                                e = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    let mut next = [[0u64; 4]; PRODUCERS as usize];
+    let mut got = 0u64;
+    while got < PRODUCERS as u64 * PER {
+        match q.pop() {
+            Ok(e) => {
+                let lane = e.from_node as usize;
+                let prio = e.priority as usize;
+                assert_eq!(
+                    e.scalar, next[lane][prio],
+                    "per-(producer {lane}, priority {prio}) FIFO violated"
+                );
+                next[lane][prio] += 1;
+                got += 1;
+            }
+            Err(_) => std::thread::yield_now(),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(q.len(), 0);
+    assert!(q.pop().is_err(), "drained queue must report would-block");
+}
+
+#[test]
+fn spsc_batch_torn_write_and_fifo_property() {
+    // Batched NBB transfer under concurrent single-producer/single-
+    // consumer threads: payloads arrive whole (no torn writes across the
+    // amortized enter/exit window), exactly once, in order — for a
+    // spread of ring capacities and batch sizes.
+    use std::sync::Arc;
+
+    let mut rng = XorShift::new(0xBA7C4);
+    for _case in 0..6 {
+        let cap = rng.range(1, 32) as usize;
+        let wbatch = rng.range(1, 24) as usize;
+        let rbatch = rng.range(1, 24) as usize;
+        const N: u64 = 30_000;
+        let q = Arc::new(Nbb::<[u64; 4], RealWorld>::new(cap));
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut next = 1u64;
+                while next <= N {
+                    let hi = (next + wbatch as u64 - 1).min(N);
+                    let mut items: Vec<[u64; 4]> = (next..=hi)
+                        .map(|i| [i, i.wrapping_mul(3), !i, i ^ 0xABCD])
+                        .collect();
+                    while !items.is_empty() {
+                        if q.insert_batch(&mut items).is_err() {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    next = hi + 1;
+                }
+            })
+        };
+        let mut expected = 1u64;
+        let mut out = Vec::with_capacity(rbatch);
+        while expected <= N {
+            out.clear();
+            if q.read_batch(&mut out, rbatch).is_ok() {
+                for [a, b, c, d] in &out {
+                    assert_eq!(*a, expected, "batch FIFO violated (cap {cap})");
+                    assert_eq!(*b, a.wrapping_mul(3), "torn batch write");
+                    assert_eq!(*c, !*a, "torn batch write");
+                    assert_eq!(*d, *a ^ 0xABCD, "torn batch write");
+                    expected += 1;
+                }
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        producer.join().unwrap();
+        assert!(q.is_empty(), "cap {cap}: residue after full drain");
+    }
+}
+
+#[test]
+fn prop_batch_msg_roundtrip_matches_scalar_semantics() {
+    // Random payload batches through msg_send_batch/msg_recv_batch on
+    // both backends must drain exactly like the scalar API: priority
+    // classes ascending, FIFO within a class, no buffer leaks.
+    check_res(
+        "batched message API preserves drain order and leases",
+        15,
+        |rng: &mut XorShift| {
+            let backend =
+                if rng.chance(0.5) { BackendKind::Locked } else { BackendKind::LockFree };
+            let batches: Vec<(u8, u8)> = (0..rng.range(1, 30))
+                .map(|_| (rng.below(4) as u8, rng.range(1, 24) as u8))
+                .collect();
+            let recv_batch = rng.range(1, 9) as usize;
+            (backend, batches, recv_batch)
+        },
+        |(backend, batches, recv_batch)| {
+            let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg::with_backend(*backend));
+            let dst = EndpointId::new(0, 1, 1);
+            let ep = rt.create_endpoint(dst, 1).map_err(|e| format!("{e:?}"))?;
+            let mut sent: Vec<(u8, Vec<u8>)> = Vec::new();
+            // Send per-priority groups through the batch API.
+            for prio in 0u8..4 {
+                let payloads: Vec<Vec<u8>> = batches
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (p, _))| *p == prio)
+                    .map(|(i, (_, len))| vec![i as u8; *len as usize])
+                    .collect();
+                if payloads.is_empty() {
+                    continue;
+                }
+                let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                match rt.msg_send_batch(1, dst, &refs, prio) {
+                    Ok(n) => sent.extend(
+                        payloads.into_iter().take(n).map(|p| (prio, p)),
+                    ),
+                    Err(s) if s.is_would_block() || s == Status::MemLimit => {}
+                    Err(e) => return Err(format!("{e:?}")),
+                }
+            }
+            let mut by_prio: Vec<Vec<Vec<u8>>> = vec![Vec::new(); 4];
+            for (p, payload) in &sent {
+                by_prio[*p as usize].push(payload.clone());
+            }
+            let expected: Vec<Vec<u8>> = by_prio.into_iter().flatten().collect();
+            let mut got = Vec::new();
+            loop {
+                match rt.msg_recv_batch(ep, &mut got, *recv_batch) {
+                    Ok(_) => {}
+                    Err(Status::WouldBlock) => break,
+                    Err(e) => return Err(format!("recv {e:?}")),
+                }
+            }
+            if got != expected {
+                return Err(format!(
+                    "drain mismatch: {} vs {} items",
+                    got.len(),
+                    expected.len()
+                ));
+            }
+            if rt.buffers_available() != rt.cfg().pool_buffers {
+                return Err("buffer leak".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_sim_stress_deterministic_for_any_small_topology() {
     use mcapi::coordinator::{run_stress_sim, ChannelSpec, MsgKind, StressOpts, Topology};
     use mcapi::os::{AffinityMode, OsProfile};

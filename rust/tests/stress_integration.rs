@@ -129,7 +129,7 @@ fn larger_payloads_still_roundtrip() {
     let r = run_stress_real(
         RuntimeCfg::default(),
         &Topology::one_way(MsgKind::Packet, 100),
-        StressOpts { payload_len: 192 },
+        StressOpts { payload_len: 192, ..Default::default() },
     );
     assert_eq!(r.delivered, 100);
     assert_eq!(r.order_violations, 0);

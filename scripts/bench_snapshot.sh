@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Run the micro_lockfree bench and snapshot its machine-readable summary
+# (the BENCH_JSON line) into a JSON baseline for the perf trajectory.
+#
+# Usage: scripts/bench_snapshot.sh [output.json]   (default: BENCH_micro.json
+# at the repo root). The full human-readable bench report streams to stdout.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+out="${1:-$repo_root/BENCH_micro.json}"
+case "$out" in
+  /*) ;;
+  *) out="$PWD/$out" ;;
+esac
+
+log="$(mktemp)"
+trap 'rm -f "$log"' EXIT
+
+(cd "$repo_root/rust" && cargo bench --bench micro_lockfree) | tee "$log"
+
+json_line="$(grep '^BENCH_JSON: ' "$log" | tail -n 1 | sed 's/^BENCH_JSON: //' || true)"
+if [ -z "$json_line" ]; then
+  echo "error: bench produced no BENCH_JSON line" >&2
+  exit 1
+fi
+printf '%s\n' "$json_line" > "$out"
+echo "wrote $out"
