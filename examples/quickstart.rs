@@ -69,12 +69,24 @@ fn main() {
     producer.join().unwrap();
     rt.close(ch).unwrap();
 
-    // 5. Scalar channel: 64-bit values, no buffers at all.
+    // 5. Scalar channel: 8/16/32/64-bit values, no buffers at all.
     let ch = rt.connect(producer_ep, consumer_ep, ChannelKind::Scalar).unwrap();
     rt.open_send(ch).unwrap();
     rt.open_recv(ch).unwrap();
     rt.sclr_send(ch, 0xFEED_F00D).unwrap();
     println!("scalar: {:#x}", rt.sclr_recv(ch).unwrap());
+    // Width-typed scalars are checked end to end (MCAPI scalar sizes).
+    rt.sclr_send8(ch, 0x5A).unwrap();
+    assert_eq!(rt.sclr_recv8(ch).unwrap(), 0x5A);
+
+    // 5b. Batched submission/completion on connected channels: one API
+    //     call moves many payloads (amortized ring counter stores on the
+    //     lock-free fast path; see also pkt_send_batch/pkt_recv_batch).
+    let sent = rt.sclr_send_batch(ch, &[1, 2, 3]).unwrap();
+    let mut vals = Vec::new();
+    rt.sclr_recv_batch(ch, &mut vals, 8).unwrap();
+    assert_eq!((sent, vals.as_slice()), (3, &[1u64, 2, 3][..]));
+    println!("scalar batch: {vals:?}");
 
     // 6. Asynchronous operations: issue, test, wait (Figure 3 lifecycle).
     let h = rt.msg_recv_i(rx).unwrap();

@@ -26,8 +26,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use mcapi::harness::{header, time_batched};
-use mcapi::lockfree::{Backoff, BitSet, FreeList, Nbb, Nbw, ReadStatus, RealWorld};
+use mcapi::lockfree::{Backoff, BitSet, ChannelRing, FreeList, Nbb, Nbw, ReadStatus, RealWorld};
 use mcapi::mcapi::queue::{Entry, LockFreeQueue};
+use mcapi::mrapi::shmem::{Lease, Partition};
 
 /// The seed's NBB datapath, reconstructed as the ablation baseline: the
 /// two counters adjacent (same cache line) and both re-loaded on every
@@ -167,6 +168,136 @@ fn spsc_baseline_mps() -> f64 {
     SPSC_N as f64 / t0.elapsed().as_secs_f64()
 }
 
+// ---------------------------------------------------------------------------
+// Connected-channel fast path: ring vs pool+queue packet SPSC.
+// ---------------------------------------------------------------------------
+
+const PKT_N: u64 = 1_000_000;
+const PKT_CAP: usize = 1024;
+const PKT_SLOT: usize = 64;
+
+fn pkt_payload(i: u64) -> [u8; 24] {
+    let mut b = [0u8; 24];
+    b[..8].copy_from_slice(&i.to_le_bytes());
+    b[8..16].copy_from_slice(&i.wrapping_mul(3).to_le_bytes());
+    b[16..24].copy_from_slice(&(!i).to_le_bytes());
+    b
+}
+
+/// Cross-thread SPSC packet throughput of the connected-channel ring:
+/// payload bytes live in the slots (no pool lease, no second structure);
+/// `batch > 1` drives the amortized submission path, the consumer reads
+/// in place via `recv_with`.
+fn spsc_ring_pkt_mps(batch: usize) -> f64 {
+    let ring = Arc::new(ChannelRing::<RealWorld>::new(PKT_CAP, PKT_SLOT));
+    let t0 = Instant::now();
+    let producer = {
+        let ring = ring.clone();
+        std::thread::spawn(move || {
+            if batch <= 1 {
+                for i in 0..PKT_N {
+                    let b = pkt_payload(i);
+                    while ring.send(&b).is_err() {
+                        std::hint::spin_loop();
+                    }
+                }
+            } else {
+                let mut bufs = vec![[0u8; 24]; batch];
+                let mut i = 0u64;
+                while i < PKT_N {
+                    let k = ((PKT_N - i) as usize).min(batch);
+                    for (j, b) in bufs[..k].iter_mut().enumerate() {
+                        *b = pkt_payload(i + j as u64);
+                    }
+                    let mut sent = 0;
+                    while sent < k {
+                        let refs: Vec<&[u8]> =
+                            bufs[sent..k].iter().map(|b| b.as_slice()).collect();
+                        match ring.send_batch(&refs) {
+                            Ok(n) => sent += n,
+                            Err(_) => std::hint::spin_loop(),
+                        }
+                    }
+                    i += k as u64;
+                }
+            }
+        })
+    };
+    let mut got = 0u64;
+    while got < PKT_N {
+        let r = ring.recv_with(|b| {
+            assert_eq!(b.len(), 24, "ring packet length");
+            u64::from_le_bytes(b[..8].try_into().unwrap())
+        });
+        match r {
+            Ok(v) => {
+                assert_eq!(v, got, "ring packet FIFO violated");
+                got += 1;
+            }
+            Err(_) => std::hint::spin_loop(),
+        }
+    }
+    producer.join().unwrap();
+    PKT_N as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Cross-thread SPSC packet throughput of the generic path the connected
+/// channels used before the fast path: pool lease -> payload copy into
+/// the pool -> Entry through the MPMC queue -> payload copy out of the
+/// pool -> lease release.
+fn spsc_queue_pkt_mps() -> f64 {
+    let pool = Arc::new(Partition::<RealWorld>::new(PKT_CAP + 64, PKT_SLOT));
+    let q = Arc::new(LockFreeQueue::<RealWorld>::new(1, PKT_CAP));
+    let t0 = Instant::now();
+    let producer = {
+        let pool = pool.clone();
+        let q = q.clone();
+        std::thread::spawn(move || {
+            for i in 0..PKT_N {
+                let b = pkt_payload(i);
+                let lease = loop {
+                    if let Some(l) = pool.acquire() {
+                        break l;
+                    }
+                    std::hint::spin_loop();
+                };
+                pool.write(&lease, &b);
+                let mut e = Entry::buffered(lease.index as u32, 24, 0, 0);
+                loop {
+                    match q.push(e) {
+                        Ok(()) => break,
+                        Err((_, back)) => {
+                            e = back;
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+            }
+        })
+    };
+    let mut got = 0u64;
+    let mut out = [0u8; 24];
+    while got < PKT_N {
+        match q.pop() {
+            Ok(e) => {
+                let lease = Lease {
+                    index: e.buf_index as usize,
+                    offset: e.buf_index as usize * PKT_SLOT,
+                    len: PKT_SLOT,
+                };
+                pool.read(&lease, &mut out);
+                let v = u64::from_le_bytes(out[..8].try_into().unwrap());
+                assert_eq!(v, got, "queue packet FIFO violated");
+                pool.release(lease);
+                got += 1;
+            }
+            Err(_) => std::hint::spin_loop(),
+        }
+    }
+    producer.join().unwrap();
+    PKT_N as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     println!("{}", header());
 
@@ -201,6 +332,23 @@ fn main() {
     println!(
         "padded+cached vs baseline: {spsc_ratio:.2}x | with batching: {batch_ratio:.2}x \
          (single-core hosts flatten the gap: the win is cross-core line traffic)"
+    );
+
+    // --- connected-channel fast path: ring vs pool+queue packets -------------
+    println!("\nconnected-channel ablation: SPSC packet path ({PKT_N} pkts of 24 B, cap {PKT_CAP})");
+    println!("| variant | throughput (Mpkt/s) |");
+    println!("|---|---|");
+    let queue_pkt_mps = spsc_queue_pkt_mps();
+    println!("| pool lease + generic queue (pre-fast-path) | {:.2} |", queue_pkt_mps / 1e6);
+    let ring_pkt_mps = spsc_ring_pkt_mps(1);
+    println!("| channel ring (payload in slot) | {:.2} |", ring_pkt_mps / 1e6);
+    let ring_pkt_batch_mps = spsc_ring_pkt_mps(32);
+    println!("| channel ring + batch 32 | {:.2} |", ring_pkt_batch_mps / 1e6);
+    let pkt_ring_ratio = ring_pkt_mps / queue_pkt_mps;
+    let pkt_ring_batch_ratio = ring_pkt_batch_mps / queue_pkt_mps;
+    println!(
+        "ring vs pool+queue: {pkt_ring_ratio:.2}x | with batching: {pkt_ring_batch_ratio:.2}x \
+         (the ring drops the Treiber lease pop/push and one payload hop per packet)"
     );
 
     // --- occupancy bitmap: empty-queue poll cost -----------------------------
@@ -358,14 +506,28 @@ fn main() {
         spsc_ratio > 0.7,
         "padded+cached NBB slower than the seed replica: {spsc_ratio:.2}x"
     );
+    // The connected-channel ring must never fall meaningfully behind the
+    // pool+queue path it replaces — it strictly removes work per packet
+    // (same floor discipline as the NBB gate above).
+    assert!(
+        pkt_ring_ratio > 0.7,
+        "channel ring slower than the pool+queue packet path: {pkt_ring_ratio:.2}x"
+    );
 
     // Machine-readable snapshot for the perf trajectory
-    // (scripts/bench_snapshot.sh extracts this line into BENCH_micro.json).
+    // (scripts/bench_snapshot.sh merges every BENCH_JSON line into
+    // BENCH_micro.json).
     println!(
         "\nBENCH_JSON: {{\"nbb_roundtrip_ns\": {:.1}, \"spsc_baseline_mps\": {:.0}, \
          \"spsc_padded_cached_mps\": {:.0}, \"spsc_batch32_mps\": {:.0}, \
          \"spsc_ratio\": {:.3}, \"spsc_batch_ratio\": {:.3}, \"empty_pop_ns\": {:.1}}}",
         nbb_ns, base_mps, nbb_mps, nbb_batch_mps, spsc_ratio, batch_ratio, empty_pop_ns
+    );
+    println!(
+        "BENCH_JSON: {{\"pkt_queue_mps\": {:.0}, \"pkt_ring_mps\": {:.0}, \
+         \"pkt_ring_batch32_mps\": {:.0}, \"pkt_ring_vs_queue\": {:.3}, \
+         \"pkt_ring_batch_vs_queue\": {:.3}}}",
+        queue_pkt_mps, ring_pkt_mps, ring_pkt_batch_mps, pkt_ring_ratio, pkt_ring_batch_ratio
     );
     println!("micro_lockfree OK");
 }

@@ -5,6 +5,11 @@
 //!   and retry collisions — optimistic concurrency).
 //! * [`nbb`] — Kim's Non-Blocking Buffer for **event messages** (ring FIFO
 //!   with writer/reader counters; the paper's Table 1 status semantics).
+//! * [`ring`] — the connected-channel SPSC ring: the NBB counter protocol
+//!   with the payload carried **in the slots** (packet bytes / scalars
+//!   written directly, no shared pool lease) plus batch submission and
+//!   in-place zero-copy consumption — the fast path behind
+//!   `mcapi::channel`.
 //! * [`bitset`] — the lock-free bit-set request allocator that replaced
 //!   the infeasible lock-free doubly linked list (refactoring step 3),
 //!   doubling as the occupancy flag board for `mcapi::queue`.
@@ -59,6 +64,7 @@ pub mod fsm;
 pub mod mem;
 pub mod nbb;
 pub mod nbw;
+pub mod ring;
 
 pub use backoff::Backoff;
 pub use bitset::BitSet;
@@ -67,3 +73,4 @@ pub use fsm::AtomicFsm;
 pub use mem::{Atom32, Atom64, CachePadded, KernelLock, RealWorld, World};
 pub use nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 pub use nbw::Nbw;
+pub use ring::{ChannelRing, RecvError, ScalarBatchError};

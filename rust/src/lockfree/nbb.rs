@@ -84,14 +84,15 @@ pub enum BatchStatus {
 /// counter (so the owner never re-loads a word the peer polls) plus the
 /// last observed value of the peer's counter (re-loaded only on apparent
 /// full/empty). Plain `Cell`s are sound under the SPSC contract: exactly
-/// one thread ever touches each side.
-struct SideCache {
-    own: Cell<u64>,
-    peer: Cell<u64>,
+/// one thread ever touches each side. Shared with the connected-channel
+/// ring ([`super::ring`]), which runs the same counter protocol.
+pub(super) struct SideCache {
+    pub(super) own: Cell<u64>,
+    pub(super) peer: Cell<u64>,
 }
 
 impl SideCache {
-    fn new() -> Self {
+    pub(super) fn new() -> Self {
         SideCache { own: Cell::new(0), peer: Cell::new(0) }
     }
 }

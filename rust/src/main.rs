@@ -61,7 +61,8 @@ fn usage() {
          \n\
          commands:\n\
          \x20 stress      [topology.toml] --kind message|packet|scalar --tx N\n\
-         \x20             --backend locked|lockfree --plane sim|real --batch N\n\
+         \x20             --backend locked|lockfree --plane sim|real\n\
+         \x20             --batch N (payloads per call: messages, packets, scalars)\n\
          \x20             --cores N --os linux|windows --affinity single|task|affinity\n\
          \x20 experiment  table2|fig7|fig8 [--tx N]\n\
          \x20 model       fig6 [--kind K] [--solver artifact|native|sweep] | stopcrit [--measured-ns X]\n\

@@ -1,0 +1,607 @@
+//! The connected-channel fast path: per-channel SPSC rings, batched
+//! submission/completion, asynchronous packet requests, and the doorbell
+//! board.
+//!
+//! MCAPI packet and scalar channels are point-to-point FIFOs — exactly
+//! one producer and one consumer once connected — so the lock-free
+//! backend dedicates the queue structure to the link
+//! ([`crate::lockfree::ring::ChannelRing`]) instead of funnelling through
+//! the generic MPMC [`super::queue::LockFreeQueue`]. On a steady-state
+//! packet exchange the fast path performs:
+//!
+//! * **zero** pool/lease operations (payload bytes live in the ring
+//!   slots; no Treiber pop/push, no Figure 4 buffer FSM, no
+//!   `abort_lease` failure path),
+//! * at most **one** cross-core counter load per ring wrap (the cached
+//!   peer counters from PR 1),
+//! * O(1) shared-counter stores per *batch* via the submission/completion
+//!   calls ([`super::McapiRuntime::pkt_send_batch`] and friends) — the
+//!   io_uring shape: submit many, complete many, one doorbell.
+//!
+//! # Doorbell board
+//!
+//! An idle receiver serving many channels should not probe every ring's
+//! `update` counter. The `Doorbell` reuses the flag-board trick from
+//! `mcapi/queue.rs`: one bit per channel slot, set by the sender **after**
+//! its ring publish, cleared by the receiver only when a ring probes
+//! empty (clear-then-recheck, so no wakeup is ever lost). Polling N idle
+//! channels costs one relaxed word-load per 64 channels — one cache line
+//! regardless of channel count at the default table size.
+//!
+//! The `Locked` backend keeps the reference pool-lease path end to end,
+//! and connection-less messages keep the generic queue — the paper's
+//! lock-based/lock-free comparison is unchanged.
+
+use crate::lockfree::bitset::BitSet;
+use crate::lockfree::mem::{Atom32, World};
+use crate::lockfree::nbb::{BatchStatus, InsertStatus};
+use crate::lockfree::ring::{ChannelRing, RecvError, ScalarBatchError};
+
+use super::queue::Entry;
+use super::request::{PendingOp, RequestHandle};
+use super::types::{BackendKind, ChannelKind, Status};
+use super::{McapiRuntime, QueueImpl};
+
+/// One doorbell bit per channel slot (flag-board mode of [`BitSet`]).
+///
+/// Protocol: the sender sets the channel's bit *after* the ring's
+/// publishing counter store; the receiver clears the bit only when the
+/// ring probed empty and then re-checks the ring, conservatively
+/// re-setting the bit if the re-check finds anything. Either the
+/// re-check observes the payload or the sender's subsequent `set`
+/// re-flags the channel — a bit may be spuriously set (costs one probe),
+/// never spuriously clear while data is pending.
+pub(super) struct Doorbell<W: World> {
+    bits: BitSet<W>,
+}
+
+impl<W: World> Doorbell<W> {
+    /// Board with one bit per channel slot.
+    pub(super) fn new(channels: usize) -> Self {
+        Doorbell { bits: BitSet::new(channels.max(1)) }
+    }
+
+    /// Sender side: flag `ch` as having pending payloads. Must be called
+    /// *after* the ring's publishing store (see type docs).
+    pub(super) fn set(&self, ch: usize) {
+        self.bits.set(ch);
+    }
+
+    /// Receiver side: unflag `ch` (callers re-check the ring afterwards).
+    pub(super) fn clear(&self, ch: usize) {
+        self.bits.free(ch);
+    }
+
+    /// First channel in `channels` whose bit is set, loading each
+    /// backing word at most once per contiguous run (one relaxed
+    /// word-load per 64 channel slots when `channels` is grouped).
+    /// Out-of-table channel indices are never flagged and are skipped
+    /// (the sibling channel APIs report `InvalidChannel` for them).
+    pub(super) fn poll(&self, channels: &[usize]) -> Option<usize> {
+        let mut cur_word = usize::MAX;
+        let mut word = 0u64;
+        for &ch in channels {
+            if ch >= self.bits.capacity() {
+                continue;
+            }
+            let wi = ch / 64;
+            if wi != cur_word {
+                word = self.bits.snapshot_word(wi);
+                cur_word = wi;
+            }
+            if word & (1u64 << (ch % 64)) != 0 {
+                return Some(ch);
+            }
+        }
+        None
+    }
+}
+
+impl<W: World> McapiRuntime<W> {
+    /// The fast-path ring of channel `ch` (lock-free backend only).
+    fn ring(&self, ch: usize) -> &ChannelRing<W> {
+        self.channels[ch]
+            .ring
+            .as_ref()
+            .expect("connected-channel fast path requires the lock-free backend")
+    }
+
+    /// Receiver-side doorbell discipline around `attempt`: on an empty
+    /// probe, clear the channel's bit and re-check once so a concurrent
+    /// publish-then-set cannot be lost; re-flag conservatively when the
+    /// re-check finds anything (the ring may hold more).
+    fn with_doorbell_recheck<T>(
+        &self,
+        ch: usize,
+        mut attempt: impl FnMut(&ChannelRing<W>) -> Result<T, Status>,
+    ) -> Result<T, Status> {
+        let ring = self.ring(ch);
+        match attempt(ring) {
+            Err(Status::WouldBlock) => {
+                self.doorbell.clear(ch);
+                match attempt(ring) {
+                    Ok(v) => {
+                        self.doorbell.set(ch);
+                        Ok(v)
+                    }
+                    Err(Status::WouldBlockPeerActive) => {
+                        self.doorbell.set(ch);
+                        Err(Status::WouldBlockPeerActive)
+                    }
+                    other => other,
+                }
+            }
+            other => other,
+        }
+    }
+
+    // -- single-operation ring paths (dispatched from `mcapi::mod`) ----------
+
+    /// Lock-free packet send: copy `data` straight into the channel
+    /// ring's next slot and ring the doorbell. No pool lease, no abort
+    /// path.
+    pub(super) fn ring_pkt_send(&self, ch: usize, data: &[u8]) -> Result<(), Status> {
+        if data.len() > self.cfg.buf_len {
+            return Err(Status::MessageLimit);
+        }
+        match self.ring(ch).send(data) {
+            Ok(()) => {
+                // Flag AFTER the ring's publishing store (Doorbell docs).
+                self.doorbell.set(ch);
+                Ok(())
+            }
+            Err(InsertStatus::Full) => Err(Status::WouldBlock),
+            Err(InsertStatus::FullButConsumerReading) => Err(Status::WouldBlockPeerActive),
+        }
+    }
+
+    /// Lock-free packet receive: copy the next slot's bytes into `out`.
+    pub(super) fn ring_pkt_recv(&self, ch: usize, out: &mut [u8]) -> Result<usize, Status> {
+        self.with_doorbell_recheck(ch, |ring| match ring.recv(out) {
+            Ok(n) => Ok(n),
+            Err(RecvError::Empty) => Err(Status::WouldBlock),
+            Err(RecvError::EmptyButProducerInserting) => Err(Status::WouldBlockPeerActive),
+        })
+    }
+
+    /// Lock-free scalar send (`width` bytes: 1/2/4/8).
+    pub(super) fn ring_sclr_send(&self, ch: usize, value: u64, width: u32) -> Result<(), Status> {
+        match self.ring(ch).send_scalar(value, width) {
+            Ok(()) => {
+                self.doorbell.set(ch);
+                Ok(())
+            }
+            Err(InsertStatus::Full) => Err(Status::WouldBlock),
+            Err(InsertStatus::FullButConsumerReading) => Err(Status::WouldBlockPeerActive),
+        }
+    }
+
+    /// Lock-free scalar receive expecting `width` bytes; a mismatched
+    /// width consumes the scalar and reports `ScalarSizeMismatch`.
+    pub(super) fn ring_sclr_recv(&self, ch: usize, width: u32) -> Result<u64, Status> {
+        let (value, stored) = self.with_doorbell_recheck(ch, |ring| match ring.recv_scalar() {
+            Ok(vw) => Ok(vw),
+            Err(RecvError::Empty) => Err(Status::WouldBlock),
+            Err(RecvError::EmptyButProducerInserting) => Err(Status::WouldBlockPeerActive),
+        })?;
+        if stored != width {
+            return Err(Status::ScalarSizeMismatch);
+        }
+        Ok(value)
+    }
+
+    // -- batched submission / completion --------------------------------------
+
+    /// Batched packet send on an open channel: enqueue as many of
+    /// `payloads` as fit, in order, amortizing the per-call API overhead
+    /// and (lock-free) the ring's enter/exit counter stores over the
+    /// whole prefix. Returns how many packets were enqueued; `Err` only
+    /// when none were. The `Locked` backend loops the scalar path (the
+    /// reference design has no batch primitive).
+    pub fn pkt_send_batch(&self, ch: usize, payloads: &[&[u8]]) -> Result<usize, Status> {
+        if payloads.is_empty() {
+            return Ok(0);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut sent = 0;
+                for data in payloads {
+                    match self.pkt_send(ch, data) {
+                        Ok(()) => sent += 1,
+                        Err(s) if sent == 0 => return Err(s),
+                        Err(_) => break,
+                    }
+                }
+                Ok(sent)
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                self.channel_ready(ch, ChannelKind::Packet)?;
+                // Oversized payloads bound the batch (MessageLimit applies
+                // per payload, exactly like the pool path's lease_filled).
+                let mut valid = 0;
+                while valid < payloads.len() && payloads[valid].len() <= self.cfg.buf_len {
+                    valid += 1;
+                }
+                if valid == 0 {
+                    return Err(Status::MessageLimit);
+                }
+                match self.ring(ch).send_batch(&payloads[..valid]) {
+                    Ok(n) => {
+                        self.doorbell.set(ch);
+                        Ok(n)
+                    }
+                    Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
+                    Err(BatchStatus::PeerActive) => Err(Status::WouldBlockPeerActive),
+                }
+            }
+        }
+    }
+
+    /// Batched packet receive: drain up to `max` packets from `ch` into
+    /// `out` (one `Vec<u8>` per packet, FIFO order). Returns how many
+    /// arrived; `Err` when none were pending.
+    pub fn pkt_recv_batch(
+        &self,
+        ch: usize,
+        out: &mut Vec<Vec<u8>>,
+        max: usize,
+    ) -> Result<usize, Status> {
+        if max == 0 {
+            return Ok(0);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut buf = vec![0u8; self.cfg.buf_len];
+                let mut got = 0;
+                while got < max {
+                    match self.pkt_recv(ch, &mut buf) {
+                        Ok(n) => {
+                            out.push(buf[..n].to_vec());
+                            got += 1;
+                        }
+                        Err(s) if got == 0 => return Err(s),
+                        Err(_) => break,
+                    }
+                }
+                Ok(got)
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                self.channel_ready(ch, ChannelKind::Packet)?;
+                self.with_doorbell_recheck(ch, |ring| match ring.recv_batch(out, max) {
+                    Ok(n) => Ok(n),
+                    Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
+                    Err(BatchStatus::PeerActive) => Err(Status::WouldBlockPeerActive),
+                })
+            }
+        }
+    }
+
+    /// Batched 64-bit scalar send: enqueue as many of `values` as fit.
+    /// A batch of N lock-free scalar sends issues O(1) shared-counter
+    /// stores (one enter/exit pair on one line).
+    pub fn sclr_send_batch(&self, ch: usize, values: &[u64]) -> Result<usize, Status> {
+        if values.is_empty() {
+            return Ok(0);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut sent = 0;
+                for &v in values {
+                    match self.sclr_send(ch, v) {
+                        Ok(()) => sent += 1,
+                        Err(s) if sent == 0 => return Err(s),
+                        Err(_) => break,
+                    }
+                }
+                Ok(sent)
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                self.channel_ready(ch, ChannelKind::Scalar)?;
+                match self.ring(ch).send_scalars(values, 8) {
+                    Ok(n) => {
+                        self.doorbell.set(ch);
+                        Ok(n)
+                    }
+                    Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
+                    Err(BatchStatus::PeerActive) => Err(Status::WouldBlockPeerActive),
+                }
+            }
+        }
+    }
+
+    /// Batched 64-bit scalar receive: drain up to `max` scalars into
+    /// `out`. Returns how many arrived; `Err` when none were pending. A
+    /// width-mismatched scalar stops the batch and is consumed, exactly
+    /// like the single-receive contract (`ScalarSizeMismatch` when it
+    /// was the first pending scalar — matching the `Locked` loop).
+    pub fn sclr_recv_batch(
+        &self,
+        ch: usize,
+        out: &mut Vec<u64>,
+        max: usize,
+    ) -> Result<usize, Status> {
+        if max == 0 {
+            return Ok(0);
+        }
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut got = 0;
+                while got < max {
+                    match self.sclr_recv(ch) {
+                        Ok(v) => {
+                            out.push(v);
+                            got += 1;
+                        }
+                        Err(s) if got == 0 => return Err(s),
+                        Err(_) => break,
+                    }
+                }
+                Ok(got)
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                self.channel_ready(ch, ChannelKind::Scalar)?;
+                self.with_doorbell_recheck(ch, |ring| match ring.recv_scalars(out, max, 8) {
+                    Ok(n) => Ok(n),
+                    Err(ScalarBatchError::Empty) => Err(Status::WouldBlock),
+                    Err(ScalarBatchError::EmptyButProducerInserting) => {
+                        Err(Status::WouldBlockPeerActive)
+                    }
+                    Err(ScalarBatchError::SizeMismatch) => Err(Status::ScalarSizeMismatch),
+                })
+            }
+        }
+    }
+
+    // -- width-typed scalars (MCAPI sclr_*_uintN) -----------------------------
+
+    /// Width-carrying scalar send shared by the typed wrappers.
+    pub(super) fn sclr_send_w(&self, ch: usize, value: u64, width: u32) -> Result<(), Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let (tx_i, rx_i) =
+                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
+                let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
+                self.global.with_write(|| {
+                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
+                        unreachable!();
+                    };
+                    // Safety: global write lock held.
+                    unsafe { q.push(Entry::scalar_w(value, from, width)) }
+                })
+            }
+            BackendKind::LockFree => {
+                self.channel_ready(ch, ChannelKind::Scalar)?;
+                self.ring_sclr_send(ch, value, width)
+            }
+        }
+    }
+
+    /// Width-checking scalar receive shared by the typed wrappers; a
+    /// width mismatch consumes the scalar and reports
+    /// `ScalarSizeMismatch` (MCAPI `MCAPI_ERR_SCL_SIZE`).
+    pub(super) fn sclr_recv_w(&self, ch: usize, width: u32) -> Result<u64, Status> {
+        self.charge_api();
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let (_, rx_i) =
+                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
+                self.global.with_write(|| {
+                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
+                        unreachable!();
+                    };
+                    // Safety: global write lock held.
+                    let e = unsafe { q.pop() }.ok_or(Status::WouldBlock)?;
+                    if e.len != width {
+                        return Err(Status::ScalarSizeMismatch);
+                    }
+                    Ok(e.scalar)
+                })
+            }
+            BackendKind::LockFree => {
+                self.channel_ready(ch, ChannelKind::Scalar)?;
+                self.ring_sclr_recv(ch, width)
+            }
+        }
+    }
+
+    /// 8-bit scalar send (MCAPI `sclr_channel_send_uint8`).
+    pub fn sclr_send8(&self, ch: usize, value: u8) -> Result<(), Status> {
+        self.sclr_send_w(ch, value as u64, 1)
+    }
+
+    /// 16-bit scalar send.
+    pub fn sclr_send16(&self, ch: usize, value: u16) -> Result<(), Status> {
+        self.sclr_send_w(ch, value as u64, 2)
+    }
+
+    /// 32-bit scalar send.
+    pub fn sclr_send32(&self, ch: usize, value: u32) -> Result<(), Status> {
+        self.sclr_send_w(ch, value as u64, 4)
+    }
+
+    /// 64-bit scalar send (same as [`McapiRuntime::sclr_send`]).
+    pub fn sclr_send64(&self, ch: usize, value: u64) -> Result<(), Status> {
+        self.sclr_send_w(ch, value, 8)
+    }
+
+    /// 8-bit scalar receive (MCAPI `sclr_channel_recv_uint8`).
+    pub fn sclr_recv8(&self, ch: usize) -> Result<u8, Status> {
+        self.sclr_recv_w(ch, 1).map(|v| v as u8)
+    }
+
+    /// 16-bit scalar receive.
+    pub fn sclr_recv16(&self, ch: usize) -> Result<u16, Status> {
+        self.sclr_recv_w(ch, 2).map(|v| v as u16)
+    }
+
+    /// 32-bit scalar receive.
+    pub fn sclr_recv32(&self, ch: usize) -> Result<u32, Status> {
+        self.sclr_recv_w(ch, 4).map(|v| v as u32)
+    }
+
+    /// 64-bit scalar receive (same as [`McapiRuntime::sclr_recv`]).
+    pub fn sclr_recv64(&self, ch: usize) -> Result<u64, Status> {
+        self.sclr_recv_w(ch, 8)
+    }
+
+    // -- asynchronous packet operations (Figure 3 requests) -------------------
+
+    /// Start an asynchronous packet send; completes via
+    /// [`McapiRuntime::wait_pkt_send`]. Mirrors `msg_send_i`, including
+    /// the exceptional RECEIVED hop on the synchronous completion path.
+    pub fn pkt_send_i(&self, ch: usize, data: &[u8]) -> Result<RequestHandle, Status> {
+        self.channel_ready(ch, ChannelKind::Packet)?;
+        let h = self.requests.allocate(PendingOp::PktSend { ch })?;
+        match self.pkt_send(ch, data) {
+            Ok(()) => {
+                let _ = self.requests.mark_received(h);
+                self.requests.complete(h, Status::Success);
+                Ok(h)
+            }
+            Err(s) if s.is_would_block() => Ok(h), // pending; wait re-drives
+            Err(s) => {
+                self.requests.complete(h, s);
+                Ok(h)
+            }
+        }
+    }
+
+    /// Start an asynchronous packet receive; completes via
+    /// [`McapiRuntime::wait_pkt_recv`] (cancellable while pending).
+    pub fn pkt_recv_i(&self, ch: usize) -> Result<RequestHandle, Status> {
+        self.channel_ready(ch, ChannelKind::Packet)?;
+        self.requests.allocate(PendingOp::PktRecv { ch })
+    }
+
+    /// Drive a pending packet-send request to completion within
+    /// `timeout_ns` (virtual ns in simulated worlds). MCAPI `wait`.
+    pub fn wait_pkt_send(
+        &self,
+        h: RequestHandle,
+        ch: usize,
+        data: &[u8],
+        timeout_ns: u64,
+    ) -> Status {
+        if self.requests.is_complete(h) {
+            return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+        }
+        let deadline = W::now_ns().saturating_add(timeout_ns);
+        loop {
+            match self.pkt_send(ch, data) {
+                Ok(()) => {
+                    self.requests.complete(h, Status::Success);
+                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+                }
+                Err(s) if s.is_would_block() => {
+                    if W::now_ns() >= deadline {
+                        return Status::Timeout;
+                    }
+                    W::yield_now();
+                }
+                Err(s) => {
+                    self.requests.complete(h, s);
+                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+                }
+            }
+        }
+    }
+
+    /// Drive a pending packet-receive request within `timeout_ns`; on
+    /// success returns the byte count copied into `out`. MCAPI `wait`.
+    pub fn wait_pkt_recv(
+        &self,
+        h: RequestHandle,
+        out: &mut [u8],
+        timeout_ns: u64,
+    ) -> Result<usize, Status> {
+        let PendingOp::PktRecv { ch } = self.requests.slot(h).op() else {
+            return Err(Status::InvalidRequest);
+        };
+        let deadline = W::now_ns().saturating_add(timeout_ns);
+        loop {
+            match self.pkt_recv(ch, out) {
+                Ok(n) => {
+                    self.requests.complete(h, Status::Success);
+                    let _ = self.requests.reap(h);
+                    return Ok(n);
+                }
+                Err(s) if s.is_would_block() => {
+                    if W::now_ns() >= deadline {
+                        return Err(Status::Timeout);
+                    }
+                    W::yield_now();
+                }
+                Err(s) => {
+                    self.requests.complete(h, s);
+                    let _ = self.requests.reap(h);
+                    return Err(s);
+                }
+            }
+        }
+    }
+
+    // -- doorbell polling ------------------------------------------------------
+
+    /// Poll the doorbell board for the first of `channels` with pending
+    /// payloads (lock-free fast path): one relaxed word-load per 64
+    /// channel slots, independent of how many channels are polled — the
+    /// idle-receiver cost is one cache line at the default table size.
+    /// Channels on the `Locked` backend are never flagged; poll them
+    /// directly. A `Some` is a hint (the payload may already have been
+    /// consumed if polled from a non-consumer thread); `None` is
+    /// authoritative up to the doorbell protocol's clear-then-recheck.
+    pub fn chan_poll(&self, channels: &[usize]) -> Option<usize> {
+        self.doorbell.poll(channels)
+    }
+
+    /// Payloads currently buffered on a connected channel (approximate
+    /// under concurrency; monitoring only).
+    pub fn chan_available(&self, ch: usize) -> Result<usize, Status> {
+        let slot = self.connected_ch(ch)?;
+        Ok(match &slot.ring {
+            Some(ring) => ring.len(),
+            None => {
+                // Locked backend: channel entries live in the receive
+                // endpoint's queue (mixed with connection-less messages).
+                let rx = slot.rx_ep.load() as usize;
+                match &self.endpoints[rx].queue {
+                    QueueImpl::Locked(q) => self.global.with_read(|| unsafe { q.len() }),
+                    QueueImpl::LockFree(q) => q.len(),
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+
+    #[test]
+    fn doorbell_set_clear_poll() {
+        let d = Doorbell::<RealWorld>::new(32);
+        assert_eq!(d.poll(&[0, 5, 9]), None);
+        d.set(5);
+        d.set(9);
+        assert_eq!(d.poll(&[0, 5, 9]), Some(5), "first flagged channel wins");
+        d.clear(5);
+        assert_eq!(d.poll(&[0, 5, 9]), Some(9));
+        d.clear(9);
+        assert_eq!(d.poll(&[0, 5, 9]), None);
+    }
+
+    #[test]
+    fn doorbell_poll_spans_words() {
+        let d = Doorbell::<RealWorld>::new(130);
+        d.set(129);
+        assert_eq!(d.poll(&[1, 64, 129]), Some(129));
+        d.clear(129);
+        assert_eq!(d.poll(&[1, 64, 129]), None);
+    }
+}

@@ -14,11 +14,16 @@
 //! * `Locked` — the reference design: every operation takes the global
 //!   user-mode reader/writer lock (itself guarded by one kernel lock).
 //! * `LockFree` — the paper's refactoring: NBB receive queues, bit-set
-//!   request pool, Figure 3/4 FSMs, atomic metadata.
+//!   request pool, Figure 3/4 FSMs, atomic metadata. Connected packet
+//!   and scalar channels additionally take the [`channel`] fast path:
+//!   a dedicated per-channel SPSC ring carrying the payload in its
+//!   slots (no pool lease, no copy through the shared pool), batched
+//!   submission/completion, and a doorbell board for idle receivers.
 //!
 //! The runtime is generic over [`crate::lockfree::mem::World`], so the
 //! same code runs on real hardware and on the deterministic SMP simulator.
 
+pub mod channel;
 pub mod queue;
 pub mod request;
 pub mod types;
@@ -28,8 +33,10 @@ use std::sync::Arc;
 use crate::lockfree::fsm::AtomicFsm;
 use crate::lockfree::mem::{Atom32, Atom64, World};
 use crate::lockfree::nbw::Nbw;
+use crate::lockfree::ring::ChannelRing;
 use crate::mrapi::rwlock::RwLock;
 use crate::mrapi::shmem::{Lease, Partition};
+use channel::Doorbell;
 use queue::{entry_state, Entry, LockFreeQueue, LockedQueue};
 use request::{PendingOp, RequestHandle, RequestPool};
 use types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status, PRIORITIES};
@@ -73,6 +80,16 @@ struct ChannelSlot<W: World> {
     rx_open: W::U32,
     /// NBW variable backing a *state* channel (paper §7 future work).
     nbw: Nbw<u64, W>,
+    /// Connected-channel fast path: a dedicated SPSC ring whose slots
+    /// carry the payload (packet bytes / scalars). `Some` on the
+    /// lock-free backend; `None` on the `Locked` baseline, which keeps
+    /// the reference pool-lease + locked-queue path end to end.
+    /// Pre-allocated at `buf_len` slots like every other runtime table
+    /// (MCAPI's static-allocation model — endpoint slots eagerly build
+    /// their full per-lane queues the same way); lazily building
+    /// kind-sized rings at `connect` would save ~128 KiB at default
+    /// config at the cost of interior mutability on this field.
+    ring: Option<ChannelRing<W>>,
 }
 
 fn pack(id: EndpointId) -> u64 {
@@ -88,6 +105,10 @@ pub struct McapiRuntime<W: World> {
     pool: Partition<W>,
     /// Figure 4 FSM per pooled buffer.
     buffer_fsm: Vec<AtomicFsm<W>>,
+    /// Doorbell board for the connected-channel fast path: one bit per
+    /// channel slot so an idle receiver polls one cache line regardless
+    /// of channel count (see [`channel`]).
+    doorbell: Doorbell<W>,
     /// The Figure 1 global lock (used only by the Locked backend).
     global: RwLock<W>,
 }
@@ -123,6 +144,12 @@ impl<W: World> McapiRuntime<W> {
                 tx_open: W::U32::new(0),
                 rx_open: W::U32::new(0),
                 nbw: Nbw::new(4, 0),
+                ring: match cfg.backend {
+                    BackendKind::LockFree => {
+                        Some(ChannelRing::new(cfg.nbb_capacity, cfg.buf_len.max(8)))
+                    }
+                    BackendKind::Locked => None,
+                },
             })
             .collect();
         Arc::new(McapiRuntime {
@@ -133,6 +160,7 @@ impl<W: World> McapiRuntime<W> {
             buffer_fsm: (0..cfg.pool_buffers)
                 .map(|_| AtomicFsm::new(entry_state::FREE))
                 .collect(),
+            doorbell: Doorbell::new(cfg.max_channels),
             global: RwLock::new(),
             cfg,
         })
@@ -156,6 +184,13 @@ impl<W: World> McapiRuntime<W> {
     /// Pool buffers currently free.
     pub fn buffers_available(&self) -> usize {
         self.pool.available()
+    }
+
+    /// Total pool lease operations (acquire + release attempts) so far —
+    /// instrumentation for the fast-path tests asserting a steady-state
+    /// connected-channel exchange performs **zero** pool traffic.
+    pub fn pool_lease_ops(&self) -> u64 {
+        self.pool.lease_ops()
     }
 
     fn charge_api(&self) {
@@ -514,6 +549,14 @@ impl<W: World> McapiRuntime<W> {
             slot.rx_ep.store(rx_i as u32);
             slot.tx_open.store(0);
             slot.rx_open.store(0);
+            // Fast-path hygiene: a reused channel slot's ring may hold
+            // residue from a previous connection — drain it and clear the
+            // doorbell bit before publishing the channel (exclusive here:
+            // the slot is CONNECTING, claimed by this thread's CAS).
+            if let Some(ring) = &slot.ring {
+                ring.drain();
+            }
+            self.doorbell.clear(ch);
             slot.state.transition_exact(ch_state::CONNECTING, ch_state::CONNECTED);
             Ok(ch)
         };
@@ -557,6 +600,12 @@ impl<W: World> McapiRuntime<W> {
         let _ = self.endpoints[rx].rx_channel.cas(ch as u32 + 1, 0);
         slot.tx_open.store(0);
         slot.rx_open.store(0);
+        // A flagged-but-unclosed doorbell bit would make `chan_poll`
+        // report this dead channel forever (and starve channels behind
+        // it in the poll list) — the receiver can no longer clear it
+        // once `channel_ready` fails. `connect` re-clears on slot reuse
+        // for the narrow close-races-a-sender window.
+        self.doorbell.clear(ch);
         Ok(())
     }
 
@@ -598,24 +647,19 @@ impl<W: World> McapiRuntime<W> {
                 })
             }
             BackendKind::LockFree => {
-                let (tx_i, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
-                let from = self.endpoints[tx_i].owner.load();
-                let lease = self.lease_filled(data)?;
-                let entry = Entry::buffered(lease.index as u32, data.len() as u32, from, 0);
-                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
-                    unreachable!();
-                };
-                q.push(entry).map_err(|(s, _)| {
-                    self.abort_lease(lease);
-                    s
-                })
+                // Fast path: payload bytes go straight into the channel
+                // ring's slot — no pool lease, no abort path, one fewer
+                // copy (see `channel`).
+                self.channel_ready(ch, ChannelKind::Packet)?;
+                self.ring_pkt_send(ch, data)
             }
         }
     }
 
-    /// Packet receive on an open channel (non-blocking). The receive
-    /// buffer is pool-allocated per the spec; this copies out and
-    /// releases it.
+    /// Packet receive on an open channel (non-blocking). On the `Locked`
+    /// reference path the receive buffer is pool-allocated per the spec
+    /// (copied out and released here); on the lock-free fast path the
+    /// payload comes straight from the channel ring's slot.
     pub fn pkt_recv(&self, ch: usize, out: &mut [u8]) -> Result<usize, Status> {
         self.charge_api();
         match self.cfg.backend {
@@ -631,66 +675,24 @@ impl<W: World> McapiRuntime<W> {
                 Ok(self.global.with_write(|| self.consume_entry(&entry, out)))
             }
             BackendKind::LockFree => {
-                let (_, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
-                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
-                    unreachable!();
-                };
-                let entry = q.pop()?;
-                Ok(self.consume_entry(&entry, out))
+                // Fast path: copy straight out of the ring slot (or use
+                // `channel`'s batch/zero-copy forms to skip this copy too).
+                self.channel_ready(ch, ChannelKind::Packet)?;
+                self.ring_pkt_recv(ch, out)
             }
         }
     }
 
-    /// Scalar send (8/16/32/64-bit payloads all travel as u64).
+    /// 64-bit scalar send. Width-typed variants (8/16/32-bit, with
+    /// receive-side width checking) live in [`channel`]:
+    /// `sclr_send8/16/32/64`.
     pub fn sclr_send(&self, ch: usize, value: u64) -> Result<(), Status> {
-        self.charge_api();
-        match self.cfg.backend {
-            BackendKind::Locked => {
-                let (tx_i, rx_i) =
-                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
-                let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
-                self.global.with_write(|| {
-                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
-                        unreachable!();
-                    };
-                    // Safety: global write lock held.
-                    unsafe { q.push(Entry::scalar(value, from)) }
-                })
-            }
-            BackendKind::LockFree => {
-                let (tx_i, rx_i) = self.channel_ready(ch, ChannelKind::Scalar)?;
-                let from = self.endpoints[tx_i].owner.load();
-                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
-                    unreachable!();
-                };
-                q.push(Entry::scalar(value, from)).map_err(|(s, _)| s)
-            }
-        }
+        self.sclr_send_w(ch, value, 8)
     }
 
-    /// Scalar receive.
+    /// 64-bit scalar receive (width-checked; see [`channel`]).
     pub fn sclr_recv(&self, ch: usize) -> Result<u64, Status> {
-        self.charge_api();
-        match self.cfg.backend {
-            BackendKind::Locked => {
-                let (_, rx_i) =
-                    self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
-                self.global.with_write(|| {
-                    let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
-                        unreachable!();
-                    };
-                    // Safety: global write lock held.
-                    unsafe { q.pop() }.map(|e| e.scalar).ok_or(Status::WouldBlock)
-                })
-            }
-            BackendKind::LockFree => {
-                let (_, rx_i) = self.channel_ready(ch, ChannelKind::Scalar)?;
-                let QueueImpl::LockFree(q) = &self.endpoints[rx_i].queue else {
-                    unreachable!();
-                };
-                q.pop().map(|e| e.scalar)
-            }
-        }
+        self.sclr_recv_w(ch, 8)
     }
 
     // -- state channels (paper §7 future work) --------------------------------

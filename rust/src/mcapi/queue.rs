@@ -47,9 +47,16 @@ impl Entry {
         Entry { buf_index, len, from_node, priority, scalar: 0 }
     }
 
-    /// Entry carrying an inline scalar.
+    /// Entry carrying an inline 64-bit scalar.
     pub fn scalar(value: u64, from_node: u32) -> Self {
-        Entry { buf_index: u32::MAX, len: 0, from_node, priority: 0, scalar: value }
+        Self::scalar_w(value, from_node, 8)
+    }
+
+    /// Entry carrying an inline scalar of `width` bytes (1/2/4/8 — the
+    /// MCAPI scalar sizes). The width travels in `len` so the receive
+    /// side can reject width mismatches (`Status::ScalarSizeMismatch`).
+    pub fn scalar_w(value: u64, from_node: u32, width: u32) -> Self {
+        Entry { buf_index: u32::MAX, len: width, from_node, priority: 0, scalar: value }
     }
 
     /// True when this entry owns a pooled buffer.
@@ -139,6 +146,17 @@ impl LockedQueue {
 /// the consumer's re-check sees the entry or the producer's subsequent
 /// `set` re-flags the lane. A bit may be *spuriously* set (lane already
 /// drained) — that costs one extra lane probe, never a lost entry.
+///
+/// # Single-consumer contract
+///
+/// Flag-board mode is **single-consumer**: the rotation cursor, the
+/// word-snapshot scratch and the clear-then-recheck protocol all assume
+/// exactly one popping thread (per-endpoint receives are single-consumer
+/// by the MCAPI spec; MPMC endpoint profiles need the `Locked` backend
+/// or one queue per consumer). Debug/sim builds record the owning
+/// consumer thread on the first `pop` and reject any other popping
+/// thread with a panic instead of racing silently; release builds trust
+/// the contract and pay nothing.
 pub struct LockFreeQueue<W: World> {
     /// `lanes[priority][producer]`.
     lanes: Vec<Vec<Nbb<Entry, W>>>,
@@ -150,6 +168,22 @@ pub struct LockFreeQueue<W: World> {
     /// Receiver-private word-snapshot scratch (avoids per-pop allocation
     /// when `producers > 64`).
     scratch: UnsafeCell<Vec<u64>>,
+    /// Owning consumer's thread token, claimed on first pop (0 = none).
+    /// Debug/sim guard for the single-consumer contract (see type docs);
+    /// a plain host atomic so simulated worlds never price it.
+    #[cfg(debug_assertions)]
+    consumer: std::sync::atomic::AtomicU64,
+}
+
+/// Small monotone per-thread token for the single-consumer debug guard.
+#[cfg(debug_assertions)]
+fn consumer_token() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TOKEN: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TOKEN.with(|t| *t)
 }
 
 unsafe impl<W: World> Send for LockFreeQueue<W> {}
@@ -166,8 +200,32 @@ impl<W: World> LockFreeQueue<W> {
             producers,
             cursor: UnsafeCell::new(0),
             scratch: UnsafeCell::new(vec![0u64; (producers + 63) / 64]),
+            #[cfg(debug_assertions)]
+            consumer: std::sync::atomic::AtomicU64::new(0),
         }
     }
+
+    /// Debug/sim enforcement of the single-consumer contract: the first
+    /// popping thread claims the queue; any other popping thread panics.
+    #[cfg(debug_assertions)]
+    fn assert_single_consumer(&self) {
+        use std::sync::atomic::Ordering;
+        let token = consumer_token();
+        if let Err(owner) =
+            self.consumer.compare_exchange(0, token, Ordering::Relaxed, Ordering::Relaxed)
+        {
+            assert_eq!(
+                owner, token,
+                "LockFreeQueue flag-board mode is single-consumer: pop from a second \
+                 thread (token {token}, owner {owner}); use the Locked backend or one \
+                 queue per consumer for MPMC endpoints"
+            );
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline]
+    fn assert_single_consumer(&self) {}
 
     /// Producer-side insert (wait-free except the bounded ring).
     pub fn push(&self, e: Entry) -> Result<(), (Status, Entry)> {
@@ -221,6 +279,7 @@ impl<W: World> LockFreeQueue<W> {
     /// snapshot the occupancy words (one relaxed load each) and probe
     /// only flagged lanes, rotating for fairness. Single consumer only.
     pub fn pop(&self) -> Result<Entry, Status> {
+        self.assert_single_consumer();
         let cursor = unsafe { &mut *self.cursor.get() };
         let scratch = unsafe { &mut *self.scratch.get() };
         let mut saw_peer_active = false;
@@ -279,6 +338,7 @@ impl<W: World> LockFreeQueue<W> {
         if max == 0 {
             return Ok(0);
         }
+        self.assert_single_consumer();
         let cursor = unsafe { &mut *self.cursor.get() };
         let scratch = unsafe { &mut *self.scratch.get() };
         let mut saw_peer_active = false;
@@ -537,6 +597,34 @@ mod tests {
         );
         // 10 polls x PRIORITIES word snapshots, nothing else.
         assert_eq!(small, 10 * PRIORITIES as u64);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn second_consumer_thread_is_rejected_in_debug() {
+        // The single-consumer guard: once a thread has popped, a pop
+        // from any other thread must panic instead of racing the cursor
+        // and the clear-then-recheck protocol.
+        let q = Arc::new(LfQueue::new(1, 4));
+        q.push(Entry::scalar(1, 0)).unwrap();
+        q.push(Entry::scalar(2, 0)).unwrap();
+        let claimer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                assert_eq!(q.pop().unwrap().scalar, 1);
+            })
+        };
+        claimer.join().unwrap();
+        let intruder = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let _ = q.pop(); // must panic: queue owned by `claimer`
+            })
+        };
+        assert!(
+            intruder.join().is_err(),
+            "second consumer thread must be rejected in debug builds"
+        );
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub enum Status {
     Busy,
     /// Payload larger than the configured buffer size.
     MessageLimit,
+    /// Scalar receive width differs from the sent width (the MCAPI
+    /// `MCAPI_ERR_SCL_SIZE` condition). The mismatched scalar is
+    /// consumed.
+    ScalarSizeMismatch,
     /// Request handle invalid or not pending.
     InvalidRequest,
     /// Wait timed out.

@@ -12,6 +12,7 @@
 //! their bytes.
 
 use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::lockfree::freelist::FreeList;
 use crate::lockfree::mem::World;
@@ -24,6 +25,11 @@ pub struct Partition<W: World> {
     pool: FreeList<W>,
     /// Synthetic region base for simulator cost accounting.
     region: u64,
+    /// Acquire + release attempt counter. Instrumentation only — a plain
+    /// host atomic on purpose, so simulated worlds never price it: the
+    /// connected-channel fast-path tests assert **zero** lease traffic on
+    /// a steady-state packet exchange via this counter.
+    lease_ops: AtomicU64,
 }
 
 unsafe impl<W: World> Send for Partition<W> {}
@@ -53,6 +59,7 @@ impl<W: World> Partition<W> {
             buf_len,
             pool: FreeList::new_full(count),
             region: W::alloc_region(count * buf_len),
+            lease_ops: AtomicU64::new(0),
         }
     }
 
@@ -71,14 +78,22 @@ impl<W: World> Partition<W> {
         self.pool.free_count()
     }
 
+    /// Total acquire + release attempts so far (instrumentation; see the
+    /// field docs — not priced by simulated worlds).
+    pub fn lease_ops(&self) -> u64 {
+        self.lease_ops.load(Ordering::Relaxed)
+    }
+
     /// Lease a buffer from the pool (lock-free). `None` when exhausted.
     pub fn acquire(&self) -> Option<Lease> {
+        self.lease_ops.fetch_add(1, Ordering::Relaxed);
         let index = self.pool.pop()?;
         Some(Lease { index, offset: index * self.buf_len, len: self.buf_len })
     }
 
     /// Return a lease to the pool (lock-free).
     pub fn release(&self, lease: Lease) {
+        self.lease_ops.fetch_add(1, Ordering::Relaxed);
         self.pool.push(lease.index);
     }
 

@@ -1,0 +1,498 @@
+//! Integration properties of the connected-channel fast path: ring-backed
+//! packet/scalar channels, batched submission/completion, asynchronous
+//! packet requests, the doorbell board, and the pool-isolation guarantees
+//! (a steady-state SPSC exchange performs **zero** pool/lease operations).
+//!
+//! Required by CI alongside the tier-1 suite (`.github/workflows/ci.yml`).
+
+use std::sync::Arc;
+
+use mcapi::lockfree::{Atom32, RealWorld, World};
+use mcapi::mcapi::types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status};
+use mcapi::mcapi::McapiRuntime;
+use mcapi::os::{AffinityMode, OsProfile};
+use mcapi::sim::{Machine, MachineCfg, SimWorld};
+
+fn both() -> [Arc<McapiRuntime<RealWorld>>; 2] {
+    [
+        McapiRuntime::new(RuntimeCfg::with_backend(BackendKind::Locked)),
+        McapiRuntime::new(RuntimeCfg::with_backend(BackendKind::LockFree)),
+    ]
+}
+
+/// Create two endpoints, connect and open a channel of `kind`.
+fn open_channel<W: World>(
+    rt: &McapiRuntime<W>,
+    kind: ChannelKind,
+    port: u16,
+) -> usize {
+    let a = EndpointId::new(0, 1, port);
+    let b = EndpointId::new(0, 2, port);
+    rt.create_endpoint(a, 0).unwrap();
+    rt.create_endpoint(b, 1).unwrap();
+    let ch = rt.connect(a, b, kind).unwrap();
+    rt.open_send(ch).unwrap();
+    rt.open_recv(ch).unwrap();
+    ch
+}
+
+// ---------------------------------------------------------------------------
+// Batched submission / completion.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packet_batch_roundtrip_both_backends() {
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Packet, 1);
+        let payloads: Vec<Vec<u8>> = (0u8..6).map(|i| vec![i; (i + 1) as usize]).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        assert_eq!(rt.pkt_send_batch(ch, &refs), Ok(6));
+        assert_eq!(rt.chan_available(ch).unwrap(), 6);
+        let mut out = Vec::new();
+        assert_eq!(rt.pkt_recv_batch(ch, &mut out, 4), Ok(4));
+        assert_eq!(rt.pkt_recv_batch(ch, &mut out, 10), Ok(2));
+        assert_eq!(out, payloads, "batch FIFO and payload integrity");
+        assert_eq!(rt.pkt_recv_batch(ch, &mut out, 1).unwrap_err(), Status::WouldBlock);
+        assert_eq!(rt.pkt_send_batch(ch, &[]), Ok(0));
+        assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers, "no leaked leases");
+    }
+}
+
+#[test]
+fn packet_batch_partial_on_full_ring_and_oversize() {
+    for backend in [BackendKind::Locked, BackendKind::LockFree] {
+        let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+            backend,
+            nbb_capacity: 4,
+            ..Default::default()
+        });
+        let ch = open_channel(&rt, ChannelKind::Packet, 1);
+        let payloads: Vec<Vec<u8>> = (0u8..6).map(|i| vec![i; 4]).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        // Only the ring/lane capacity fits; the rest stays with the caller.
+        assert_eq!(rt.pkt_send_batch(ch, &refs), Ok(4), "{backend:?}");
+        assert_eq!(rt.pkt_send_batch(ch, &refs[4..]).unwrap_err(), Status::WouldBlock);
+        let mut out = Vec::new();
+        assert_eq!(rt.pkt_recv_batch(ch, &mut out, usize::MAX), Ok(4));
+        assert_eq!(rt.pkt_send_batch(ch, &refs[4..]), Ok(2));
+        assert_eq!(rt.pkt_recv_batch(ch, &mut out, usize::MAX), Ok(2));
+        assert_eq!(out, payloads);
+        // An oversized head payload rejects the batch outright.
+        let big = vec![0u8; rt.cfg().buf_len + 1];
+        assert_eq!(
+            rt.pkt_send_batch(ch, &[big.as_slice()]).unwrap_err(),
+            Status::MessageLimit,
+            "{backend:?}"
+        );
+        assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+    }
+}
+
+#[test]
+fn scalar_batch_roundtrip_both_backends() {
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Scalar, 2);
+        let vals: Vec<u64> = (100..106).collect();
+        assert_eq!(rt.sclr_send_batch(ch, &vals), Ok(6));
+        let mut out = Vec::new();
+        assert_eq!(rt.sclr_recv_batch(ch, &mut out, 4), Ok(4));
+        assert_eq!(rt.sclr_recv_batch(ch, &mut out, 4), Ok(2));
+        assert_eq!(out, vals, "scalar batch FIFO");
+        assert_eq!(rt.sclr_recv_batch(ch, &mut out, 1).unwrap_err(), Status::WouldBlock);
+        assert_eq!(rt.sclr_send_batch(ch, &[]), Ok(0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar widths (MCAPI 8/16/32/64-bit sizes).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scalar_widths_roundtrip_both_backends() {
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Scalar, 3);
+        rt.sclr_send8(ch, 0xAB).unwrap();
+        assert_eq!(rt.sclr_recv8(ch).unwrap(), 0xAB);
+        rt.sclr_send16(ch, 0xBEEF).unwrap();
+        assert_eq!(rt.sclr_recv16(ch).unwrap(), 0xBEEF);
+        rt.sclr_send32(ch, 0xDEAD_BEEF).unwrap();
+        assert_eq!(rt.sclr_recv32(ch).unwrap(), 0xDEAD_BEEF);
+        rt.sclr_send64(ch, 0xFEED_F00D_DEAD_BEEF).unwrap();
+        assert_eq!(rt.sclr_recv64(ch).unwrap(), 0xFEED_F00D_DEAD_BEEF);
+        // The legacy 64-bit API is width 8 end to end.
+        rt.sclr_send(ch, 77).unwrap();
+        assert_eq!(rt.sclr_recv64(ch).unwrap(), 77);
+        rt.sclr_send64(ch, 78).unwrap();
+        assert_eq!(rt.sclr_recv(ch).unwrap(), 78);
+    }
+}
+
+#[test]
+fn scalar_width_mismatch_is_rejected_and_consumed() {
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Scalar, 4);
+        rt.sclr_send8(ch, 5).unwrap();
+        assert_eq!(rt.sclr_recv32(ch).unwrap_err(), Status::ScalarSizeMismatch);
+        // The mismatched scalar was consumed, per the documented contract.
+        assert_eq!(rt.sclr_recv8(ch).unwrap_err(), Status::WouldBlock);
+        // A following correctly-sized exchange still works.
+        rt.sclr_send16(ch, 900).unwrap();
+        assert_eq!(rt.sclr_recv16(ch).unwrap(), 900);
+    }
+}
+
+#[test]
+fn scalar_batch_width_mismatch_parity_across_backends() {
+    // The batch drain treats a width-mismatched scalar exactly like the
+    // single-receive loop on both backends: a leading mismatch errors
+    // (and is consumed), a mid-batch mismatch stops the batch (and is
+    // consumed), later scalars survive.
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Scalar, 5);
+        let mut out = Vec::new();
+        // Leading mismatch.
+        rt.sclr_send8(ch, 5).unwrap();
+        assert_eq!(
+            rt.sclr_recv_batch(ch, &mut out, 4).unwrap_err(),
+            Status::ScalarSizeMismatch
+        );
+        assert_eq!(rt.sclr_recv_batch(ch, &mut out, 4).unwrap_err(), Status::WouldBlock);
+        // Mid-batch mismatch: partial delivery, offender consumed.
+        rt.sclr_send64(ch, 1).unwrap();
+        rt.sclr_send8(ch, 2).unwrap();
+        rt.sclr_send64(ch, 3).unwrap();
+        assert_eq!(rt.sclr_recv_batch(ch, &mut out, 8), Ok(1));
+        assert_eq!(out, vec![1]);
+        assert_eq!(rt.sclr_recv_batch(ch, &mut out, 8), Ok(1));
+        assert_eq!(out, vec![1, 3]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous packet operations (Figure 3 requests).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn async_packet_send_recv_wait_cancel() {
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Packet, 5);
+        let h = rt.pkt_send_i(ch, b"async pkt").unwrap();
+        assert!(rt.test(h));
+        assert_eq!(rt.wait_pkt_send(h, ch, b"async pkt", 1_000_000), Status::Success);
+        // Nothing more pending: an async receive times out, then the
+        // still-pending request can be cancelled... (timeout path)
+        let mut buf = [0u8; 32];
+        let hr = rt.pkt_recv_i(ch).unwrap();
+        let n = rt.wait_pkt_recv(hr, &mut buf, 1_000_000).unwrap();
+        assert_eq!(&buf[..n], b"async pkt");
+        let ht = rt.pkt_recv_i(ch).unwrap();
+        assert_eq!(rt.wait_pkt_recv(ht, &mut buf, 0).unwrap_err(), Status::Timeout);
+        rt.cancel(ht).unwrap();
+        assert_eq!(rt.requests_in_use(), 0);
+        // Async ops on a bad channel are rejected up front.
+        assert_eq!(rt.pkt_send_i(999, b"x").unwrap_err(), Status::InvalidChannel);
+        assert_eq!(rt.pkt_recv_i(999).unwrap_err(), Status::InvalidChannel);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool isolation and lease restoration.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn locked_packet_push_failure_restores_lease() {
+    // The reference path leases a pool buffer *before* the queue push;
+    // when the push fails the lease must be aborted (Figure 4), not
+    // leaked — on a tiny queue this is easy to provoke.
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+        backend: BackendKind::Locked,
+        nbb_capacity: 2,
+        ..Default::default()
+    });
+    let ch = open_channel(&rt, ChannelKind::Packet, 6);
+    rt.pkt_send(ch, b"a").unwrap();
+    rt.pkt_send(ch, b"b").unwrap();
+    assert_eq!(rt.pkt_send(ch, b"c").unwrap_err(), Status::WouldBlock);
+    assert_eq!(
+        rt.buffers_available(),
+        rt.cfg().pool_buffers - 2,
+        "failed push must hand its lease back"
+    );
+    let mut buf = [0u8; 8];
+    assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap(), 1);
+    assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap(), 1);
+    assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+}
+
+#[test]
+fn locked_packet_pool_exhaustion_reports_memlimit() {
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+        backend: BackendKind::Locked,
+        pool_buffers: 1,
+        nbb_capacity: 8,
+        ..Default::default()
+    });
+    let ch = open_channel(&rt, ChannelKind::Packet, 7);
+    rt.pkt_send(ch, b"a").unwrap();
+    assert_eq!(rt.pkt_send(ch, b"b").unwrap_err(), Status::MemLimit);
+    let mut buf = [0u8; 8];
+    rt.pkt_recv(ch, &mut buf).unwrap();
+    rt.pkt_send(ch, b"b").unwrap();
+}
+
+#[test]
+fn lockfree_packet_path_never_touches_the_pool() {
+    // The fast path carries payloads in the ring slots: filling the ring
+    // to rejection and draining it must leave the pool untouched — no
+    // lease, no abort path, MemLimit impossible.
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+        backend: BackendKind::LockFree,
+        nbb_capacity: 4,
+        ..Default::default()
+    });
+    let ch = open_channel(&rt, ChannelKind::Packet, 8);
+    for i in 0..4u8 {
+        rt.pkt_send(ch, &[i; 4]).unwrap();
+    }
+    assert_eq!(rt.pkt_send(ch, b"over").unwrap_err(), Status::WouldBlock);
+    let mut buf = [0u8; 8];
+    for i in 0..4u8 {
+        assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap(), 4);
+        assert_eq!(buf[..4], [i; 4]);
+    }
+    assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap_err(), Status::WouldBlock);
+    assert_eq!(rt.pool_lease_ops(), 0, "packet fast path must perform zero lease ops");
+    assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+    // Sanity that the counter *does* count: the message path leases.
+    let dst = EndpointId::new(0, 3, 99);
+    let ep = rt.create_endpoint(dst, 2).unwrap();
+    rt.msg_send(0, dst, b"leased", 0).unwrap();
+    assert!(rt.pool_lease_ops() > 0);
+    let _ = rt.msg_recv(ep, &mut buf);
+}
+
+// ---------------------------------------------------------------------------
+// Channel-slot reuse and the doorbell board.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reconnected_channel_slot_delivers_no_stale_packets() {
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg::with_backend(BackendKind::LockFree));
+    let ch = open_channel(&rt, ChannelKind::Packet, 9);
+    rt.pkt_send(ch, b"stale1").unwrap();
+    rt.pkt_send(ch, b"stale2").unwrap();
+    rt.close(ch).unwrap();
+    // The freed slot is reused by the next connect; its ring residue
+    // must be drained before the channel goes CONNECTED.
+    let c = EndpointId::new(0, 3, 10);
+    let d = EndpointId::new(0, 4, 10);
+    rt.create_endpoint(c, 2).unwrap();
+    rt.create_endpoint(d, 3).unwrap();
+    let ch2 = rt.connect(c, d, ChannelKind::Packet).unwrap();
+    assert_eq!(ch2, ch, "first free slot is reused");
+    rt.open_send(ch2).unwrap();
+    rt.open_recv(ch2).unwrap();
+    let mut buf = [0u8; 16];
+    assert_eq!(rt.pkt_recv(ch2, &mut buf).unwrap_err(), Status::WouldBlock);
+    rt.pkt_send(ch2, b"fresh").unwrap();
+    assert_eq!(rt.pkt_recv(ch2, &mut buf).unwrap(), 5);
+    assert_eq!(&buf[..5], b"fresh");
+}
+
+#[test]
+fn doorbell_flags_pending_channels() {
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg::with_backend(BackendKind::LockFree));
+    let ch0 = open_channel(&rt, ChannelKind::Packet, 11);
+    let c = EndpointId::new(0, 3, 12);
+    let d = EndpointId::new(0, 4, 12);
+    rt.create_endpoint(c, 2).unwrap();
+    rt.create_endpoint(d, 3).unwrap();
+    let ch1 = rt.connect(c, d, ChannelKind::Scalar).unwrap();
+    rt.open_send(ch1).unwrap();
+    rt.open_recv(ch1).unwrap();
+
+    assert_eq!(rt.chan_poll(&[ch0, ch1]), None, "idle board");
+    rt.sclr_send(ch1, 9).unwrap();
+    assert_eq!(rt.chan_poll(&[ch0, ch1]), Some(ch1));
+    rt.pkt_send(ch0, b"p").unwrap();
+    assert_eq!(rt.chan_poll(&[ch0, ch1]), Some(ch0), "first flagged in poll order");
+    let mut buf = [0u8; 8];
+    rt.pkt_recv(ch0, &mut buf).unwrap();
+    assert_eq!(rt.sclr_recv(ch1).unwrap(), 9);
+    // Consumed: the next empty probe clears each stale flag.
+    assert_eq!(rt.pkt_recv(ch0, &mut buf).unwrap_err(), Status::WouldBlock);
+    assert_eq!(rt.sclr_recv(ch1).unwrap_err(), Status::WouldBlock);
+    assert_eq!(rt.chan_poll(&[ch0, ch1]), None, "empty probes clear the board");
+    // Cleared flags lose nothing.
+    rt.sclr_send(ch1, 10).unwrap();
+    assert_eq!(rt.chan_poll(&[ch0, ch1]), Some(ch1));
+    assert_eq!(rt.sclr_recv(ch1).unwrap(), 10);
+    // Out-of-table indices are skipped, not a panic.
+    assert_eq!(rt.chan_poll(&[9999, ch0]), None);
+}
+
+#[test]
+fn close_clears_the_doorbell_bit() {
+    // A channel closed with payloads still flagged must not shadow live
+    // channels in a receiver's poll list forever.
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg::with_backend(BackendKind::LockFree));
+    let ch0 = open_channel(&rt, ChannelKind::Packet, 13);
+    let c = EndpointId::new(0, 3, 14);
+    let d = EndpointId::new(0, 4, 14);
+    rt.create_endpoint(c, 2).unwrap();
+    rt.create_endpoint(d, 3).unwrap();
+    let ch1 = rt.connect(c, d, ChannelKind::Scalar).unwrap();
+    rt.open_send(ch1).unwrap();
+    rt.open_recv(ch1).unwrap();
+
+    rt.pkt_send(ch0, b"undrained").unwrap(); // flags ch0
+    rt.close(ch0).unwrap();
+    rt.sclr_send(ch1, 42).unwrap();
+    assert_eq!(
+        rt.chan_poll(&[ch0, ch1]),
+        Some(ch1),
+        "closed channel's stale flag must not starve live channels"
+    );
+    assert_eq!(rt.sclr_recv(ch1).unwrap(), 42);
+}
+
+// ---------------------------------------------------------------------------
+// Simulator-asserted fast-path properties (acceptance gates).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sim_steady_packet_exchange_is_pool_free_and_coherence_bounded() {
+    // Acceptance: a steady-state SPSC packet exchange over the ring
+    // performs ZERO pool/lease operations, and its coherence footprint
+    // stays bounded (the cached peer counters re-load the shared word at
+    // most once per ring wrap; see also the exact-budget ring unit test).
+    const N: u64 = 400;
+    let m = Machine::new(MachineCfg::new(
+        2,
+        OsProfile::linux_rt(),
+        AffinityMode::PinnedSpread,
+    ));
+    let rt = McapiRuntime::<SimWorld>::new(RuntimeCfg::with_backend(BackendKind::LockFree));
+    let ready = Arc::new(<SimWorld as World>::U32::new(0));
+    let a = EndpointId::new(0, 1, 1);
+    let b = EndpointId::new(0, 2, 1);
+    let rt1 = rt.clone();
+    let ready1 = ready.clone();
+    let producer = m.spawn(move || {
+        rt1.create_endpoint(a, 0).unwrap();
+        rt1.create_endpoint(b, 1).unwrap();
+        let ch = rt1.connect(a, b, ChannelKind::Packet).unwrap();
+        rt1.open_send(ch).unwrap();
+        rt1.open_recv(ch).unwrap();
+        ready1.store(ch as u32 + 1);
+        let mut buf = [0u8; 24];
+        for i in 0..N {
+            buf[..8].copy_from_slice(&i.to_le_bytes());
+            loop {
+                match rt1.pkt_send(ch, &buf) {
+                    Ok(()) => break,
+                    Err(s) if s.is_would_block() => <SimWorld as World>::yield_now(),
+                    Err(s) => panic!("send: {s:?}"),
+                }
+            }
+        }
+    });
+    let rt2 = rt.clone();
+    let consumer = m.spawn(move || {
+        while ready.load() == 0 {
+            <SimWorld as World>::yield_now();
+        }
+        let ch = ready.load() as usize - 1;
+        let mut buf = [0u8; 24];
+        for i in 0..N {
+            loop {
+                match rt2.pkt_recv(ch, &mut buf) {
+                    Ok(n) => {
+                        assert_eq!(n, 24);
+                        assert_eq!(u64::from_le_bytes(buf[..8].try_into().unwrap()), i);
+                        break;
+                    }
+                    Err(s) if s.is_would_block() => <SimWorld as World>::yield_now(),
+                    Err(s) => panic!("recv: {s:?}"),
+                }
+            }
+        }
+    });
+    let stats = m.run(vec![producer, consumer]);
+    assert_eq!(rt.pool_lease_ops(), 0, "fast path must never touch the pool");
+    assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+    // Whole-run line-access budget (includes setup, channel_ready hits,
+    // doorbell traffic and empty-poll retries): generous against
+    // scheduling noise — the exact one-cross-core-load-per-wrap budget is
+    // asserted at the ring level in `lockfree::ring`'s sim test.
+    let per_msg = (stats.hits + stats.misses) as f64 / N as f64;
+    assert!(
+        per_msg < 64.0,
+        "ring packet exchange should stay under 64 line accesses/msg, got {per_msg:.1} ({stats:?})"
+    );
+}
+
+#[test]
+fn sim_chan_poll_cost_is_constant_in_channel_count() {
+    // Acceptance: an idle receiver polls ONE cache line regardless of how
+    // many channels it serves — one relaxed word-load per poll at the
+    // default channel-table size.
+    let accesses = |channels: usize, polls: usize| -> u64 {
+        let m = Machine::new(MachineCfg::new(
+            1,
+            OsProfile::linux_rt(),
+            AffinityMode::SingleCore,
+        ));
+        let stats = m.run_tasks(1, |_| {
+            move || {
+                let rt =
+                    McapiRuntime::<SimWorld>::new(RuntimeCfg::with_backend(BackendKind::LockFree));
+                let mut chs = Vec::new();
+                for i in 0..channels {
+                    let a = EndpointId::new(0, 1, 20 + i as u16);
+                    let b = EndpointId::new(0, 2, 20 + i as u16);
+                    rt.create_endpoint(a, 0).unwrap();
+                    rt.create_endpoint(b, 1).unwrap();
+                    let ch = rt.connect(a, b, ChannelKind::Scalar).unwrap();
+                    rt.open_send(ch).unwrap();
+                    rt.open_recv(ch).unwrap();
+                    chs.push(ch);
+                }
+                for _ in 0..polls {
+                    assert_eq!(rt.chan_poll(&chs), None);
+                }
+            }
+        });
+        stats.hits + stats.misses
+    };
+    // Deltas cancel the (deterministic) setup cost exactly.
+    let idle_2 = accesses(2, 200) - accesses(2, 0);
+    let idle_8 = accesses(8, 200) - accesses(8, 0);
+    assert_eq!(idle_2, idle_8, "idle poll cost must not scale with channel count");
+    assert_eq!(idle_2, 200, "one word-load per idle poll");
+}
+
+#[test]
+fn sim_batched_scalar_channel_amortizes_counter_stores() {
+    // Acceptance (runtime level): driving the same scalar workload with
+    // a larger batch must strictly reduce virtual completion time — the
+    // O(1)-stores-per-batch property measured exactly at the ring level
+    // (see lockfree::ring tests) shows through the full MCAPI stack.
+    use mcapi::coordinator::{run_stress_sim, MsgKind, StressOpts, Topology};
+    let run = |batch: usize| {
+        let m = Machine::new(MachineCfg::new(
+            2,
+            OsProfile::linux_rt(),
+            AffinityMode::PinnedSpread,
+        ));
+        let topo = Topology::one_way(MsgKind::Scalar, 400);
+        run_stress_sim(&m, RuntimeCfg::default(), &topo, StressOpts::with_batch(batch))
+    };
+    let single = run(1);
+    let batched = run(16);
+    assert_eq!(single.delivered, batched.delivered);
+    assert!(
+        batched.elapsed_ns < single.elapsed_ns,
+        "scalar batch 16 should finish sooner: {batched:?} vs {single:?}"
+    );
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Run the micro_lockfree bench and snapshot its machine-readable summary
-# (the BENCH_JSON line) into a JSON baseline for the perf trajectory.
+# (every BENCH_JSON line, merged into one object) into a JSON baseline
+# for the perf trajectory.
 #
 # Usage: scripts/bench_snapshot.sh [output.json]   (default: BENCH_micro.json
 # at the repo root). The full human-readable bench report streams to stdout.
@@ -18,10 +19,29 @@ trap 'rm -f "$log"' EXIT
 
 (cd "$repo_root/rust" && cargo bench --bench micro_lockfree) | tee "$log"
 
-json_line="$(grep '^BENCH_JSON: ' "$log" | tail -n 1 | sed 's/^BENCH_JSON: //' || true)"
-if [ -z "$json_line" ]; then
+# The bench emits one BENCH_JSON line per section (NBB coherence row,
+# connected-channel ring-vs-queue row, ...). Each is a flat JSON object;
+# merge them into a single object, last key wins on collision.
+mapfile -t json_lines < <(grep '^BENCH_JSON: ' "$log" | sed 's/^BENCH_JSON: //')
+if [ "${#json_lines[@]}" -eq 0 ]; then
   echo "error: bench produced no BENCH_JSON line" >&2
   exit 1
 fi
-printf '%s\n' "$json_line" > "$out"
+merged="$(printf '%s\n' "${json_lines[@]}" \
+  | sed 's/^[[:space:]]*{//; s/}[[:space:]]*$//' \
+  | paste -sd ',' -)"
+printf '{%s}\n' "$merged" > "$out"
+
+# The merged object must stay machine-readable.
+if command -v python3 >/dev/null 2>&1; then
+  python3 -c 'import json, sys; json.load(open(sys.argv[1]))' "$out"
+fi
+
+# Required rows: the PR-over-PR trajectory keys must all be present.
+for key in spsc_ratio spsc_batch_ratio empty_pop_ns pkt_queue_mps pkt_ring_mps pkt_ring_vs_queue; do
+  if ! grep -q "\"$key\"" "$out"; then
+    echo "error: BENCH_micro snapshot is missing \"$key\"" >&2
+    exit 1
+  fi
+done
 echo "wrote $out"
