@@ -1,0 +1,630 @@
+//! Chaos harness: stress workloads under deterministic fault injection.
+//!
+//! Runs a producer/consumer exchange on the DES machine while a
+//! [`crate::sim::faults::FaultPlan`] kills, stalls or delays the victim
+//! tasks at exact priced-op indices, then checks the recovery
+//! invariants the runtime promises:
+//!
+//! * **No committed message lost** — everything the dead peer finished
+//!   publishing is delivered to the live side or salvaged by the
+//!   watchdog after [`McapiRuntime::declare_node_dead`] repairs the
+//!   ring. The only admissible hole is the API-boundary case: a
+//!   consumer killed *after* acknowledging a message but *before*
+//!   returning it to the caller (at most one, only on consumer kills).
+//! * **No duplicates, no torn payloads** — sequence numbers strictly
+//!   increase and every frame checksum verifies.
+//! * **Every lease accounted** — after recovery and salvage the buffer
+//!   pool is back to its full size (dead tasks' mid-operation leases
+//!   are reclaimed, everything committed was drained).
+//! * **Every waiter woken** — blocked peers return `EndpointDead` or
+//!   `Timeout`; the machine run terminating at all proves no one
+//!   deadlocked (the scheduler panics on a deadlock with no timed
+//!   waiter).
+//!
+//! Because the simulator is deterministic, the per-seed report is
+//! reproducible **byte-for-byte**: same seed, same report. Two modes:
+//! [`run_seeded`] derives a small random plan from a seed (the CI gate
+//! runs a fixed seed matrix), and [`run_kill_sweep`] measures the
+//! priced-op window of one `pkt_send`/`pkt_recv` on a probe run and
+//! then kills the victim at *every* index inside it, one fresh machine
+//! per point — the acceptance sweep.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::lockfree::World;
+use crate::mcapi::types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status};
+use crate::mcapi::McapiRuntime;
+use crate::os::{AffinityMode, OsProfile};
+use crate::sim::faults::{sweep_kill_points, FaultAction, FaultPlan, OpWindow};
+use crate::sim::{Machine, MachineCfg, SimWorld};
+
+/// Spawn-order task id of the producer (fault victim 0).
+const TASK_PROD: usize = 0;
+/// Spawn-order task id of the consumer (fault victim 1).
+const TASK_CONS: usize = 1;
+/// Dense node slot owning the producer-side endpoint.
+const NODE_PROD: usize = 1;
+/// Dense node slot owning the consumer-side endpoint.
+const NODE_CONS: usize = 2;
+
+/// Which workload runs under fault injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Connected packet channel (zero-copy SPSC ring fast path).
+    Pkt,
+    /// Connectionless messages (lock-free queue + pool leases).
+    Msg,
+}
+
+impl Scenario {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pkt" | "packet" => Some(Self::Pkt),
+            "msg" | "message" => Some(Self::Msg),
+            _ => None,
+        }
+    }
+
+    /// Stable report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Pkt => "pkt",
+            Self::Msg => "msg",
+        }
+    }
+}
+
+/// Which side a kill sweep targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Victim {
+    /// Kill the producer inside its send.
+    Producer,
+    /// Kill the consumer inside its receive.
+    Consumer,
+}
+
+impl Victim {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "prod" | "producer" | "tx" => Some(Self::Producer),
+            "cons" | "consumer" | "rx" => Some(Self::Consumer),
+            _ => None,
+        }
+    }
+
+    /// Stable report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Producer => "producer",
+            Self::Consumer => "consumer",
+        }
+    }
+}
+
+/// Chaos run parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosOpts {
+    /// Workload under test.
+    pub scenario: Scenario,
+    /// Seed for [`FaultPlan::from_seed`].
+    pub seed: u64,
+    /// Messages the producer streams.
+    pub messages: u64,
+    /// Per-wait deadline for the blocking receive (virtual ns).
+    pub recv_timeout_ns: u64,
+}
+
+impl Default for ChaosOpts {
+    fn default() -> Self {
+        ChaosOpts {
+            scenario: Scenario::Pkt,
+            seed: 1,
+            messages: 24,
+            recv_timeout_ns: 2_000_000,
+        }
+    }
+}
+
+/// A finished chaos run: deterministic report text plus the verdict.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Human-readable, byte-for-byte reproducible per seed.
+    pub text: String,
+    /// True when every invariant held.
+    pub pass: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Self-describing frames: seq + checksum, so tears are detectable.
+// ---------------------------------------------------------------------------
+
+const FRAME_MAGIC: u64 = 0x5AFE_C0DE_D00D_F01D;
+const FRAME_LEN: usize = 16;
+
+fn frame(seq: u64) -> [u8; FRAME_LEN] {
+    let mut f = [0u8; FRAME_LEN];
+    f[..8].copy_from_slice(&seq.to_le_bytes());
+    f[8..].copy_from_slice(&(seq ^ FRAME_MAGIC).to_le_bytes());
+    f
+}
+
+fn parse_frame(b: &[u8]) -> Option<u64> {
+    if b.len() != FRAME_LEN {
+        return None;
+    }
+    let seq = u64::from_le_bytes(b[..8].try_into().ok()?);
+    let sum = u64::from_le_bytes(b[8..].try_into().ok()?);
+    if seq ^ FRAME_MAGIC == sum {
+        Some(seq)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One scenario run under a fault plan.
+// ---------------------------------------------------------------------------
+
+/// Everything observable after one machine run (host-side state only —
+/// no priced operations happen after the machine stops).
+struct Outcome {
+    delivered: Vec<u64>,
+    drained: Vec<u64>,
+    torn: u64,
+    producer_clean: bool,
+    consumer_clean: bool,
+    consumer_exit: Option<Status>,
+    /// Ring ground truth `update/2` (Pkt only).
+    ring_committed: Option<u64>,
+    /// Counters even and fully acknowledged after salvage (Pkt only).
+    ring_settled: bool,
+    leaked: u64,
+    reclaimed: u64,
+    poisons: u64,
+    timeouts: u64,
+    vtime_ns: u64,
+    prod_window: Option<OpWindow>,
+    cons_window: Option<OpWindow>,
+}
+
+fn run_scenario(
+    scenario: Scenario,
+    plan: FaultPlan,
+    messages: u64,
+    recv_timeout_ns: u64,
+) -> Outcome {
+    let m = Machine::new(MachineCfg::new(
+        4,
+        OsProfile::linux_rt(),
+        AffinityMode::PinnedSpread,
+    ));
+    let cfg = RuntimeCfg {
+        backend: BackendKind::LockFree,
+        max_nodes: 4,
+        nbb_capacity: 8,
+        pool_buffers: 64,
+        ..Default::default()
+    };
+    let rt = McapiRuntime::<SimWorld>::new(cfg);
+    let dst = EndpointId::new(0, NODE_CONS as u16, 1);
+    let src = EndpointId::new(0, NODE_PROD as u16, 1);
+
+    // Host-side coordination (unpriced; invisible to the op indices the
+    // fault plan keys on for the victims).
+    let ready = Arc::new(AtomicBool::new(false));
+    // Pkt: channel table index. Msg: rx endpoint table index.
+    let target = Arc::new(AtomicUsize::new(usize::MAX));
+    let clean_prod = Arc::new(AtomicBool::new(false));
+    let clean_cons = Arc::new(AtomicBool::new(false));
+    let prod_declared = Arc::new(AtomicBool::new(false));
+    let delivered = Arc::new(Mutex::new(Vec::new()));
+    let drained = Arc::new(Mutex::new(Vec::new()));
+    let torn = Arc::new(AtomicU64::new(0));
+    let leaked = Arc::new(AtomicU64::new(0));
+    let consumer_exit = Arc::new(Mutex::new(None));
+    let windows = Arc::new(Mutex::new((None::<OpWindow>, None::<OpWindow>)));
+    let mark = messages / 2;
+
+    // Task 0: producer. Streams `messages` checksummed frames; yields on
+    // would-block; stops when its peer is declared dead.
+    let producer = {
+        let (rt, ready, target) = (rt.clone(), ready.clone(), target.clone());
+        let (clean, windows) = (clean_prod.clone(), windows.clone());
+        m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let t = target.load(Ordering::SeqCst);
+            let mut sent = 0u64;
+            'stream: while sent < messages {
+                let fr = frame(sent);
+                // Bracket the priced-op window of one mid-stream send for
+                // the kill sweep (probe runs read it back).
+                let start = if sent == mark { Some(SimWorld::op_count()) } else { None };
+                loop {
+                    let r = match scenario {
+                        Scenario::Pkt => rt.pkt_send(t, &fr),
+                        Scenario::Msg => rt.msg_send(NODE_PROD, dst, &fr, 0),
+                    };
+                    match r {
+                        Ok(()) => break,
+                        Err(s) if s.is_would_block() => SimWorld::yield_now(),
+                        Err(_) => break 'stream, // peer declared dead
+                    }
+                }
+                if let Some(s) = start {
+                    windows.lock().unwrap().0 =
+                        Some(OpWindow { task: TASK_PROD, start: s, end: SimWorld::op_count() });
+                }
+                sent += 1;
+            }
+            clean.store(true, Ordering::SeqCst);
+        })
+    };
+
+    // Task 1: consumer. Blocking receives with a deadline; records every
+    // frame; exits on full count or terminal status (EndpointDead after
+    // the committed remainder drained).
+    let consumer = {
+        let (rt, ready, target) = (rt.clone(), ready.clone(), target.clone());
+        let (clean, windows) = (clean_cons.clone(), windows.clone());
+        let (delivered, torn) = (delivered.clone(), torn.clone());
+        let (consumer_exit, prod_declared) = (consumer_exit.clone(), prod_declared.clone());
+        m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let t = target.load(Ordering::SeqCst);
+            let mut buf = [0u8; 64];
+            let mut exit = None;
+            loop {
+                let have = delivered.lock().unwrap().len() as u64;
+                if have >= messages {
+                    break;
+                }
+                let start = if have == mark { Some(SimWorld::op_count()) } else { None };
+                let r = match scenario {
+                    Scenario::Pkt => rt.chan_recv_wait(t, &mut buf, recv_timeout_ns),
+                    Scenario::Msg => match rt.msg_recv(t, &mut buf) {
+                        Err(s) if s.is_would_block() => {
+                            SimWorld::yield_now();
+                            Err(Status::Timeout)
+                        }
+                        r => r,
+                    },
+                };
+                if let Some(s) = start {
+                    windows.lock().unwrap().1 =
+                        Some(OpWindow { task: TASK_CONS, start: s, end: SimWorld::op_count() });
+                }
+                match r {
+                    Ok(n) => match parse_frame(&buf[..n]) {
+                        Some(seq) => delivered.lock().unwrap().push(seq),
+                        None => {
+                            torn.fetch_add(1, Ordering::SeqCst);
+                        }
+                    },
+                    Err(Status::Timeout) => {
+                        // The connectionless path has no per-endpoint
+                        // poison: once the producer is declared dead and
+                        // repaired, an empty queue stays empty.
+                        if scenario == Scenario::Msg
+                            && prod_declared.load(Ordering::SeqCst)
+                            && rt.msg_available(t).unwrap_or(0) == 0
+                        {
+                            exit = Some(Status::EndpointDead);
+                            break;
+                        }
+                    }
+                    Err(s) => {
+                        exit = Some(s);
+                        break;
+                    }
+                }
+            }
+            *consumer_exit.lock().unwrap() = exit;
+            clean.store(true, Ordering::SeqCst);
+        })
+    };
+
+    // Task 2: watchdog. Never a fault target. Does the whole setup (so a
+    // victim killed at op 0 cannot wedge the rendezvous), then monitors
+    // the victims, declares abnormal deaths to the runtime, and finally
+    // salvages whatever committed data recovery re-exposed.
+    let watchdog = {
+        let (rt, ready, target) = (rt.clone(), ready.clone(), target.clone());
+        let (clean_prod, clean_cons) = (clean_prod.clone(), clean_cons.clone());
+        let (drained, torn, leaked) = (drained.clone(), torn.clone(), leaked.clone());
+        let prod_declared = prod_declared.clone();
+        m.spawn(move || {
+            match scenario {
+                Scenario::Pkt => {
+                    rt.create_endpoint(src, NODE_PROD).unwrap();
+                    rt.create_endpoint(dst, NODE_CONS).unwrap();
+                    let ch = rt.connect(src, dst, ChannelKind::Packet).unwrap();
+                    rt.open_send(ch).unwrap();
+                    rt.open_recv(ch).unwrap();
+                    target.store(ch, Ordering::SeqCst);
+                }
+                Scenario::Msg => {
+                    let ep = rt.create_endpoint(dst, NODE_CONS).unwrap();
+                    target.store(ep, Ordering::SeqCst);
+                }
+            }
+            ready.store(true, Ordering::SeqCst);
+            let mut declared = [false; 2];
+            loop {
+                let d0 = SimWorld::task_done(TASK_PROD);
+                let d1 = SimWorld::task_done(TASK_CONS);
+                if d0 && !declared[0] && !clean_prod.load(Ordering::SeqCst) {
+                    rt.declare_node_dead(NODE_PROD);
+                    declared[0] = true;
+                    prod_declared.store(true, Ordering::SeqCst);
+                }
+                if d1 && !declared[1] && !clean_cons.load(Ordering::SeqCst) {
+                    rt.declare_node_dead(NODE_CONS);
+                    declared[1] = true;
+                }
+                if d0 && d1 {
+                    break;
+                }
+                SimWorld::yield_now();
+            }
+            // Salvage: recovery rolled any torn counter back, so every
+            // committed frame is now readable exactly once.
+            let t = target.load(Ordering::SeqCst);
+            let mut buf = [0u8; 64];
+            loop {
+                let r = match scenario {
+                    Scenario::Pkt => rt.pkt_recv(t, &mut buf),
+                    Scenario::Msg => rt.msg_recv(t, &mut buf),
+                };
+                match r {
+                    Ok(n) => match parse_frame(&buf[..n]) {
+                        Some(seq) => drained.lock().unwrap().push(seq),
+                        None => {
+                            torn.fetch_add(1, Ordering::SeqCst);
+                        }
+                    },
+                    Err(_) => break, // empty (or empty + poison)
+                }
+            }
+            // Lease audit: after reclamation + salvage the pool is whole.
+            let free = rt.buffers_available() as u64;
+            leaked.store((rt.cfg().pool_buffers as u64).saturating_sub(free), Ordering::SeqCst);
+        })
+    };
+
+    m.set_faults(plan);
+    let stats = m.run(vec![producer, consumer, watchdog]);
+
+    let (ring_committed, ring_settled) = match scenario {
+        Scenario::Pkt => match rt.chan_counters(target.load(Ordering::SeqCst)) {
+            Some((u, a)) => (Some(u / 2), u % 2 == 0 && a % 2 == 0 && u == a),
+            None => (None, false),
+        },
+        Scenario::Msg => (None, true),
+    };
+    let (w0, w1) = *windows.lock().unwrap();
+    Outcome {
+        delivered: delivered.lock().unwrap().clone(),
+        drained: drained.lock().unwrap().clone(),
+        torn: torn.load(Ordering::SeqCst),
+        producer_clean: clean_prod.load(Ordering::SeqCst),
+        consumer_clean: clean_cons.load(Ordering::SeqCst),
+        consumer_exit: *consumer_exit.lock().unwrap(),
+        ring_committed,
+        ring_settled,
+        leaked: leaked.load(Ordering::SeqCst),
+        reclaimed: rt.leases_reclaimed(),
+        poisons: rt.poisons_observed(),
+        timeouts: rt.timeouts_observed(),
+        vtime_ns: stats.virtual_ns,
+        prod_window: w0,
+        cons_window: w1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Invariant judging.
+// ---------------------------------------------------------------------------
+
+/// Check the recovery invariants; returns `(committed, gap, failures)`.
+fn judge(out: &Outcome) -> (u64, u64, Vec<String>) {
+    let mut fails = Vec::new();
+    if out.torn != 0 {
+        fails.push(format!("{} torn frames", out.torn));
+    }
+    if !out.ring_settled {
+        fails.push("ring counters not settled after salvage".into());
+    }
+    let combined: Vec<u64> =
+        out.delivered.iter().chain(out.drained.iter()).copied().collect();
+    // Ground truth for Pkt comes from the ring's monotonic counters; the
+    // connectionless queue has none, so the committed prefix is inferred
+    // from the highest sequence observed (FIFO commits are a prefix).
+    let committed = match out.ring_committed {
+        Some(c) => c,
+        None => combined.iter().max().map_or(0, |m| m + 1),
+    };
+    if combined.iter().any(|&s| s >= committed) {
+        fails.push("sequence beyond the committed prefix".into());
+    }
+    let gap = committed.saturating_sub(combined.len() as u64);
+    match gap {
+        0 => {
+            let expected: Vec<u64> = (0..committed).collect();
+            if combined != expected {
+                fails.push("delivered+drained != committed prefix (loss/dup/reorder)".into());
+            }
+        }
+        1 => {
+            // Only admissible hole: the consumer died between
+            // acknowledging a message and reporting it to the caller.
+            if out.consumer_clean {
+                fails.push("one committed message missing without a consumer kill".into());
+            }
+            let hole = out.delivered.len() as u64;
+            let expected: Vec<u64> = (0..committed).filter(|&s| s != hole).collect();
+            if combined != expected {
+                fails.push(format!(
+                    "missing message is not the ack-boundary hole (expected seq {hole})"
+                ));
+            }
+        }
+        n => fails.push(format!("{n} committed messages missing")),
+    }
+    if out.leaked != 0 {
+        fails.push(format!("{} pool leases leaked", out.leaked));
+    }
+    // A live consumer must have exited for a reason the API defines.
+    if out.consumer_clean {
+        match out.consumer_exit {
+            None | Some(Status::EndpointDead) => {}
+            Some(s) => fails.push(format!("consumer exited with unexpected {s:?}")),
+        }
+    }
+    (committed, gap, fails)
+}
+
+fn fmt_event((t, k, a): (usize, u64, FaultAction)) -> String {
+    match a {
+        FaultAction::Kill => format!("kill(t{t}@{k})"),
+        FaultAction::Stall(ns) => format!("stall(t{t}@{k},{ns}ns)"),
+        FaultAction::Delay(ns) => format!("delay(t{t}@{k},{ns}ns)"),
+    }
+}
+
+fn fmt_line(prefix: &str, out: &Outcome, committed: u64, gap: u64, fails: &[String]) -> String {
+    let verdict = if fails.is_empty() {
+        "PASS".to_string()
+    } else {
+        format!("FAIL[{}]", fails.join("; "))
+    };
+    format!(
+        "{prefix} committed={committed} delivered={} drained={} gap={gap} torn={} \
+         leaked={} reclaimed={} poisons={} timeouts={} prod_clean={} cons_clean={} \
+         vtime_ns={} verdict={verdict}",
+        out.delivered.len(),
+        out.drained.len(),
+        out.torn,
+        out.leaked,
+        out.reclaimed,
+        out.poisons,
+        out.timeouts,
+        out.producer_clean,
+        out.consumer_clean,
+        out.vtime_ns,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Drivers.
+// ---------------------------------------------------------------------------
+
+/// Run one seeded chaos scenario: derive a 1–3 event fault plan from the
+/// seed, run the workload, judge the invariants. Deterministic: the same
+/// opts produce the same report byte-for-byte.
+pub fn run_seeded(opts: &ChaosOpts) -> ChaosReport {
+    let plan = FaultPlan::from_seed(opts.seed, 2, 400);
+    let events: Vec<String> = plan.events().map(fmt_event).collect();
+    let out = run_scenario(opts.scenario, plan, opts.messages, opts.recv_timeout_ns);
+    let (committed, gap, fails) = judge(&out);
+    let prefix = format!(
+        "chaos seed={} scenario={} msgs={} events=[{}]",
+        opts.seed,
+        opts.scenario.label(),
+        opts.messages,
+        events.join(",")
+    );
+    ChaosReport { text: fmt_line(&prefix, &out, committed, gap, &fails), pass: fails.is_empty() }
+}
+
+/// Kill-point sweep: measure the victim's priced-op window around one
+/// mid-stream send (producer) or receive (consumer) on a fault-free
+/// probe run, then kill the victim at every op index inside the window,
+/// one fresh machine per point. Every point must uphold every recovery
+/// invariant.
+pub fn run_kill_sweep(scenario: Scenario, victim: Victim, messages: u64) -> ChaosReport {
+    let opts = ChaosOpts { scenario, messages, ..Default::default() };
+    let probe = run_scenario(scenario, FaultPlan::new(), messages, opts.recv_timeout_ns);
+    let (_, _, probe_fails) = judge(&probe);
+    let window = match victim {
+        Victim::Producer => probe.prod_window,
+        Victim::Consumer => probe.cons_window,
+    };
+    let Some(window) = window else {
+        return ChaosReport {
+            text: format!(
+                "sweep scenario={} victim={} verdict=FAIL[probe run never reached the \
+                 bracketed operation]",
+                scenario.label(),
+                victim.label()
+            ),
+            pass: false,
+        };
+    };
+    let mut pass = probe_fails.is_empty();
+    let mut lines = vec![format!(
+        "sweep scenario={} victim={} window={}..{} points={} probe={}",
+        scenario.label(),
+        victim.label(),
+        window.start,
+        window.end,
+        window.len(),
+        if pass { "PASS" } else { "FAIL" }
+    )];
+    for (k, plan) in sweep_kill_points(window) {
+        let out = run_scenario(scenario, plan, messages, opts.recv_timeout_ns);
+        let (committed, gap, fails) = judge(&out);
+        pass &= fails.is_empty();
+        lines.push(fmt_line(&format!("  kill@{k}"), &out, committed, gap, &fails));
+    }
+    lines.push(format!("sweep verdict={}", if pass { "PASS" } else { "FAIL" }));
+    ChaosReport { text: lines.join("\n"), pass }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_free_run_delivers_everything() {
+        for scenario in [Scenario::Pkt, Scenario::Msg] {
+            let out = run_scenario(scenario, FaultPlan::new(), 12, 2_000_000);
+            let (committed, gap, fails) = judge(&out);
+            assert!(fails.is_empty(), "{scenario:?}: {fails:?}");
+            assert_eq!(committed, 12);
+            assert_eq!(gap, 0);
+            assert_eq!(out.delivered.len(), 12);
+            assert!(out.producer_clean && out.consumer_clean);
+            assert!(out.prod_window.is_some() && out.cons_window.is_some());
+        }
+    }
+
+    #[test]
+    fn seeded_runs_pass_and_reproduce_byte_for_byte() {
+        for scenario in [Scenario::Pkt, Scenario::Msg] {
+            for seed in 1..=4u64 {
+                let opts = ChaosOpts { scenario, seed, messages: 12, ..Default::default() };
+                let a = run_seeded(&opts);
+                assert!(a.pass, "seed {seed} {scenario:?}: {}", a.text);
+                let b = run_seeded(&opts);
+                assert_eq!(a.text, b.text, "seed {seed} report must reproduce exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn frame_checksum_catches_corruption() {
+        let f = frame(7);
+        assert_eq!(parse_frame(&f), Some(7));
+        let mut bad = f;
+        bad[3] ^= 0x40;
+        assert_eq!(parse_frame(&bad), None);
+        assert_eq!(parse_frame(&f[..12]), None);
+    }
+}

@@ -26,6 +26,12 @@ pub struct StressReport {
     pub yields: u64,
     /// Sequence violations (must be 0 — checked by tests).
     pub order_violations: u64,
+    /// Waits that expired with `Status::Timeout` (robustness counter).
+    pub timeouts: u64,
+    /// Operations that surfaced `Status::EndpointDead` (robustness counter).
+    pub poisons: u64,
+    /// Pool leases reclaimed from dead nodes (robustness counter).
+    pub leases_reclaimed: u64,
     /// Simulator statistics when run on the sim plane.
     pub sim: Option<crate::sim::MachineStats>,
 }
@@ -55,13 +61,16 @@ impl std::fmt::Debug for StressReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "StressReport {{ delivered: {}, elapsed: {} ns, X: {:.1} kmsg/s, lat mean: {:.0} ns, p99: {} ns, yields: {} }}",
+            "StressReport {{ delivered: {}, elapsed: {} ns, X: {:.1} kmsg/s, lat mean: {:.0} ns, p99: {} ns, yields: {}, timeouts: {}, poisons: {}, reclaimed: {} }}",
             self.delivered,
             self.elapsed_ns,
             self.kmsgs_per_s(),
             self.latency_mean_ns(),
             self.latency.p99(),
-            self.yields
+            self.yields,
+            self.timeouts,
+            self.poisons,
+            self.leases_reclaimed
         )
     }
 }
@@ -80,6 +89,9 @@ mod tests {
             latency,
             yields: 3,
             order_violations: 0,
+            timeouts: 0,
+            poisons: 0,
+            leases_reclaimed: 0,
             sim: None,
         };
         assert!((r.throughput() - 1_000.0).abs() < 1e-9);
@@ -94,6 +106,9 @@ mod tests {
             latency: Histogram::new(),
             yields: 0,
             order_violations: 0,
+            timeouts: 0,
+            poisons: 0,
+            leases_reclaimed: 0,
             sim: None,
         };
         assert_eq!(r.throughput(), 0.0);

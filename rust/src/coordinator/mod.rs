@@ -13,12 +13,17 @@
 //! * [`experiment`] — the Section 6 test matrix (OS profile × cores ×
 //!   message type × backend × affinity) and the Table 2 / Figure 7 /
 //!   Figure 8 report generators.
+//! * [`chaos`] — fault-injection harness: stress workloads under
+//!   deterministic kills/stalls with recovery-invariant checking and
+//!   reproducible per-seed reports (seeded mode + kill-point sweeps).
 
+pub mod chaos;
 pub mod experiment;
 pub mod metrics;
 pub mod runner;
 pub mod topology;
 
+pub use chaos::{run_kill_sweep, run_seeded, ChaosOpts, ChaosReport, Scenario, Victim};
 pub use experiment::{Cell, CellResult, Matrix};
 pub use metrics::StressReport;
 pub use runner::{run_pingpong_real, run_pingpong_sim, run_stress_real, run_stress_sim, StressOpts};

@@ -423,7 +423,26 @@ fn aggregate(outcomes: Vec<NodeOutcome>, elapsed_ns: u64, sim: Option<crate::sim
             latency.merge(&c.latency);
         }
     }
-    StressReport { delivered, elapsed_ns, latency, yields, order_violations, sim }
+    StressReport {
+        delivered,
+        elapsed_ns,
+        latency,
+        yields,
+        order_violations,
+        // Robustness counters are runtime-wide; the run_stress_* drivers
+        // fill them from the runtime after aggregation.
+        timeouts: 0,
+        poisons: 0,
+        leases_reclaimed: 0,
+        sim,
+    }
+}
+
+/// Copy the runtime-wide robustness counters into a report.
+fn fill_robustness<W: World>(report: &mut StressReport, rt: &McapiRuntime<W>) {
+    report.timeouts = rt.timeouts_observed();
+    report.poisons = rt.poisons_observed();
+    report.leases_reclaimed = rt.leases_reclaimed();
 }
 
 /// Run a topology on the real host with OS threads.
@@ -450,7 +469,9 @@ pub fn run_stress_real(cfg: RuntimeCfg, topo: &Topology, opts: StressOpts) -> St
     }
     let elapsed_ns = start.elapsed().as_nanos() as u64;
     let outcomes = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
-    aggregate(outcomes, elapsed_ns, None)
+    let mut report = aggregate(outcomes, elapsed_ns, None);
+    fill_robustness(&mut report, &rt);
+    report
 }
 
 /// Run a topology on the deterministic SMP simulator.
@@ -473,7 +494,9 @@ pub fn run_stress_sim(machine: &Machine, cfg: RuntimeCfg, topo: &Topology, opts:
         .collect();
     let stats = machine.run(handles);
     let outcomes = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
-    aggregate(outcomes, stats.virtual_ns, Some(stats))
+    let mut report = aggregate(outcomes, stats.virtual_ns, Some(stats));
+    fill_robustness(&mut report, &rt);
+    report
 }
 
 // ---------------------------------------------------------------------------

@@ -91,4 +91,132 @@ mod tests {
         let mut b = Backoff::<RealWorld>::with_limit(0);
         assert!(!b.immediate());
     }
+
+    #[test]
+    fn prop_immediate_budget_is_exact_and_escalation_sticky() {
+        use crate::util::prop::check_res;
+        check_res(
+            "backoff_immediate_budget",
+            64,
+            |r| r.below(64) as u32,
+            |&limit| {
+                let mut b = Backoff::<RealWorld>::with_limit(limit);
+                let mut spins = 0;
+                while b.immediate() {
+                    spins += 1;
+                    if spins > limit {
+                        return Err(format!("spun {spins} times on a budget of {limit}"));
+                    }
+                }
+                if spins != limit {
+                    return Err(format!("budget {limit} allowed only {spins} spins"));
+                }
+                // Exhaustion is sticky until a yield...
+                if b.immediate() {
+                    return Err("immediate() true after exhaustion".into());
+                }
+                // ...and a yield restores the full default budget.
+                b.yield_now();
+                for _ in 0..DEFAULT_IMMEDIATE_RETRIES {
+                    if !b.immediate() {
+                        return Err("yield did not reset the immediate budget".into());
+                    }
+                }
+                if b.immediate() {
+                    return Err("reset budget exceeded the default bound".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_retry_sequence_terminates_under_peer_stall() {
+        use crate::util::prop::check_res;
+        // Model of a Table 1 `*_BUT_*` retry sequence against a peer
+        // stalled mid-operation for `stall` scheduler grants: immediate
+        // spins never advance the stalled peer, yields do (the peer gets
+        // the processor). The sequence must terminate in bounded steps
+        // with exactly one yield per grant.
+        check_res(
+            "backoff_terminates_under_stall",
+            128,
+            |r| (r.range(1, 200), r.below(16) as u32),
+            |&(stall, limit)| {
+                let mut b = Backoff::<RealWorld>::with_limit(limit);
+                let mut remaining = stall;
+                let mut steps = 0u64;
+                let bound = u64::from(limit) + stall * u64::from(DEFAULT_IMMEDIATE_RETRIES + 1);
+                while remaining > 0 {
+                    steps += 1;
+                    if steps > bound {
+                        return Err(format!("no progress after {steps} steps (bound {bound})"));
+                    }
+                    if b.immediate() {
+                        continue; // spin burns budget only
+                    }
+                    b.yield_now();
+                    remaining -= 1;
+                }
+                if u64::from(b.yields()) != stall {
+                    return Err(format!("{} yields for {stall} grants", b.yields()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn stalled_peer_escalates_immediate_to_yield_in_sim() {
+        use crate::lockfree::ring::{ChannelRing, RecvError};
+        use crate::os::{AffinityMode, OsProfile};
+        use crate::sim::{faults::FaultPlan, Machine, MachineCfg, SimWorld};
+        use std::sync::{Arc, Mutex};
+        // Stall the producer at every point inside its send window; the
+        // consumer retries per Table 1 — spin while the peer is observed
+        // mid-insert, yield otherwise — and must always terminate with
+        // the payload intact and with spinning bounded by the budget.
+        let mut escalated = false;
+        for stall_at in 0..12u64 {
+            let m = Machine::new(MachineCfg::new(
+                2,
+                OsProfile::linux_rt(),
+                AffinityMode::PinnedSpread,
+            ));
+            let r = Arc::new(ChannelRing::<SimWorld>::new(8, 32));
+            let r1 = r.clone();
+            let producer = m.spawn(move || {
+                r1.send(b"payload").unwrap();
+            });
+            let out = Arc::new(Mutex::new((0u32, 0u32, false)));
+            let (r2, out2) = (r.clone(), out.clone());
+            let consumer = m.spawn(move || {
+                let mut bo = Backoff::<SimWorld>::new();
+                let mut peer_active = 0u32;
+                let mut buf = [0u8; 32];
+                let n = loop {
+                    match r2.recv(&mut buf) {
+                        Ok(n) => break n,
+                        Err(RecvError::EmptyButProducerInserting) => {
+                            peer_active += 1;
+                            if !bo.immediate() {
+                                bo.yield_now();
+                            }
+                        }
+                        Err(RecvError::Empty) => bo.yield_now(),
+                    }
+                };
+                *out2.lock().unwrap() = (bo.yields(), peer_active, &buf[..n] == b"payload");
+            });
+            m.set_faults(FaultPlan::new().stall(0, stall_at, 200_000));
+            m.run(vec![producer, consumer]);
+            let (yields, peer_active, got) = *out.lock().unwrap();
+            assert!(got, "stall@{stall_at}: payload must arrive intact");
+            if peer_active > DEFAULT_IMMEDIATE_RETRIES {
+                assert!(yields > 0, "stall@{stall_at}: spinning past the budget must yield");
+            }
+            escalated |= yields > 0;
+        }
+        assert!(escalated, "no stall point forced an immediate->yield escalation");
+    }
 }

@@ -137,8 +137,31 @@ pub trait World: Sized + Send + Sync + 'static {
     /// Monotonic nanoseconds (virtual in the sim world) for latency stamps.
     fn now_ns() -> u64;
     /// Allocate a synthetic address region for a payload buffer, used with
-    /// [`World::touch`]. Real world: 0 (unused).
+    /// [`World::touch`] and as a parking token for [`World::futex_wait`].
     fn alloc_region(bytes: usize) -> u64;
+
+    /// Park the calling thread on token `addr` while `still` holds, until
+    /// a [`World::futex_wake`] on the same token or the optional absolute
+    /// `deadline_ns` (in [`World::now_ns`] time) passes. May wake
+    /// spuriously — callers loop, re-checking their condition and the
+    /// clock (standard futex contract).
+    ///
+    /// `still` is evaluated race-free with respect to wakers. In
+    /// simulated worlds it runs *inside* the machine monitor: it must not
+    /// call any priced operation (use [`Atom32::peek`] / raw host
+    /// atomics), or the monitor self-deadlocks.
+    ///
+    /// The default is a degenerate poll (one yield) for worlds without a
+    /// parker — correct, just not idle-friendly.
+    fn futex_wait(_addr: u64, _deadline_ns: Option<u64>, still: impl FnOnce() -> bool) {
+        if still() {
+            Self::yield_now();
+        }
+    }
+
+    /// Wake up to `n` threads parked on token `addr`. Default: no-op
+    /// (pairs with the polling default of [`World::futex_wait`]).
+    fn futex_wake(_addr: u64, _n: usize) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -265,6 +288,28 @@ impl KernelLock for RealKernelLock {
     }
 }
 
+/// Process-global parking table for [`RealWorld::futex_wait`]: one
+/// `Mutex` + `Condvar` cell per token. The cell mutex is held across the
+/// `still` check and the (atomic) condvar release, so a waker that
+/// publishes its condition *before* calling `futex_wake` can never slip
+/// between the check and the park — the standard futex no-lost-wakeup
+/// argument.
+struct ParkCell {
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+fn park_cell(addr: u64) -> std::sync::Arc<ParkCell> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, OnceLock};
+    static TABLE: OnceLock<Mutex<HashMap<u64, Arc<ParkCell>>>> = OnceLock::new();
+    let table = TABLE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = table.lock().unwrap_or_else(|e| e.into_inner());
+    map.entry(addr)
+        .or_insert_with(|| Arc::new(ParkCell { m: Mutex::new(()), cv: Condvar::new() }))
+        .clone()
+}
+
 impl World for RealWorld {
     type U32 = RealAtom32;
     type U64 = RealAtom64;
@@ -286,9 +331,40 @@ impl World for RealWorld {
     fn now_ns() -> u64 {
         crate::os::monotonic_ns()
     }
-    #[inline]
-    fn alloc_region(_bytes: usize) -> u64 {
-        0
+    fn alloc_region(bytes: usize) -> u64 {
+        // Unique token space (cache-line granular like the sim) so
+        // distinct primitives never share a parking cell.
+        static NEXT: AtomicU64 = AtomicU64::new(0x1000);
+        let lines = ((bytes + 63) / 64).max(1) as u64;
+        NEXT.fetch_add(lines * 64, Ordering::Relaxed)
+    }
+
+    fn futex_wait(addr: u64, deadline_ns: Option<u64>, still: impl FnOnce() -> bool) {
+        use std::time::Duration;
+        let cell = park_cell(addr);
+        let guard = cell.m.lock().unwrap_or_else(|e| e.into_inner());
+        if !still() {
+            return;
+        }
+        // Bound every park (1 ms when no deadline): callers loop anyway,
+        // and a capped sleep turns any lost-wake bug into latency rather
+        // than a hang.
+        let now = Self::now_ns();
+        let ns = deadline_ns.map_or(1_000_000, |d| d.saturating_sub(now).min(1_000_000));
+        if ns == 0 {
+            return;
+        }
+        let _ = cell.cv.wait_timeout(guard, Duration::from_nanos(ns));
+    }
+
+    fn futex_wake(addr: u64, n: usize) {
+        let cell = park_cell(addr);
+        let _g = cell.m.lock().unwrap_or_else(|e| e.into_inner());
+        if n >= 2 {
+            cell.cv.notify_all();
+        } else if n == 1 {
+            cell.cv.notify_one();
+        }
     }
 }
 
@@ -378,5 +454,42 @@ mod tests {
     #[should_panic(expected = "unheld")]
     fn kernel_lock_release_unheld_panics() {
         RealKernelLock::new().release();
+    }
+
+    #[test]
+    fn real_futex_park_wake_roundtrip() {
+        let addr = RealWorld::alloc_region(64);
+        let flag = Arc::new(AtomicU32::new(0));
+        let f2 = flag.clone();
+        let waiter = std::thread::spawn(move || {
+            let deadline = RealWorld::now_ns() + 2_000_000_000;
+            while f2.load(Ordering::Acquire) == 0 {
+                assert!(RealWorld::now_ns() < deadline, "wake never arrived");
+                let f3 = f2.clone();
+                RealWorld::futex_wait(addr, Some(deadline), move || {
+                    f3.load(Ordering::Acquire) == 0
+                });
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        flag.store(1, Ordering::Release);
+        RealWorld::futex_wake(addr, usize::MAX);
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn real_futex_wait_respects_deadline() {
+        let addr = RealWorld::alloc_region(64);
+        let t0 = RealWorld::now_ns();
+        // Nobody wakes this token; the capped timed wait must return.
+        RealWorld::futex_wait(addr, Some(t0 + 2_000_000), || true);
+        assert!(RealWorld::now_ns() >= t0);
+    }
+
+    #[test]
+    fn real_alloc_region_is_unique() {
+        let a = RealWorld::alloc_region(1);
+        let b = RealWorld::alloc_region(1);
+        assert_ne!(a, b, "parking tokens must not collide");
     }
 }

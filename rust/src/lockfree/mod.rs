@@ -56,6 +56,32 @@
 //! `benches/micro_lockfree` measures each mechanism against an
 //! unpadded/uncached baseline and feeds `scripts/bench_snapshot.sh`
 //! (`BENCH_micro.json`) so regressions are visible per-PR.
+//!
+//! # Failure modes and recovery
+//!
+//! Lock-free reads/writes never block, but a task that **dies
+//! mid-operation** can leave a structure in a transient state (an odd
+//! NBB counter, a leased-but-unqueued pool buffer). The runtime detects
+//! the death (liveness epoch goes odd via
+//! `McapiRuntime::declare_node_dead`), repairs the structure, and
+//! surfaces the condition to blocked peers. The chaos harness
+//! (`coordinator::chaos`) kills tasks at every priced-op index inside
+//! these windows and asserts the recovery below:
+//!
+//! | fault point | transient state | detection | recovery | peer sees |
+//! |---|---|---|---|---|
+//! | producer dies inside [`ring`]/[`nbb`] insert (`update` odd) | torn slot, never committed | watchdog + liveness epoch | `repair_dead_producer`: roll `update` back to even — the torn insert is discarded; occupancy (floor `update/2 − ack/2`) never counted it | committed messages drain, then `EndpointDead` |
+//! | consumer dies inside read (`ack` odd) | committed message half-consumed | same | `repair_dead_consumer`: roll `ack` back — the message is re-exposed and salvageable | sender unblocks (ring slot freed) or `EndpointDead` |
+//! | consumer dies **after** ack, before returning payload to caller | message consumed by a corpse | sequence audit | none possible below the API: at most **one** message per kill is "delivered to the dead"; chaos asserts the gap is exactly that boundary case | ≤ 1 gap, only on consumer kill |
+//! | task dies holding a [`freelist`] lease (buffer not yet queued / not yet released) | pool buffer leaked | custody shadow (`buffer_holder`) | dead holder's leases force-released back to the `FreeList`; `leases_reclaimed` counter | `buffers_available()` returns to pool size |
+//! | task dies between retry attempts ([`backoff`]) | none — no shared state mid-flight | — | nothing to repair; peers' `*_BUT_*` statuses decay to plain would-block | spin → yield → park, woken by poison |
+//! | peer stalls (alive but descheduled) | `*PeerActive` status persists | bounded immediate retries ([`Backoff`]) | escalate spin → `yield_now` → futex park with deadline | `Timeout` after its deadline, never a hang |
+//!
+//! The repairs are sound because each NBB/ring counter has a **single
+//! owner** (SPSC lanes) and occupancy uses floor division: an odd
+//! counter computes the same occupancy as the even value it is rolled
+//! back to, so concurrent peers never observed the transient state as
+//! committed.
 
 pub mod backoff;
 pub mod bitset;

@@ -8,8 +8,12 @@
 //!   `table2`, `fig7`, `fig8`.
 //! * `model`       — run the Section 5 performance model: `fig6`
 //!   (artifact sweep + analytic cross-check), `stopcrit`.
+//! * `chaos`       — fault-injection gate: seeded kill/stall plans or a
+//!   full kill-point sweep, with recovery-invariant checking and a
+//!   reproducible per-seed report. Exits non-zero on invariant failure.
 //! * `info`        — platform/runtime information.
 
+use mcapi::coordinator::chaos::{run_kill_sweep, run_seeded, ChaosOpts, Scenario, Victim};
 use mcapi::coordinator::experiment::{print_fig7, print_fig8, print_table2, Matrix};
 use mcapi::coordinator::{run_stress_real, run_stress_sim, MsgKind, StressOpts, Topology};
 use mcapi::mcapi::types::{BackendKind, RuntimeCfg};
@@ -42,6 +46,7 @@ fn run(args: &Args) -> mcapi::Result<()> {
         Some("stress") => cmd_stress(args),
         Some("experiment") => cmd_experiment(args),
         Some("model") => cmd_model(args),
+        Some("chaos") => cmd_chaos(args),
         Some("info") => cmd_info(args),
         Some(other) => {
             eprintln!("unknown command `{other}`");
@@ -66,6 +71,8 @@ fn usage() {
          \x20             --cores N --os linux|windows --affinity single|task|affinity\n\
          \x20 experiment  table2|fig7|fig8 [--tx N]\n\
          \x20 model       fig6 [--kind K] [--solver artifact|native|sweep] | stopcrit [--measured-ns X]\n\
+         \x20 chaos       --faults seed=N | --seed N [--scenario pkt|msg] [--msgs N]\n\
+         \x20             --sweep [--victim prod|cons] (kill at every priced op in the window)\n\
          \x20 info"
     );
 }
@@ -221,6 +228,35 @@ fn cmd_model(args: &Args) -> mcapi::Result<()> {
                 "model needs fig6|stopcrit, got {other:?}"
             )))
         }
+    }
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> mcapi::Result<()> {
+    let scenario = Scenario::parse(&args.get_or("scenario", "pkt"))
+        .ok_or_else(|| mcapi::Error::Config("bad --scenario (pkt|msg)".into()))?;
+    let messages = args.get_u64_or("msgs", 24)?;
+    // `--faults seed=N` (the issue's spelling) and `--seed N` are synonyms.
+    let seed = match args.get("faults") {
+        Some(spec) => spec
+            .strip_prefix("seed=")
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| mcapi::Error::Config("bad --faults (expected seed=N)".into()))?,
+        None => args.get_u64_or("seed", 1)?,
+    };
+    let sweep = args.flag("sweep");
+    let victim = Victim::parse(&args.get_or("victim", "prod"))
+        .ok_or_else(|| mcapi::Error::Config("bad --victim (prod|cons)".into()))?;
+    args.finish()?;
+
+    let report = if sweep {
+        run_kill_sweep(scenario, victim, messages)
+    } else {
+        run_seeded(&ChaosOpts { scenario, seed, messages, ..ChaosOpts::default() })
+    };
+    println!("{}", report.text);
+    if !report.pass {
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -32,6 +32,8 @@
 //! and connection-less messages keep the generic queue — the paper's
 //! lock-based/lock-free comparison is unchanged.
 
+use std::sync::atomic::Ordering;
+
 use crate::lockfree::bitset::BitSet;
 use crate::lockfree::mem::{Atom32, World};
 use crate::lockfree::nbb::{BatchStatus, InsertStatus};
@@ -40,7 +42,7 @@ use crate::lockfree::ring::{ChannelRing, RecvError, ScalarBatchError};
 use super::queue::Entry;
 use super::request::{PendingOp, RequestHandle};
 use super::types::{BackendKind, ChannelKind, Status};
-use super::{McapiRuntime, QueueImpl};
+use super::{McapiRuntime, QueueImpl, POISON_RX_DEAD, POISON_TX_DEAD};
 
 /// One doorbell bit per channel slot (flag-board mode of [`BitSet`]).
 ///
@@ -144,10 +146,12 @@ impl<W: World> McapiRuntime<W> {
         if data.len() > self.cfg.buf_len {
             return Err(Status::MessageLimit);
         }
+        self.check_peer_alive_tx(ch)?;
         match self.ring(ch).send(data) {
             Ok(()) => {
                 // Flag AFTER the ring's publishing store (Doorbell docs).
                 self.doorbell.set(ch);
+                self.chan_waits[ch].wake_all::<W>();
                 Ok(())
             }
             Err(InsertStatus::Full) => Err(Status::WouldBlock),
@@ -157,18 +161,25 @@ impl<W: World> McapiRuntime<W> {
 
     /// Lock-free packet receive: copy the next slot's bytes into `out`.
     pub(super) fn ring_pkt_recv(&self, ch: usize, out: &mut [u8]) -> Result<usize, Status> {
-        self.with_doorbell_recheck(ch, |ring| match ring.recv(out) {
+        let r = self.with_doorbell_recheck(ch, |ring| match ring.recv(out) {
             Ok(n) => Ok(n),
             Err(RecvError::Empty) => Err(Status::WouldBlock),
             Err(RecvError::EmptyButProducerInserting) => Err(Status::WouldBlockPeerActive),
-        })
+        });
+        self.poison_on_drained(ch, r.map(|n| {
+            // Space freed: wake senders parked on a full ring.
+            self.chan_waits[ch].wake_all::<W>();
+            n
+        }))
     }
 
     /// Lock-free scalar send (`width` bytes: 1/2/4/8).
     pub(super) fn ring_sclr_send(&self, ch: usize, value: u64, width: u32) -> Result<(), Status> {
+        self.check_peer_alive_tx(ch)?;
         match self.ring(ch).send_scalar(value, width) {
             Ok(()) => {
                 self.doorbell.set(ch);
+                self.chan_waits[ch].wake_all::<W>();
                 Ok(())
             }
             Err(InsertStatus::Full) => Err(Status::WouldBlock),
@@ -179,15 +190,45 @@ impl<W: World> McapiRuntime<W> {
     /// Lock-free scalar receive expecting `width` bytes; a mismatched
     /// width consumes the scalar and reports `ScalarSizeMismatch`.
     pub(super) fn ring_sclr_recv(&self, ch: usize, width: u32) -> Result<u64, Status> {
-        let (value, stored) = self.with_doorbell_recheck(ch, |ring| match ring.recv_scalar() {
+        let r = self.with_doorbell_recheck(ch, |ring| match ring.recv_scalar() {
             Ok(vw) => Ok(vw),
             Err(RecvError::Empty) => Err(Status::WouldBlock),
             Err(RecvError::EmptyButProducerInserting) => Err(Status::WouldBlockPeerActive),
-        })?;
+        });
+        let (value, stored) = self.poison_on_drained(ch, r)?;
+        self.chan_waits[ch].wake_all::<W>();
         if stored != width {
             return Err(Status::ScalarSizeMismatch);
         }
         Ok(value)
+    }
+
+    /// `EndpointDead` for senders when the channel's consumer side has
+    /// been poisoned — a payload enqueued now could never be consumed.
+    /// Host-side load only: zero priced-op cost on the fast path.
+    fn check_peer_alive_tx(&self, ch: usize) -> Result<(), Status> {
+        if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_RX_DEAD != 0 {
+            self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+            return Err(Status::EndpointDead);
+        }
+        Ok(())
+    }
+
+    /// Receiver-side poison discipline: an *empty* probe on a channel
+    /// whose producer side is poisoned becomes `EndpointDead` — and only
+    /// an empty probe, so every committed payload drains first (the
+    /// ring's floor-division occupancy already hides the dead peer's
+    /// rolled-back torn insert).
+    fn poison_on_drained<T>(&self, ch: usize, r: Result<T, Status>) -> Result<T, Status> {
+        match r {
+            Err(Status::WouldBlock)
+                if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_TX_DEAD != 0 =>
+            {
+                self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                Err(Status::EndpointDead)
+            }
+            other => other,
+        }
     }
 
     // -- batched submission / completion --------------------------------------
@@ -226,9 +267,11 @@ impl<W: World> McapiRuntime<W> {
                 if valid == 0 {
                     return Err(Status::MessageLimit);
                 }
+                self.check_peer_alive_tx(ch)?;
                 match self.ring(ch).send_batch(&payloads[..valid]) {
                     Ok(n) => {
                         self.doorbell.set(ch);
+                        self.chan_waits[ch].wake_all::<W>();
                         Ok(n)
                     }
                     Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
@@ -269,11 +312,15 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Packet)?;
-                self.with_doorbell_recheck(ch, |ring| match ring.recv_batch(out, max) {
+                let r = self.with_doorbell_recheck(ch, |ring| match ring.recv_batch(out, max) {
                     Ok(n) => Ok(n),
                     Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
                     Err(BatchStatus::PeerActive) => Err(Status::WouldBlockPeerActive),
-                })
+                });
+                self.poison_on_drained(ch, r.map(|n| {
+                    self.chan_waits[ch].wake_all::<W>();
+                    n
+                }))
             }
         }
     }
@@ -300,9 +347,11 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Scalar)?;
+                self.check_peer_alive_tx(ch)?;
                 match self.ring(ch).send_scalars(values, 8) {
                     Ok(n) => {
                         self.doorbell.set(ch);
+                        self.chan_waits[ch].wake_all::<W>();
                         Ok(n)
                     }
                     Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
@@ -344,14 +393,19 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Scalar)?;
-                self.with_doorbell_recheck(ch, |ring| match ring.recv_scalars(out, max, 8) {
+                let r = self.with_doorbell_recheck(ch, |ring| match ring.recv_scalars(out, max, 8)
+                {
                     Ok(n) => Ok(n),
                     Err(ScalarBatchError::Empty) => Err(Status::WouldBlock),
                     Err(ScalarBatchError::EmptyButProducerInserting) => {
                         Err(Status::WouldBlockPeerActive)
                     }
                     Err(ScalarBatchError::SizeMismatch) => Err(Status::ScalarSizeMismatch),
-                })
+                });
+                self.poison_on_drained(ch, r.map(|n| {
+                    self.chan_waits[ch].wake_all::<W>();
+                    n
+                }))
             }
         }
     }
@@ -490,23 +544,22 @@ impl<W: World> McapiRuntime<W> {
         if self.requests.is_complete(h) {
             return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
         }
-        let deadline = W::now_ns().saturating_add(timeout_ns);
-        loop {
-            match self.pkt_send(ch, data) {
-                Ok(()) => {
-                    self.requests.complete(h, Status::Success);
-                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
-                }
-                Err(s) if s.is_would_block() => {
-                    if W::now_ns() >= deadline {
-                        return Status::Timeout;
-                    }
-                    W::yield_now();
-                }
-                Err(s) => {
-                    self.requests.complete(h, s);
-                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
-                }
+        if ch >= self.channels.len() {
+            self.requests.complete(h, Status::InvalidChannel);
+            return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+        }
+        let drive =
+            self.blocking_drive(&self.chan_waits[ch], timeout_ns, || self.pkt_send(ch, data));
+        match drive {
+            Ok(()) => {
+                self.requests.complete(h, Status::Success);
+                self.requests.reap(h).unwrap_or(Status::InvalidRequest)
+            }
+            // Request stays pending across a timeout (re-waitable).
+            Err(Status::Timeout) => Status::Timeout,
+            Err(s) => {
+                self.requests.complete(h, s);
+                self.requests.reap(h).unwrap_or(Status::InvalidRequest)
             }
         }
     }
@@ -522,27 +575,39 @@ impl<W: World> McapiRuntime<W> {
         let PendingOp::PktRecv { ch } = self.requests.slot(h).op() else {
             return Err(Status::InvalidRequest);
         };
-        let deadline = W::now_ns().saturating_add(timeout_ns);
-        loop {
-            match self.pkt_recv(ch, out) {
-                Ok(n) => {
-                    self.requests.complete(h, Status::Success);
-                    let _ = self.requests.reap(h);
-                    return Ok(n);
-                }
-                Err(s) if s.is_would_block() => {
-                    if W::now_ns() >= deadline {
-                        return Err(Status::Timeout);
-                    }
-                    W::yield_now();
-                }
-                Err(s) => {
-                    self.requests.complete(h, s);
-                    let _ = self.requests.reap(h);
-                    return Err(s);
-                }
+        let drive =
+            self.blocking_drive(&self.chan_waits[ch], timeout_ns, || self.pkt_recv(ch, out));
+        match drive {
+            Ok(n) => {
+                self.requests.complete(h, Status::Success);
+                let _ = self.requests.reap(h);
+                Ok(n)
+            }
+            // Request stays pending across a timeout (cancellable).
+            Err(Status::Timeout) => Err(Status::Timeout),
+            Err(s) => {
+                self.requests.complete(h, s);
+                let _ = self.requests.reap(h);
+                Err(s)
             }
         }
+    }
+
+    /// Blocking packet receive on an open channel: spin briefly, yield,
+    /// then park on the channel's wait cell (doorbell-driven futex)
+    /// until a packet arrives, the producing peer is declared dead
+    /// (`EndpointDead`, after every committed packet drained), the
+    /// channel is torn down (`InvalidChannel`), or `timeout_ns` elapses
+    /// (`Timeout`). The parked receiver costs nothing to senders until
+    /// it registers; the sender-side wake is one host-atomic load.
+    pub fn chan_recv_wait(
+        &self,
+        ch: usize,
+        out: &mut [u8],
+        timeout_ns: u64,
+    ) -> Result<usize, Status> {
+        self.connected_ch(ch)?;
+        self.blocking_drive(&self.chan_waits[ch], timeout_ns, || self.pkt_recv(ch, out))
     }
 
     // -- doorbell polling ------------------------------------------------------
@@ -561,6 +626,15 @@ impl<W: World> McapiRuntime<W> {
 
     /// Payloads currently buffered on a connected channel (approximate
     /// under concurrency; monitoring only).
+    /// Host-side peek of a connected channel ring's monotonic
+    /// `(update, ack)` counters. Chaos invariant checks derive the total
+    /// committed-insert count (`update / 2`) and full-drain condition
+    /// (`update == ack`, both even) from it. `None` when the channel has
+    /// no mounted ring (Locked backend, or not connected).
+    pub fn chan_counters(&self, ch: usize) -> Option<(u64, u64)> {
+        self.channels.get(ch)?.ring.as_ref().map(|r| r.counters_peek())
+    }
+
     pub fn chan_available(&self, ch: usize) -> Result<usize, Status> {
         let slot = self.connected_ch(ch)?;
         Ok(match &slot.ring {

@@ -28,8 +28,10 @@ pub mod queue;
 pub mod request;
 pub mod types;
 
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::lockfree::backoff::Backoff;
 use crate::lockfree::fsm::AtomicFsm;
 use crate::lockfree::mem::{Atom32, Atom64, World};
 use crate::lockfree::nbw::Nbw;
@@ -53,6 +55,75 @@ mod ch_state {
     pub const FREE: u32 = 0;
     pub const CONNECTING: u32 = 1;
     pub const CONNECTED: u32 = 2;
+}
+
+/// Channel poison bits (host-side flags set by
+/// [`McapiRuntime::declare_node_dead`]): which side of a connected
+/// channel belongs to a dead node. Senders surface `EndpointDead` at
+/// once when the consumer side is dead; receivers surface it only after
+/// every committed payload has drained (the ring's floor-division
+/// occupancy makes the drain-first order automatic).
+pub(crate) const POISON_TX_DEAD: u32 = 1;
+pub(crate) const POISON_RX_DEAD: u32 = 2;
+
+/// Yields a hardened wait loop performs before parking on its wait cell
+/// (the spin -> yield -> futex progression).
+const YIELDS_BEFORE_PARK: u32 = 4;
+
+/// Eventcount wait cell for the hardened blocking paths. Host-side
+/// atomics on purpose: registering or waking waiters must not perturb
+/// the priced operation counts the pinned sim cost tests assert, and the
+/// sequence word must be readable from inside the simulator's monitor
+/// (`World::futex_wait`'s `still` closure runs there).
+///
+/// Protocol: a parker increments `waiters`, snapshots `seq`, re-polls
+/// its condition once, then futex-waits while `seq` is unchanged; a
+/// waker that published work bumps `seq` and wakes the cell only when
+/// `waiters != 0` — zero cost on the uncontended hot path.
+struct WaitCell {
+    seq: AtomicU64,
+    waiters: AtomicU32,
+}
+
+impl WaitCell {
+    fn new() -> Self {
+        WaitCell { seq: AtomicU64::new(0), waiters: AtomicU32::new(0) }
+    }
+
+    /// Futex address token: the cell's own location (unique and stable;
+    /// both worlds key their wait queues by opaque u64).
+    fn token(&self) -> u64 {
+        self as *const WaitCell as u64
+    }
+
+    /// Register as a waiter; returns the sequence snapshot for
+    /// [`WaitCell::wait`]. Pair every call with [`WaitCell::finish`].
+    fn prepare(&self) -> u64 {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        self.seq.load(Ordering::SeqCst)
+    }
+
+    /// Sleep until a wake, the deadline, or a `seq` bump since `seen`.
+    fn wait<W: World>(&self, seen: u64, deadline_ns: Option<u64>) {
+        W::futex_wait(self.token(), deadline_ns, || {
+            self.seq.load(Ordering::SeqCst) == seen
+        });
+    }
+
+    /// Deregister (must follow every `prepare`).
+    fn finish(&self) {
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake every parked waiter. Called after publishing whatever the
+    /// waiters poll for: a committed message, freed ring space, a poison
+    /// flag, or channel teardown.
+    fn wake_all<W: World>(&self) {
+        if self.waiters.load(Ordering::SeqCst) != 0 {
+            self.seq.fetch_add(1, Ordering::SeqCst);
+            W::futex_wake(self.token(), usize::MAX);
+        }
+    }
 }
 
 enum QueueImpl<W: World> {
@@ -111,6 +182,29 @@ pub struct McapiRuntime<W: World> {
     doorbell: Doorbell<W>,
     /// The Figure 1 global lock (used only by the Locked backend).
     global: RwLock<W>,
+    /// Per-node liveness epochs: even = alive, odd = declared dead.
+    /// Host atomics (unpriced) so hot-path alive checks cost nothing in
+    /// the simulator's pinned operation counts.
+    liveness: Vec<AtomicU64>,
+    /// Host-side shadow of each endpoint's owner node (written once at
+    /// creation) so liveness checks avoid a priced table load.
+    ep_owner_shadow: Vec<AtomicU32>,
+    /// Per-channel poison bits (`POISON_TX_DEAD` / `POISON_RX_DEAD`).
+    chan_poison: Vec<AtomicU32>,
+    /// Buffer custody: 0 = pooled or queued, `node + 1` = held by that
+    /// node mid-operation. Lets `declare_node_dead` reclaim the leases a
+    /// dead task was holding. Host-side: custody records sit between the
+    /// priced operations they bracket, so an injected kill can never
+    /// land inside a record/clear pair (faults fire only at priced ops).
+    buffer_holder: Vec<AtomicU32>,
+    /// Eventcount cells: one per channel and one per endpoint.
+    chan_waits: Vec<WaitCell>,
+    ep_waits: Vec<WaitCell>,
+    /// Robustness counters (host-side instrumentation for stress/chaos
+    /// reports; see `coordinator::metrics`).
+    stat_timeouts: AtomicU64,
+    stat_poisons: AtomicU64,
+    stat_leases_reclaimed: AtomicU64,
 }
 
 impl<W: World> McapiRuntime<W> {
@@ -162,6 +256,15 @@ impl<W: World> McapiRuntime<W> {
                 .collect(),
             doorbell: Doorbell::new(cfg.max_channels),
             global: RwLock::new(),
+            liveness: (0..cfg.max_nodes).map(|_| AtomicU64::new(0)).collect(),
+            ep_owner_shadow: (0..cfg.max_endpoints).map(|_| AtomicU32::new(0)).collect(),
+            chan_poison: (0..cfg.max_channels).map(|_| AtomicU32::new(0)).collect(),
+            buffer_holder: (0..cfg.pool_buffers).map(|_| AtomicU32::new(0)).collect(),
+            chan_waits: (0..cfg.max_channels).map(|_| WaitCell::new()).collect(),
+            ep_waits: (0..cfg.max_endpoints).map(|_| WaitCell::new()).collect(),
+            stat_timeouts: AtomicU64::new(0),
+            stat_poisons: AtomicU64::new(0),
+            stat_leases_reclaimed: AtomicU64::new(0),
             cfg,
         })
     }
@@ -193,6 +296,129 @@ impl<W: World> McapiRuntime<W> {
         self.pool.lease_ops()
     }
 
+    /// Waits that expired with `Status::Timeout` so far.
+    pub fn timeouts_observed(&self) -> u64 {
+        self.stat_timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Operations that surfaced `Status::EndpointDead` so far.
+    pub fn poisons_observed(&self) -> u64 {
+        self.stat_poisons.load(Ordering::Relaxed)
+    }
+
+    /// Pool leases reclaimed from dead nodes so far.
+    pub fn leases_reclaimed(&self) -> u64 {
+        self.stat_leases_reclaimed.load(Ordering::Relaxed)
+    }
+
+    // -- node liveness (dead-peer recovery) -----------------------------------
+
+    /// Whether `node`'s liveness epoch is even (alive). Out-of-range
+    /// nodes read as dead.
+    pub fn node_alive(&self, node: usize) -> bool {
+        self.liveness
+            .get(node)
+            .map_or(false, |e| e.load(Ordering::SeqCst) & 1 == 0)
+    }
+
+    /// Current liveness epoch of `node` (monitoring).
+    pub fn liveness_epoch(&self, node: usize) -> u64 {
+        self.liveness.get(node).map_or(1, |e| e.load(Ordering::SeqCst))
+    }
+
+    /// Declare dense node slot `node` dead and run recovery: bump its
+    /// liveness epoch to odd, poison + counter-repair every connected
+    /// channel whose producer or consumer side the node owned, reclaim
+    /// every pool lease the node was holding, and wake every parked
+    /// waiter so it re-checks and surfaces `EndpointDead` (or drains the
+    /// committed remainder first). Idempotent per epoch. Returns
+    /// `(channels_poisoned, leases_reclaimed)`.
+    ///
+    /// Models an external health monitor's verdict (heartbeat loss, OS
+    /// task-death notification). Must run on a live task: ring repair
+    /// and pool release are priced operations, so in simulated worlds
+    /// call this from a watchdog task inside the machine.
+    pub fn declare_node_dead(&self, node: usize) -> (usize, usize) {
+        let Some(epoch) = self.liveness.get(node) else {
+            return (0, 0);
+        };
+        let cur = epoch.load(Ordering::SeqCst);
+        if cur & 1 == 1 {
+            return (0, 0); // already dead
+        }
+        epoch.store(cur + 1, Ordering::SeqCst);
+        // 1) Poison and repair connected channels touching the node.
+        //    Rolling the dead side's odd counter back to even discards a
+        //    torn insert / re-exposes an un-acked read (see
+        //    `ChannelRing::repair_dead_producer`); the live side can then
+        //    drain everything committed before poison surfaces.
+        let mut poisoned = 0;
+        for (ch, slot) in self.channels.iter().enumerate() {
+            if slot.state.state() != ch_state::CONNECTED {
+                continue;
+            }
+            let tx_owner =
+                self.ep_owner_shadow[slot.tx_ep.load() as usize].load(Ordering::Relaxed) as usize;
+            let rx_owner =
+                self.ep_owner_shadow[slot.rx_ep.load() as usize].load(Ordering::Relaxed) as usize;
+            let mut bits = 0;
+            if tx_owner == node {
+                bits |= POISON_TX_DEAD;
+                if let Some(ring) = &slot.ring {
+                    ring.repair_dead_producer();
+                }
+            }
+            if rx_owner == node {
+                bits |= POISON_RX_DEAD;
+                if let Some(ring) = &slot.ring {
+                    ring.repair_dead_consumer();
+                }
+            }
+            if bits != 0 {
+                self.chan_poison[ch].fetch_or(bits, Ordering::SeqCst);
+                // Doorbell pollers probe the ring and hit the poison;
+                // parked waiters re-check via the cell wake.
+                self.doorbell.set(ch);
+                self.chan_waits[ch].wake_all::<W>();
+                poisoned += 1;
+            }
+        }
+        // 2) Reclaim the pool leases the dead node held mid-operation.
+        //    Custody invariant: `holder == node + 1` implies the buffer
+        //    is neither in the free pool nor inside a committed queue
+        //    entry, so forcing its FSM back to FREE and releasing it can
+        //    neither double-free nor steal a live message's buffer.
+        let mut reclaimed = 0usize;
+        for (i, holder) in self.buffer_holder.iter().enumerate() {
+            if holder.load(Ordering::SeqCst) != node as u32 + 1 {
+                continue;
+            }
+            holder.store(0, Ordering::SeqCst);
+            let st = self.buffer_fsm[i].state();
+            if st != entry_state::FREE {
+                let _ = self.buffer_fsm[i].transition(st, entry_state::FREE);
+            }
+            self.pool.release(Lease {
+                index: i,
+                offset: i * self.cfg.buf_len,
+                len: self.cfg.buf_len,
+            });
+            reclaimed += 1;
+        }
+        self.stat_leases_reclaimed.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        // 3) Wake waiters parked on the dead node's endpoints (blocked
+        //    senders re-attempt, see the dead-destination check, and
+        //    surface `EndpointDead`).
+        for (i, ep) in self.endpoints.iter().enumerate() {
+            if ep.state.state() == ep_state::ACTIVE
+                && self.ep_owner_shadow[i].load(Ordering::Relaxed) as usize == node
+            {
+                self.ep_waits[i].wake_all::<W>();
+            }
+        }
+        (poisoned, reclaimed)
+    }
+
     fn charge_api(&self) {
         W::work(self.cfg.api_overhead_ns);
     }
@@ -220,6 +446,7 @@ impl<W: World> McapiRuntime<W> {
             if slot.state.transition(ep_state::FREE, ep_state::CREATING).is_ok() {
                 slot.id.store(pack(id));
                 slot.owner.store(owner as u32);
+                self.ep_owner_shadow[i].store(owner as u32, Ordering::Relaxed);
                 slot.rx_channel.store(0);
                 slot.state.transition_exact(ep_state::CREATING, ep_state::ACTIVE);
                 return Ok(i);
@@ -260,11 +487,16 @@ impl<W: World> McapiRuntime<W> {
 
     // -- buffer lease helpers (Figure 4 lifecycle) ---------------------------
 
-    fn lease_filled(&self, data: &[u8]) -> Result<Lease, Status> {
+    fn lease_filled(&self, data: &[u8], node: usize) -> Result<Lease, Status> {
         if data.len() > self.cfg.buf_len {
             return Err(Status::MessageLimit);
         }
         let lease = self.pool.acquire().ok_or(Status::MemLimit)?;
+        // Custody: `node` holds this buffer until it is queued, aborted,
+        // or released (host-side store; recorded before the next priced
+        // op so an injected kill cannot slip between pool pop and the
+        // custody record — faults fire only at priced operations).
+        self.buffer_holder[lease.index].store(node as u32 + 1, Ordering::Relaxed);
         // Figure 4: FREE -> RESERVED (claimed) -> ALLOCATED (filled).
         self.buffer_fsm[lease.index].transition_exact(entry_state::FREE, entry_state::RESERVED);
         self.pool.write(&lease, data);
@@ -281,11 +513,15 @@ impl<W: World> McapiRuntime<W> {
         }
     }
 
-    fn consume_entry(&self, e: &Entry, out: &mut [u8]) -> usize {
+    fn consume_entry(&self, e: &Entry, out: &mut [u8], node: usize) -> usize {
         if !e.has_buffer() {
             return 0;
         }
         let lease = self.lease_of(e);
+        // Custody: the receiving node holds the buffer from pop to
+        // release (host-side; see `lease_filled` for why a kill cannot
+        // land between the queue pop and this record).
+        self.buffer_holder[lease.index].store(node as u32 + 1, Ordering::Relaxed);
         // Figure 4: ALLOCATED -> RECEIVED (head, being read) -> FREE.
         self.buffer_fsm[lease.index]
             .transition_exact(entry_state::ALLOCATED, entry_state::RECEIVED);
@@ -294,6 +530,7 @@ impl<W: World> McapiRuntime<W> {
         self.buffer_fsm[lease.index]
             .transition_exact(entry_state::RECEIVED, entry_state::FREE);
         self.pool.release(lease);
+        self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
         copied
     }
 
@@ -301,6 +538,7 @@ impl<W: World> McapiRuntime<W> {
         self.buffer_fsm[lease.index]
             .transition_exact(entry_state::ALLOCATED, entry_state::FREE);
         self.pool.release(lease);
+        self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
     }
 
     // -- connectionless messages ---------------------------------------------
@@ -327,14 +565,15 @@ impl<W: World> McapiRuntime<W> {
                     .global
                     .with_read(|| self.lookup(to))
                     .ok_or(Status::InvalidEndpoint)?;
-                let lease = self.global.with_write(|| self.lease_filled(data))?;
+                self.check_dest_alive(ep)?;
+                let lease = self.global.with_write(|| self.lease_filled(data, from))?;
                 let entry = Entry::buffered(
                     lease.index as u32,
                     data.len() as u32,
                     from as u32,
                     priority % PRIORITIES as u8,
                 );
-                self.global.with_write(|| {
+                let res = self.global.with_write(|| {
                     let QueueImpl::Locked(q) = &self.endpoints[ep].queue else {
                         unreachable!("locked backend uses locked queues");
                     };
@@ -343,11 +582,18 @@ impl<W: World> McapiRuntime<W> {
                         self.abort_lease(lease);
                         s
                     })
-                })
+                });
+                if res.is_ok() {
+                    // Custody passes to the queue; wake parked receivers.
+                    self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
+                    self.ep_waits[ep].wake_all::<W>();
+                }
+                res
             }
             BackendKind::LockFree => {
                 let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
-                let lease = self.lease_filled(data)?;
+                self.check_dest_alive(ep)?;
+                let lease = self.lease_filled(data, from)?;
                 let entry = Entry::buffered(
                     lease.index as u32,
                     data.len() as u32,
@@ -357,11 +603,32 @@ impl<W: World> McapiRuntime<W> {
                 let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
                     unreachable!("lockfree backend uses NBB queues");
                 };
-                q.push(entry).map_err(|(s, _)| {
-                    self.abort_lease(lease);
-                    s
-                })
+                match q.push(entry) {
+                    Ok(()) => {
+                        // Custody passes to the queue; wake parked receivers.
+                        self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
+                        self.ep_waits[ep].wake_all::<W>();
+                        Ok(())
+                    }
+                    Err((s, _)) => {
+                        self.abort_lease(lease);
+                        Err(s)
+                    }
+                }
             }
+        }
+    }
+
+    /// `EndpointDead` when the destination endpoint's owner node has been
+    /// declared dead — a message to it could never be consumed. Host-side
+    /// loads only (zero priced-op cost on the hot path).
+    fn check_dest_alive(&self, ep: usize) -> Result<(), Status> {
+        let owner = self.ep_owner_shadow[ep].load(Ordering::Relaxed) as usize;
+        if self.node_alive(owner) {
+            Ok(())
+        } else {
+            self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+            Err(Status::EndpointDead)
         }
     }
 
@@ -379,9 +646,12 @@ impl<W: World> McapiRuntime<W> {
                     // Safety: the global write lock is held.
                     unsafe { q.pop() }.ok_or(Status::WouldBlock)
                 })?;
+                let node = self.ep_owner_shadow[ep].load(Ordering::Relaxed) as usize;
                 // Buffer read + release is a second lock round-trip in the
                 // reference design.
-                Ok(self.global.with_write(|| self.consume_entry(&entry, out)))
+                let n = self.global.with_write(|| self.consume_entry(&entry, out, node));
+                self.ep_waits[ep].wake_all::<W>();
+                Ok(n)
             }
             BackendKind::LockFree => {
                 let slot = self.active_ep(ep)?;
@@ -389,7 +659,11 @@ impl<W: World> McapiRuntime<W> {
                     unreachable!();
                 };
                 let entry = q.pop()?;
-                Ok(self.consume_entry(&entry, out))
+                let node = self.ep_owner_shadow[ep].load(Ordering::Relaxed) as usize;
+                let n = self.consume_entry(&entry, out, node);
+                // Space freed: wake senders parked on a full lane.
+                self.ep_waits[ep].wake_all::<W>();
+                Ok(n)
             }
         }
     }
@@ -426,12 +700,13 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
+                self.check_dest_alive(ep)?;
                 let prio = priority % PRIORITIES as u8;
                 // Lease and fill buffers first; entries become one lane batch.
                 let mut entries = Vec::with_capacity(payloads.len());
                 let mut lease_err = None;
                 for data in payloads {
-                    match self.lease_filled(data) {
+                    match self.lease_filled(data, from) {
                         Ok(lease) => entries.push(Entry::buffered(
                             lease.index as u32,
                             data.len() as u32,
@@ -447,14 +722,25 @@ impl<W: World> McapiRuntime<W> {
                 if entries.is_empty() {
                     return Err(lease_err.unwrap_or(Status::WouldBlock));
                 }
+                let batched: Vec<u32> = entries.iter().map(|e| e.buf_index).collect();
                 let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
                     unreachable!("lockfree backend uses NBB queues");
                 };
                 let result = q.push_batch(&mut entries);
                 // Whatever did not go in stays in `entries`: hand its
-                // buffers back (Figure 4 abort path).
+                // buffers back (Figure 4 abort path). Custody of the
+                // enqueued prefix passes to the queue.
                 for e in &entries {
                     self.abort_lease(self.lease_of(e));
+                }
+                let unsent: Vec<u32> = entries.iter().map(|e| e.buf_index).collect();
+                for idx in batched {
+                    if !unsent.contains(&idx) {
+                        self.buffer_holder[idx as usize].store(0, Ordering::Relaxed);
+                    }
+                }
+                if result.is_ok() {
+                    self.ep_waits[ep].wake_all::<W>();
                 }
                 result
             }
@@ -497,11 +783,13 @@ impl<W: World> McapiRuntime<W> {
                 };
                 let mut entries = Vec::with_capacity(max.min(64));
                 let n = q.pop_batch(&mut entries, max)?;
+                let node = self.ep_owner_shadow[ep].load(Ordering::Relaxed) as usize;
                 let mut buf = vec![0u8; self.cfg.buf_len];
                 for e in &entries {
-                    let len = self.consume_entry(e, &mut buf);
+                    let len = self.consume_entry(e, &mut buf, node);
                     out.push(buf[..len].to_vec());
                 }
+                self.ep_waits[ep].wake_all::<W>();
                 Ok(n)
             }
         }
@@ -550,12 +838,17 @@ impl<W: World> McapiRuntime<W> {
             slot.tx_open.store(0);
             slot.rx_open.store(0);
             // Fast-path hygiene: a reused channel slot's ring may hold
-            // residue from a previous connection — drain it and clear the
+            // residue from a previous connection — and, after a crash, a
+            // torn counter from a peer that died mid-operation. Roll both
+            // sides back to even, drain the residue, clear poison and the
             // doorbell bit before publishing the channel (exclusive here:
             // the slot is CONNECTING, claimed by this thread's CAS).
             if let Some(ring) = &slot.ring {
+                ring.repair_dead_producer();
+                ring.repair_dead_consumer();
                 ring.drain();
             }
+            self.chan_poison[ch].store(0, Ordering::SeqCst);
             self.doorbell.clear(ch);
             slot.state.transition_exact(ch_state::CONNECTING, ch_state::CONNECTED);
             Ok(ch)
@@ -606,6 +899,11 @@ impl<W: World> McapiRuntime<W> {
         // once `channel_ready` fails. `connect` re-clears on slot reuse
         // for the narrow close-races-a-sender window.
         self.doorbell.clear(ch);
+        self.chan_poison[ch].store(0, Ordering::SeqCst);
+        // Teardown guarantee: anyone parked on this channel re-checks
+        // and surfaces `InvalidChannel` instead of sleeping to its
+        // deadline.
+        self.chan_waits[ch].wake_all::<W>();
         Ok(())
     }
 
@@ -632,10 +930,14 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::Locked => {
                 let (tx_i, rx_i) =
                     self.global.with_read(|| self.channel_ready(ch, ChannelKind::Packet))?;
+                if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_RX_DEAD != 0 {
+                    self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                    return Err(Status::EndpointDead);
+                }
                 let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
-                let lease = self.global.with_write(|| self.lease_filled(data))?;
+                let lease = self.global.with_write(|| self.lease_filled(data, from as usize))?;
                 let entry = Entry::buffered(lease.index as u32, data.len() as u32, from, 0);
-                self.global.with_write(|| {
+                let res = self.global.with_write(|| {
                     let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
                         unreachable!();
                     };
@@ -644,7 +946,12 @@ impl<W: World> McapiRuntime<W> {
                         self.abort_lease(lease);
                         s
                     })
-                })
+                });
+                if res.is_ok() {
+                    self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
+                    self.chan_waits[ch].wake_all::<W>();
+                }
+                res
             }
             BackendKind::LockFree => {
                 // Fast path: payload bytes go straight into the channel
@@ -664,15 +971,29 @@ impl<W: World> McapiRuntime<W> {
         self.charge_api();
         match self.cfg.backend {
             BackendKind::Locked => {
-                let entry = self.global.with_write(|| {
+                let popped = self.global.with_write(|| {
                     let (_, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
                     let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
                         unreachable!();
                     };
                     // Safety: global write lock held.
-                    unsafe { q.pop() }.ok_or(Status::WouldBlock)
-                })?;
-                Ok(self.global.with_write(|| self.consume_entry(&entry, out)))
+                    unsafe { q.pop() }.ok_or(Status::WouldBlock).map(|e| (e, rx_i))
+                });
+                let (entry, rx_i) = match popped {
+                    // Queue empty means everything committed has drained:
+                    // only now may a dead producer's poison surface.
+                    Err(Status::WouldBlock)
+                        if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_TX_DEAD != 0 =>
+                    {
+                        self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                        return Err(Status::EndpointDead);
+                    }
+                    other => other?,
+                };
+                let node = self.ep_owner_shadow[rx_i].load(Ordering::Relaxed) as usize;
+                let n = self.global.with_write(|| self.consume_entry(&entry, out, node));
+                self.chan_waits[ch].wake_all::<W>();
+                Ok(n)
             }
             BackendKind::LockFree => {
                 // Fast path: copy straight out of the ring slot (or use
@@ -767,6 +1088,62 @@ impl<W: World> McapiRuntime<W> {
         self.requests.allocate(PendingOp::MsgRecv { ep })
     }
 
+    /// Drive `attempt` to completion with the hardened blocking
+    /// progression: bounded spinning on `*_BUT_*` peer-active results,
+    /// then yields, then a futex park on `cell` bounded by the operation
+    /// deadline. `Err(Status::Timeout)` once `timeout_ns` elapses; every
+    /// other non-would-block error (poison and teardown included)
+    /// surfaces immediately. Waiters are guaranteed to wake for a
+    /// message, a poison flag, channel teardown, or the deadline —
+    /// whichever comes first.
+    fn blocking_drive<T>(
+        &self,
+        cell: &WaitCell,
+        timeout_ns: u64,
+        mut attempt: impl FnMut() -> Result<T, Status>,
+    ) -> Result<T, Status> {
+        let deadline = W::now_ns().saturating_add(timeout_ns);
+        let mut bo = Backoff::<W>::new();
+        loop {
+            match attempt() {
+                Ok(v) => return Ok(v),
+                Err(s) if s.is_would_block() => {
+                    if W::now_ns() >= deadline {
+                        self.stat_timeouts.fetch_add(1, Ordering::Relaxed);
+                        return Err(Status::Timeout);
+                    }
+                    // Table 1: peer mid-operation — spin within budget.
+                    if s == Status::WouldBlockPeerActive && bo.immediate() {
+                        continue;
+                    }
+                    if bo.yields() < YIELDS_BEFORE_PARK {
+                        bo.yield_now();
+                        continue;
+                    }
+                    // Park: register, re-poll once (an unregistered poll
+                    // can miss a publish-then-wake), sleep until a wake
+                    // or the deadline. Spurious wakes just re-loop.
+                    let seen = cell.prepare();
+                    match attempt() {
+                        Ok(v) => {
+                            cell.finish();
+                            return Ok(v);
+                        }
+                        Err(s2) if s2.is_would_block() => {
+                            cell.wait::<W>(seen, Some(deadline));
+                            cell.finish();
+                        }
+                        Err(e) => {
+                            cell.finish();
+                            return Err(e);
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
     /// Drive a pending send request to completion within `timeout_ns`
     /// (virtual ns in simulated worlds). MCAPI `wait`.
     pub fn wait_send(
@@ -781,23 +1158,23 @@ impl<W: World> McapiRuntime<W> {
         if self.requests.is_complete(h) {
             return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
         }
-        let deadline = W::now_ns().saturating_add(timeout_ns);
-        loop {
-            match self.msg_send(from, to, data, priority) {
-                Ok(()) => {
-                    self.requests.complete(h, Status::Success);
-                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
-                }
-                Err(s) if s.is_would_block() => {
-                    if W::now_ns() >= deadline {
-                        return Status::Timeout;
-                    }
-                    W::yield_now();
-                }
-                Err(s) => {
-                    self.requests.complete(h, s);
-                    return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
-                }
+        let Some(ep) = self.lookup(to) else {
+            self.requests.complete(h, Status::InvalidEndpoint);
+            return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+        };
+        let drive = self.blocking_drive(&self.ep_waits[ep], timeout_ns, || {
+            self.msg_send(from, to, data, priority)
+        });
+        match drive {
+            Ok(()) => {
+                self.requests.complete(h, Status::Success);
+                self.requests.reap(h).unwrap_or(Status::InvalidRequest)
+            }
+            // Request stays pending across a timeout (re-waitable).
+            Err(Status::Timeout) => Status::Timeout,
+            Err(s) => {
+                self.requests.complete(h, s);
+                self.requests.reap(h).unwrap_or(Status::InvalidRequest)
             }
         }
     }
@@ -813,25 +1190,87 @@ impl<W: World> McapiRuntime<W> {
         let PendingOp::MsgRecv { ep } = self.requests.slot(h).op() else {
             return Err(Status::InvalidRequest);
         };
+        let drive =
+            self.blocking_drive(&self.ep_waits[ep], timeout_ns, || self.msg_recv(ep, out));
+        match drive {
+            Ok(n) => {
+                self.requests.complete(h, Status::Success);
+                let _ = self.requests.reap(h);
+                Ok(n)
+            }
+            // Request stays pending across a timeout (cancellable).
+            Err(Status::Timeout) => Err(Status::Timeout),
+            Err(s) => {
+                self.requests.complete(h, s);
+                let _ = self.requests.reap(h);
+                Err(s)
+            }
+        }
+    }
+
+    /// Wait for the first of `handles` to complete, within `timeout_ns`.
+    /// MCAPI `wait_any`. Returns the index of the completed request and
+    /// its completion status; the request is reaped.
+    ///
+    /// Pending *receive* requests complete by **readiness**: data became
+    /// available (`Success` — reap the payload with the matching
+    /// synchronous receive afterwards) or the producing peer was
+    /// declared dead with nothing left to drain (`EndpointDead`).
+    /// Pending sends complete only through their own `wait_*` drivers.
+    pub fn wait_any(
+        &self,
+        handles: &[RequestHandle],
+        timeout_ns: u64,
+    ) -> Result<(usize, Status), Status> {
+        self.charge_api();
+        if handles.is_empty() {
+            return Err(Status::InvalidRequest);
+        }
         let deadline = W::now_ns().saturating_add(timeout_ns);
+        let mut bo = Backoff::<W>::new();
         loop {
-            match self.msg_recv(ep, out) {
-                Ok(n) => {
-                    self.requests.complete(h, Status::Success);
-                    let _ = self.requests.reap(h);
-                    return Ok(n);
+            for (i, &h) in handles.iter().enumerate() {
+                if self.requests.is_complete(h) {
+                    let s = self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+                    return Ok((i, s));
                 }
-                Err(s) if s.is_would_block() => {
-                    if W::now_ns() >= deadline {
-                        return Err(Status::Timeout);
+                let ready = match self.requests.slot(h).op() {
+                    PendingOp::PktRecv { ch } => {
+                        if self.chan_available(ch).unwrap_or(0) > 0 {
+                            Some(Status::Success)
+                        } else if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_TX_DEAD
+                            != 0
+                        {
+                            // Drained AND producer dead: fault completion.
+                            Some(Status::EndpointDead)
+                        } else {
+                            None
+                        }
                     }
-                    W::yield_now();
-                }
-                Err(s) => {
+                    PendingOp::MsgRecv { ep } => {
+                        if self.msg_available(ep).unwrap_or(0) > 0 {
+                            Some(Status::Success)
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                };
+                if let Some(s) = ready {
+                    if s == Status::EndpointDead {
+                        self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                    }
                     self.requests.complete(h, s);
-                    let _ = self.requests.reap(h);
-                    return Err(s);
+                    let s = self.requests.reap(h).unwrap_or(Status::InvalidRequest);
+                    return Ok((i, s));
                 }
+            }
+            if W::now_ns() >= deadline {
+                self.stat_timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(Status::Timeout);
+            }
+            if !bo.immediate() {
+                bo.yield_now();
             }
         }
     }
@@ -1167,5 +1606,154 @@ mod tests {
         rt.msg_send(0, dst, b"a", 0).unwrap();
         rt.msg_send(0, dst, b"b", 0).unwrap();
         assert_eq!(rt.msg_send(0, dst, b"c", 0).unwrap_err(), Status::MemLimit);
+    }
+
+    // -- dead-peer recovery ---------------------------------------------------
+
+    fn packet_pair(
+        rt: &McapiRuntime<RealWorld>,
+        port: u16,
+    ) -> (EndpointId, EndpointId, usize) {
+        let a = EndpointId::new(0, 1, port);
+        let b = EndpointId::new(0, 2, port);
+        rt.create_endpoint(a, 1).unwrap();
+        rt.create_endpoint(b, 2).unwrap();
+        let ch = rt.connect(a, b, ChannelKind::Packet).unwrap();
+        rt.open_send(ch).unwrap();
+        rt.open_recv(ch).unwrap();
+        (a, b, ch)
+    }
+
+    #[test]
+    fn dead_receiver_fails_senders_immediately() {
+        for rt in both() {
+            let (_, _, ch) = packet_pair(&rt, 21);
+            rt.pkt_send(ch, b"early").unwrap();
+            assert!(rt.node_alive(2));
+            rt.declare_node_dead(2);
+            assert!(!rt.node_alive(2));
+            assert_eq!(rt.pkt_send(ch, b"late").unwrap_err(), Status::EndpointDead);
+            assert!(rt.poisons_observed() > 0);
+        }
+    }
+
+    #[test]
+    fn dead_producer_drains_committed_then_poisons() {
+        for rt in both() {
+            let (a, b, ch) = packet_pair(&rt, 22);
+            rt.pkt_send(ch, b"one").unwrap();
+            rt.pkt_send(ch, b"two").unwrap();
+            rt.declare_node_dead(1);
+            // Every committed packet drains before the poison surfaces.
+            let mut buf = [0u8; 16];
+            let n = rt.pkt_recv(ch, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"one");
+            let n = rt.pkt_recv(ch, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"two");
+            assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap_err(), Status::EndpointDead);
+            // Teardown + reconnect resets the poison.
+            rt.close(ch).unwrap();
+            let ch2 = rt.connect(a, b, ChannelKind::Packet).unwrap();
+            rt.open_send(ch2).unwrap();
+            rt.open_recv(ch2).unwrap();
+            rt.pkt_send(ch2, b"fresh").unwrap();
+            let n = rt.pkt_recv(ch2, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"fresh");
+        }
+    }
+
+    #[test]
+    fn msg_send_to_dead_node_fails_but_committed_messages_drain() {
+        for rt in both() {
+            let dst = EndpointId::new(0, 3, 23);
+            let ep = rt.create_endpoint(dst, 3).unwrap();
+            rt.msg_send(0, dst, b"ok", 0).unwrap();
+            rt.declare_node_dead(3);
+            assert_eq!(rt.msg_send(0, dst, b"no", 0).unwrap_err(), Status::EndpointDead);
+            // The committed message is still drainable by a scavenger and
+            // returns its pool lease.
+            let mut buf = [0u8; 8];
+            assert_eq!(rt.msg_recv(ep, &mut buf).unwrap(), 2);
+            assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers);
+        }
+    }
+
+    #[test]
+    fn declare_node_dead_is_idempotent_per_epoch() {
+        let rt = rt(BackendKind::LockFree);
+        let (_, _, _ch) = packet_pair(&rt, 24);
+        let (poisoned, _) = rt.declare_node_dead(1);
+        assert_eq!(poisoned, 1);
+        assert_eq!(rt.declare_node_dead(1), (0, 0), "second declaration is a no-op");
+        assert_eq!(rt.liveness_epoch(1), 1);
+        // Out-of-range nodes are reported dead and declaring them is a no-op.
+        assert!(!rt.node_alive(usize::MAX));
+        assert_eq!(rt.declare_node_dead(usize::MAX), (0, 0));
+    }
+
+    #[test]
+    fn chan_recv_wait_message_timeout_and_poison() {
+        for rt in both() {
+            let (_, _, ch) = packet_pair(&rt, 25);
+            rt.pkt_send(ch, b"ready").unwrap();
+            let mut buf = [0u8; 16];
+            let n = rt.chan_recv_wait(ch, &mut buf, 1_000_000).unwrap();
+            assert_eq!(&buf[..n], b"ready");
+            // Empty channel: the wait expires.
+            assert_eq!(
+                rt.chan_recv_wait(ch, &mut buf, 200_000).unwrap_err(),
+                Status::Timeout
+            );
+            assert!(rt.timeouts_observed() > 0);
+            // Producer death unblocks the receiver with the poison status.
+            rt.declare_node_dead(1);
+            assert_eq!(
+                rt.chan_recv_wait(ch, &mut buf, 10_000_000).unwrap_err(),
+                Status::EndpointDead
+            );
+        }
+    }
+
+    #[test]
+    fn parked_receiver_wakes_on_send() {
+        let rt = rt(BackendKind::LockFree);
+        let (_, _, ch) = packet_pair(&rt, 26);
+        let sender = {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                rt.pkt_send(ch, b"wake").unwrap();
+            })
+        };
+        let mut buf = [0u8; 16];
+        let n = rt.chan_recv_wait(ch, &mut buf, 2_000_000_000).unwrap();
+        assert_eq!(&buf[..n], b"wake");
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn wait_any_readiness_timeout_and_fault_completion() {
+        for rt in both() {
+            let (_, _, ch) = packet_pair(&rt, 27);
+            let h_pkt = rt.pkt_recv_i(ch).unwrap();
+            let dst = EndpointId::new(0, 2, 28);
+            let ep = rt.create_endpoint(dst, 2).unwrap();
+            let h_msg = rt.msg_recv_i(ep).unwrap();
+            // Nothing ready: the wait times out, requests stay pending.
+            assert_eq!(rt.wait_any(&[h_pkt, h_msg], 0).unwrap_err(), Status::Timeout);
+            assert_eq!(rt.requests_in_use(), 2);
+            // A message readies the second handle.
+            rt.msg_send(0, dst, b"m", 0).unwrap();
+            assert_eq!(rt.wait_any(&[h_pkt, h_msg], 1_000_000), Ok((1, Status::Success)));
+            let mut buf = [0u8; 8];
+            rt.msg_recv(ep, &mut buf).unwrap();
+            // Producer death completes the packet handle via the fault path.
+            rt.declare_node_dead(1);
+            assert_eq!(
+                rt.wait_any(&[h_pkt], 1_000_000),
+                Ok((0, Status::EndpointDead))
+            );
+            assert_eq!(rt.requests_in_use(), 0);
+        }
     }
 }

@@ -111,6 +111,7 @@ fn encode_status(s: Status) -> u32 {
         Status::Cancelled => 2,
         Status::MemLimit => 3,
         Status::MessageLimit => 4,
+        Status::EndpointDead => 6,
         _ => 5,
     }
 }
@@ -122,6 +123,7 @@ fn decode_status(v: u32) -> Status {
         2 => Status::Cancelled,
         3 => Status::MemLimit,
         4 => Status::MessageLimit,
+        6 => Status::EndpointDead,
         _ => Status::InvalidRequest,
     }
 }
@@ -305,6 +307,7 @@ mod tests {
             Status::Cancelled,
             Status::MemLimit,
             Status::MessageLimit,
+            Status::EndpointDead,
         ] {
             let p = Pool::new(1);
             let h = p.allocate(PendingOp::None).unwrap();

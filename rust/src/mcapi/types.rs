@@ -36,6 +36,11 @@ pub enum Status {
     Cancelled,
     /// Capacity exhausted (endpoints, channels or requests).
     Exhausted,
+    /// The peer node was declared dead (liveness epoch went odd) while
+    /// this operation needed it. Surfaced only after all *committed*
+    /// messages have been drained: a consumer sees every payload its
+    /// dead producer finished publishing before this poison appears.
+    EndpointDead,
 }
 
 impl Status {

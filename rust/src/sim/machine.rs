@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use super::faults::{FaultAction, FaultPlan, InjectedKill};
 use crate::os::{AffinityMode, OsProfile};
 
 /// Memory-hierarchy cost constants (nanoseconds), matching the L2 model's
@@ -95,6 +96,10 @@ struct Tcb {
     pinned: bool,
     state: TaskState,
     quantum_start: u64,
+    /// Priced operations executed so far (the fault-plan index space).
+    ops: u64,
+    /// Virtual deadline for a timed futex wait, if any.
+    wake_at: Option<u64>,
 }
 
 struct Core {
@@ -123,6 +128,7 @@ struct State {
     live: usize,
     aborted: bool,
     stats: MachineStats,
+    faults: Option<FaultPlan>,
 }
 
 struct Shared {
@@ -181,6 +187,7 @@ impl Machine {
                     live: 0,
                     aborted: false,
                     stats: MachineStats::default(),
+                    faults: None,
                 }),
                 cv: Condvar::new(),
             }),
@@ -215,6 +222,8 @@ impl Machine {
                 pinned,
                 state: TaskState::Ready,
                 quantum_start: 0,
+                ops: 0,
+                wake_at: None,
             });
             st.cores[core].ready.push_back(id);
             st.live += 1;
@@ -225,11 +234,44 @@ impl Machine {
             machine.wait_until_running(id);
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             super::world::clear_ctx();
-            machine.finish(id, result.is_err());
-            if let Err(e) = result {
-                std::panic::resume_unwind(e);
+            match result {
+                Ok(()) => machine.finish(id, false),
+                // A planned fault-injection kill: clean single-task death.
+                // The machine keeps scheduling the survivors so recovery
+                // paths can be exercised.
+                Err(e) if e.downcast_ref::<InjectedKill>().is_some() => {
+                    machine.finish(id, false);
+                }
+                Err(e) => {
+                    machine.finish(id, true);
+                    std::panic::resume_unwind(e);
+                }
             }
         })
+    }
+
+    /// Install a fault plan consulted on every priced operation. Call
+    /// before [`Machine::run`]; events fire keyed on `(task, op index)`.
+    pub fn set_faults(&self, plan: FaultPlan) {
+        let mut st = lock(&self.shared);
+        st.faults = Some(plan);
+    }
+
+    /// Priced operations task `id` has executed so far (unpriced read —
+    /// used by fault-sweep probes to measure an op-index window).
+    pub fn task_ops(&self, id: usize) -> u64 {
+        lock(&self.shared).tasks[id].ops
+    }
+
+    /// True once task `id` has finished (normally or by injected kill).
+    pub fn task_done(&self, id: usize) -> bool {
+        let st = lock(&self.shared);
+        st.tasks.get(id).map_or(false, |t| t.state == TaskState::Done)
+    }
+
+    /// Number of tasks spawned so far.
+    pub fn task_count(&self) -> usize {
+        lock(&self.shared).tasks.len()
     }
 
     /// Start scheduling and block until every task finished. Returns the
@@ -291,13 +333,56 @@ impl Machine {
         let mut st = lock(&self.shared);
         assert!(!st.aborted, "machine aborted");
         assert_eq!(st.running, Some(me), "op from task not scheduled");
+        // Fault hook: a plain counter bump plus (when a plan is armed) one
+        // map lookup — nothing here is priced, so fault-free runs keep
+        // identical virtual-time results. Events fire *before* `f`, which
+        // is what makes a `Kill` land inside the enter/exit window of the
+        // operation whose op index it names.
+        let k = st.tasks[me].ops;
+        st.tasks[me].ops += 1;
+        if let Some(action) = st.faults.as_mut().and_then(|p| p.take(me, k)) {
+            match action {
+                FaultAction::Kill => {
+                    drop(st);
+                    // resume_unwind skips the panic hook: injected deaths
+                    // are planned, not error spew. spawn() recognises the
+                    // payload and finishes the task cleanly.
+                    std::panic::resume_unwind(Box::new(InjectedKill));
+                }
+                FaultAction::Stall(ns) => {
+                    st.tasks[me].clock += ns;
+                    st = self.reschedule(st, me);
+                }
+                FaultAction::Delay(ns) => {
+                    st.tasks[me].clock += ns;
+                    let core = st.tasks[me].core;
+                    if !st.cores[core].ready.is_empty() {
+                        st.cores[core].time = st.tasks[me].clock;
+                        st.tasks[me].state = TaskState::Ready;
+                        st.cores[core].ready.push_back(me);
+                        st.cores[core].current = None;
+                    }
+                    st = self.reschedule(st, me);
+                }
+            }
+        }
         let r = {
             let mut ctx = OpCtx { st: &mut st, cfg: &self.shared.cfg, me };
             f(&mut ctx)
         };
+        let _ = self.reschedule(st, me);
+        r
+    }
+
+    /// Run a scheduling pass and, if the machine was handed to another
+    /// task, block until this task is scheduled again.
+    fn reschedule<'a>(
+        &'a self,
+        mut st: std::sync::MutexGuard<'a, State>,
+        me: usize,
+    ) -> std::sync::MutexGuard<'a, State> {
         self.schedule(&mut st);
-        let handoff = st.running != Some(me);
-        if handoff {
+        if st.running != Some(me) {
             self.shared.cv.notify_all();
             while st.running != Some(me) && !st.aborted {
                 st = wait(&self.shared, st);
@@ -308,7 +393,7 @@ impl Machine {
                 panic!("machine aborted while task {me} was descheduled");
             }
         }
-        r
+        st
     }
 
     fn finish(&self, me: usize, panic: bool) {
@@ -335,50 +420,85 @@ impl Machine {
     }
 
     /// Scheduling pass: fill cores, rotate expired quanta, pick the global
-    /// min-clock occupant as the running task.
+    /// min-clock occupant as the running task, and expire timed futex
+    /// waits whose virtual deadline has come due.
     fn schedule(&self, st: &mut State) {
         let cfg = &self.shared.cfg;
-        // Fill empty cores and rotate expired quanta until stable.
         loop {
-            let mut changed = false;
-            for c in 0..st.cores.len() {
-                if st.cores[c].current.is_none() {
-                    if let Some(t) = st.cores[c].ready.pop_front() {
-                        let switch = st.cores[c].last != Some(t);
-                        if switch {
-                            st.cores[c].time += cfg.profile.context_switch_ns;
-                            st.stats.ctx_switches += 1;
+            // Fill empty cores and rotate expired quanta until stable.
+            loop {
+                let mut changed = false;
+                for c in 0..st.cores.len() {
+                    if st.cores[c].current.is_none() {
+                        if let Some(t) = st.cores[c].ready.pop_front() {
+                            let switch = st.cores[c].last != Some(t);
+                            if switch {
+                                st.cores[c].time += cfg.profile.context_switch_ns;
+                                st.stats.ctx_switches += 1;
+                            }
+                            let start = st.tasks[t].clock.max(st.cores[c].time);
+                            st.tasks[t].clock = start;
+                            st.tasks[t].quantum_start = start;
+                            st.tasks[t].state = TaskState::Current;
+                            st.cores[c].current = Some(t);
+                            st.cores[c].last = Some(t);
+                            changed = true;
                         }
-                        let start = st.tasks[t].clock.max(st.cores[c].time);
-                        st.tasks[t].clock = start;
-                        st.tasks[t].quantum_start = start;
-                        st.tasks[t].state = TaskState::Current;
-                        st.cores[c].current = Some(t);
-                        st.cores[c].last = Some(t);
-                        changed = true;
-                    }
-                } else {
-                    let t = st.cores[c].current.unwrap();
-                    let ran = st.tasks[t].clock.saturating_sub(st.tasks[t].quantum_start);
-                    if ran >= cfg.profile.quantum_ns && !st.cores[c].ready.is_empty() {
-                        st.cores[c].time = st.tasks[t].clock;
-                        st.tasks[t].state = TaskState::Ready;
-                        st.cores[c].ready.push_back(t);
-                        st.cores[c].current = None;
-                        changed = true;
+                    } else {
+                        let t = st.cores[c].current.unwrap();
+                        let ran = st.tasks[t].clock.saturating_sub(st.tasks[t].quantum_start);
+                        if ran >= cfg.profile.quantum_ns && !st.cores[c].ready.is_empty() {
+                            st.cores[c].time = st.tasks[t].clock;
+                            st.tasks[t].state = TaskState::Ready;
+                            st.cores[c].ready.push_back(t);
+                            st.cores[c].current = None;
+                            changed = true;
+                        }
                     }
                 }
+                if !changed {
+                    break;
+                }
             }
-            if !changed {
-                break;
+            // Pick the min-clock occupant (tie-break: lowest task id).
+            st.running = st
+                .cores
+                .iter()
+                .filter_map(|c| c.current)
+                .min_by_key(|&t| (st.tasks[t].clock, t));
+            // Timed futex waits: wake the earliest-deadline sleeper when
+            // its deadline precedes the would-be running task's clock (so
+            // timeout handling happens at the right virtual instant), or
+            // when nothing else is runnable (the idle machine advances to
+            // the deadline instead of declaring deadlock).
+            let next_timed = st
+                .tasks
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.state == TaskState::Blocked)
+                .filter_map(|(i, t)| t.wake_at.map(|w| (w, i)))
+                .min();
+            if let Some((wake_at, t)) = next_timed {
+                let due = match st.running {
+                    None => true,
+                    Some(r) => wake_at < st.tasks[r].clock,
+                };
+                if due {
+                    for q in st.futex.values_mut() {
+                        q.retain(|&x| x != t);
+                    }
+                    st.futex.retain(|_, q| !q.is_empty());
+                    let tcb = &mut st.tasks[t];
+                    tcb.wake_at = None;
+                    tcb.state = TaskState::Ready;
+                    tcb.clock = tcb.clock.max(wake_at);
+                    let core = tcb.core;
+                    st.cores[core].ready.push_back(t);
+                    continue;
+                }
             }
+            break;
         }
-        // Pick the min-clock occupant (tie-break: lowest task id).
-        st.running = st
-            .cores
-            .iter()
-            .filter_map(|c| c.current)
-            .min_by_key(|&t| (st.tasks[t].clock, t));
         if st.running.is_none() && st.live > 0 {
             // All live tasks blocked: deadlock in the simulated program.
             let waiting: Vec<_> = st.futex.iter().map(|(a, q)| (*a, q.len())).collect();
@@ -492,11 +612,25 @@ impl OpCtx<'_> {
     /// Sleep on `addr` if `still` holds (checked race-free under the
     /// monitor). The task parks until another task calls `futex_wake`.
     pub fn futex_wait(&mut self, addr: u64, still: impl FnOnce() -> bool) {
+        self.futex_wait_deadline(addr, None, still)
+    }
+
+    /// Like [`OpCtx::futex_wait`], but with an optional absolute virtual
+    /// deadline: the scheduler wakes the task spuriously once its clock
+    /// would pass `deadline` (callers re-check their condition and the
+    /// time, exactly like a real `FUTEX_WAIT` timeout).
+    pub fn futex_wait_deadline(
+        &mut self,
+        addr: u64,
+        deadline: Option<u64>,
+        still: impl FnOnce() -> bool,
+    ) {
         if !still() {
             return;
         }
         let core = self.st.tasks[self.me].core;
         self.st.tasks[self.me].state = TaskState::Blocked;
+        self.st.tasks[self.me].wake_at = deadline;
         self.st.futex.entry(addr).or_default().push_back(self.me);
         self.st.cores[core].time = self.st.tasks[self.me].clock;
         self.st.cores[core].current = None;
@@ -510,6 +644,7 @@ impl OpCtx<'_> {
             let Some(t) = self.st.futex.get_mut(&addr).and_then(|q| q.pop_front()) else {
                 break;
             };
+            self.st.tasks[t].wake_at = None;
             self.st.tasks[t].state = TaskState::Ready;
             self.st.tasks[t].clock =
                 self.st.tasks[t].clock.max(now + self.cfg.profile.sched_latency_ns);
@@ -693,6 +828,61 @@ mod tests {
         });
         assert_eq!(stats.misses, 1200);
         assert!(stats.bus_utilization() > 0.8, "{stats:?}");
+    }
+
+    #[test]
+    fn injected_kill_is_clean_single_task_death() {
+        use crate::sim::faults::FaultPlan;
+        let m = Machine::new(cfg(2));
+        // Task 0 would never terminate on its own; only the planned kill
+        // ends it. Task 1 must be unaffected and the run must not abort.
+        let h0 = m.spawn(|| loop {
+            SimWorld::work(10);
+        });
+        let h1 = m.spawn(|| SimWorld::work(1_000));
+        m.set_faults(FaultPlan::new().kill(0, 50));
+        let stats = m.run(vec![h0, h1]);
+        assert!(m.task_done(0), "killed task must be finished");
+        assert!(m.task_done(1));
+        assert!(stats.virtual_ns >= 1_000);
+        assert!(m.task_ops(0) >= 50);
+    }
+
+    #[test]
+    fn injected_stall_advances_virtual_time_deterministically() {
+        use crate::sim::faults::FaultPlan;
+        let run = || {
+            let m = Machine::new(cfg(2));
+            let handles = vec![
+                m.spawn(|| {
+                    for _ in 0..100 {
+                        SimWorld::work(10);
+                    }
+                }),
+                m.spawn(|| SimWorld::work(500)),
+            ];
+            m.set_faults(FaultPlan::new().stall(0, 10, 1_000_000));
+            m.run(handles)
+        };
+        let a = run();
+        let b = run();
+        assert!(a.virtual_ns >= 1_000_000, "{a:?}");
+        assert_eq!(a, b, "faulted runs must stay deterministic");
+    }
+
+    #[test]
+    fn timed_futex_wait_expires_at_virtual_deadline() {
+        let m = Machine::new(cfg(1));
+        // Nobody ever wakes this address: without the deadline this is the
+        // deadlock-detector case; with it, the wait returns at T+5000.
+        let h = m.spawn(|| {
+            let t0 = SimWorld::now_ns();
+            SimWorld::futex_wait_deadline_on(0x71ED, Some(t0 + 5_000), || true);
+            let t1 = SimWorld::now_ns();
+            assert!(t1 >= t0 + 5_000, "woke early: {t0}..{t1}");
+        });
+        let stats = m.run(vec![h]);
+        assert!(stats.virtual_ns >= 5_000);
     }
 
     #[test]

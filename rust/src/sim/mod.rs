@@ -27,8 +27,10 @@
 //! [`SimWorld`] (in [`world`]) implements [`crate::lockfree::mem::World`]
 //! on top of this machine via a thread-local task context.
 
+pub mod faults;
 mod machine;
 pub mod world;
 
+pub use faults::{sweep_kill_points, sweep_stall_points, FaultAction, FaultPlan, OpWindow};
 pub use machine::{Machine, MachineCfg, MachineStats, MemCosts};
 pub use world::SimWorld;

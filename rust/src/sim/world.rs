@@ -66,9 +66,53 @@ impl SimWorld {
         with_machine(|m| m.op(|ctx| ctx.futex_wait(addr, cond)))
     }
 
+    /// [`SimWorld::futex_wait_on`] with an optional absolute virtual
+    /// deadline; the scheduler wakes the task (spuriously) once virtual
+    /// time passes the deadline, so timed waits can never deadlock the
+    /// machine.
+    pub fn futex_wait_deadline_on(addr: u64, deadline: Option<u64>, cond: impl FnOnce() -> bool) {
+        with_machine(|m| m.op(|ctx| ctx.futex_wait_deadline(addr, deadline, cond)))
+    }
+
     /// Wake up to `n` tasks parked on `addr`.
     pub fn futex_wake_on(addr: u64, n: usize) -> usize {
         with_machine(|m| m.op(|ctx| ctx.futex_wake(addr, n)))
+    }
+
+    /// Priced-op count of the calling task (unpriced; fault-sweep probes
+    /// use it to bracket the op-index window of a target operation).
+    pub fn op_count() -> u64 {
+        CTX.with(|c| {
+            let borrow = c.borrow();
+            let (machine, id) = borrow
+                .as_ref()
+                .expect("SimWorld operation outside a simulated task");
+            machine.task_ops(*id)
+        })
+    }
+
+    /// Whether `task` on the calling task's machine has finished —
+    /// normally or by injected kill (unpriced). Watchdog tasks poll it
+    /// to detect a peer's death without perturbing a fault sweep's op
+    /// indices.
+    pub fn task_done(task: usize) -> bool {
+        CTX.with(|c| {
+            let borrow = c.borrow();
+            let (machine, _) = borrow
+                .as_ref()
+                .expect("SimWorld operation outside a simulated task");
+            machine.task_done(task)
+        })
+    }
+
+    /// The calling task's id on its machine (spawn order).
+    pub fn task_id() -> usize {
+        CTX.with(|c| {
+            c.borrow()
+                .as_ref()
+                .map(|(_, id)| *id)
+                .expect("SimWorld operation outside a simulated task")
+        })
     }
 }
 
@@ -328,6 +372,16 @@ impl World for SimWorld {
 
     fn alloc_region(bytes: usize) -> u64 {
         alloc_region(bytes)
+    }
+
+    // Trait-level parking maps straight onto the machine futex. The
+    // `still` closure runs inside the monitor: peek()/raw atomics only.
+    fn futex_wait(addr: u64, deadline_ns: Option<u64>, still: impl FnOnce() -> bool) {
+        with_machine(|m| m.op(|ctx| ctx.futex_wait_deadline(addr, deadline_ns, still)))
+    }
+
+    fn futex_wake(addr: u64, n: usize) {
+        with_machine(|m| m.op(|ctx| ctx.futex_wake(addr, n)));
     }
 }
 
