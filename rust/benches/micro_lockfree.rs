@@ -529,5 +529,37 @@ fn main() {
          \"pkt_ring_batch_vs_queue\": {:.3}}}",
         queue_pkt_mps, ring_pkt_mps, ring_pkt_batch_mps, pkt_ring_ratio, pkt_ring_batch_ratio
     );
+    // Robustness counters from one steady packet stress run. All three
+    // must stay zero on the healthy path (the chaos suite exercises the
+    // non-zero cases); snapshotting them catches silent regressions —
+    // e.g. a watchdog misfire reclaiming live leases.
+    {
+        let machine = mcapi::sim::Machine::new(mcapi::sim::MachineCfg::new(
+            4,
+            mcapi::os::OsProfile::linux_rt(),
+            mcapi::os::AffinityMode::PinnedSpread,
+        ));
+        let topo =
+            mcapi::coordinator::Topology::one_way(mcapi::coordinator::MsgKind::Packet, 400);
+        let r = mcapi::coordinator::run_stress_sim(
+            &machine,
+            mcapi::mcapi::types::RuntimeCfg::default(),
+            &topo,
+            mcapi::coordinator::StressOpts::default(),
+        );
+        assert_eq!(
+            (r.timeouts, r.poisons, r.leases_reclaimed),
+            (0, 0, 0),
+            "steady stress must not trip robustness counters"
+        );
+        println!(
+            "BENCH_JSON: {{\"stress_pkt_timeouts\": {}, \"stress_pkt_poisons\": {}, \
+             \"stress_pkt_leases_reclaimed\": {}, \"stress_pkt_latency_p999_ns\": {}}}",
+            r.timeouts,
+            r.poisons,
+            r.leases_reclaimed,
+            r.latency.p999()
+        );
+    }
     println!("micro_lockfree OK");
 }

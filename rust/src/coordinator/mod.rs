@@ -16,15 +16,20 @@
 //! * [`chaos`] — fault-injection harness: stress workloads under
 //!   deterministic kills/stalls with recovery-invariant checking and
 //!   reproducible per-seed reports (seeded mode + kill-point sweeps).
+//! * [`trace`] — the same drivers with the [`crate::obs`] plane armed:
+//!   drained stage-latency histograms, trace exporters, and the
+//!   event-stream replay verdict.
 
 pub mod chaos;
 pub mod experiment;
 pub mod metrics;
 pub mod runner;
 pub mod topology;
+pub mod trace;
 
 pub use chaos::{run_kill_sweep, run_seeded, ChaosOpts, ChaosReport, Scenario, Victim};
 pub use experiment::{Cell, CellResult, Matrix};
 pub use metrics::StressReport;
 pub use runner::{run_pingpong_real, run_pingpong_sim, run_stress_real, run_stress_sim, StressOpts};
 pub use topology::{ChannelSpec, MsgKind, Topology};
+pub use trace::{run_traced_chaos, run_traced_stress, TraceOpts, TraceRun};

@@ -35,6 +35,12 @@
 //! * [`harness`] — a small statistics/benchmark framework (criterion-like)
 //!   used by `cargo bench` targets, built in-tree because the reproduction
 //!   is fully offline.
+//! * [`obs`] — the zero-perturbation observability plane: per-lane lock-free
+//!   event rings, per-channel stage-latency histograms (send→commit→
+//!   doorbell→wakeup→recv), a named counter registry, chrome-trace/NDJSON
+//!   exporters and a trace-replay invariant checker. Gated by the
+//!   `obs-trace` feature (default on) + a runtime enable (default off);
+//!   adds zero priced simulator operations either way.
 //! * [`util`] — hand-rolled substrates: PRNG, histogram, TOML-subset config
 //!   parser, property-testing helper and CLI argument parsing.
 //!
@@ -48,6 +54,7 @@ pub mod lockfree;
 pub mod mcapi;
 pub mod model;
 pub mod mrapi;
+pub mod obs;
 pub mod os;
 pub mod runtime;
 pub mod sim;

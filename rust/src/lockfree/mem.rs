@@ -136,6 +136,14 @@ pub trait World: Sized + Send + Sync + 'static {
     fn work(ns: u64);
     /// Monotonic nanoseconds (virtual in the sim world) for latency stamps.
     fn now_ns() -> u64;
+    /// Unpriced timestamp peek for the observability plane (`src/obs/`):
+    /// wall-clock nanoseconds in the real world, the calling task's
+    /// virtual clock in the simulator — read *without charging any priced
+    /// operation*, so instrumented hot paths stay byte-identical in the
+    /// sim's coherence accounting. Returns 0 when no clock is reachable
+    /// (sim world off-plane). Never use for protocol decisions; use
+    /// [`World::now_ns`], which is priced on purpose.
+    fn timestamp_peek() -> u64;
     /// Allocate a synthetic address region for a payload buffer, used with
     /// [`World::touch`] and as a parking token for [`World::futex_wait`].
     fn alloc_region(bytes: usize) -> u64;
@@ -329,6 +337,11 @@ impl World for RealWorld {
     fn work(_ns: u64) {}
     #[inline]
     fn now_ns() -> u64 {
+        crate::os::monotonic_ns()
+    }
+    #[inline]
+    fn timestamp_peek() -> u64 {
+        // Real world: the clock read *is* free of model cost.
         crate::os::monotonic_ns()
     }
     fn alloc_region(bytes: usize) -> u64 {

@@ -178,6 +178,7 @@ impl<T, W: World> Nbb<T, W> {
                 } else {
                     InsertStatus::Full
                 };
+                crate::obs::bump(crate::obs::ctr::NBB_FULL);
                 return Err((status, v));
             }
         }
@@ -187,6 +188,7 @@ impl<T, W: World> Nbb<T, W> {
         unsafe { (*self.slots[idx].get()).write(v) };
         self.update.store(u + 2); // exit
         self.prod.own.set(u + 2);
+        crate::obs::bump(crate::obs::ctr::NBB_INSERT);
         Ok(())
     }
 
@@ -201,6 +203,7 @@ impl<T, W: World> Nbb<T, W> {
             u = self.update.load();
             self.cons.peer.set(u);
             if (u / 2).wrapping_sub(a / 2) == 0 {
+                crate::obs::bump(crate::obs::ctr::NBB_EMPTY);
                 return if u & 1 == 1 {
                     ReadStatus::EmptyButProducerInserting
                 } else {
@@ -214,6 +217,7 @@ impl<T, W: World> Nbb<T, W> {
         let v = unsafe { (*self.slots[idx].get()).assume_init_read() };
         self.ack.store(a + 2); // exit
         self.cons.own.set(a + 2);
+        crate::obs::bump(crate::obs::ctr::NBB_READ);
         ReadStatus::Ok(v)
     }
 
@@ -252,6 +256,7 @@ impl<T, W: World> Nbb<T, W> {
         let u2 = u + 2 * k as u64;
         self.update.store(u2); // exit: publishes all k items at once
         self.prod.own.set(u2);
+        crate::obs::add(crate::obs::ctr::NBB_INSERT, k as u64);
         Ok(k)
     }
 
@@ -288,6 +293,7 @@ impl<T, W: World> Nbb<T, W> {
         let a2 = a + 2 * k as u64;
         self.ack.store(a2); // exit: acknowledges all k items at once
         self.cons.own.set(a2);
+        crate::obs::add(crate::obs::ctr::NBB_READ, k as u64);
         Ok(k)
     }
 }

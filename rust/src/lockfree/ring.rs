@@ -35,9 +35,12 @@
 //! paper's comparison survives.
 
 use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, Ordering};
 
 use super::mem::{Atom64, CachePadded, World};
 use super::nbb::{BatchStatus, InsertStatus, SideCache};
+use crate::obs;
+use crate::obs::EventKind;
 
 /// Why a ring receive returned nothing — Kim's Table 1 read statuses
 /// with the payload-carrying variant stripped (payloads are consumed in
@@ -90,6 +93,10 @@ pub struct ChannelRing<W: World> {
     regions: Box<[u64]>,
     slot_len: usize,
     cap: u64,
+    /// Observability channel id for trace events ([`obs::CH_NONE`] when
+    /// unmounted). Host atomic: set once at channel connect, read with a
+    /// relaxed load only when tracing is enabled — never priced.
+    trace_id: AtomicU32,
 }
 
 unsafe impl<W: World> Send for ChannelRing<W> {}
@@ -116,7 +123,19 @@ impl<W: World> ChannelRing<W> {
             regions: regions.into_boxed_slice(),
             slot_len,
             cap: cap as u64,
+            trace_id: AtomicU32::new(obs::CH_NONE),
         }
+    }
+
+    /// Tag this ring with its channel id for trace events (called when
+    /// the MCAPI runtime mounts the ring on a connected channel).
+    pub fn set_trace_id(&self, id: u32) {
+        self.trace_id.store(id, Ordering::Relaxed);
+    }
+
+    /// The channel id trace events carry ([`obs::CH_NONE`] = unmounted).
+    pub fn trace_id(&self) -> u32 {
+        self.trace_id.load(Ordering::Relaxed)
     }
 
     /// Ring capacity in slots.
@@ -200,6 +219,10 @@ impl<W: World> ChannelRing<W> {
         self.write_slot(idx, data, data.len() as u32);
         self.update.store(u + 2); // exit: publish
         self.prod.own.set(u + 2);
+        if obs::tracing() {
+            obs::emit::<W>(EventKind::SendCommit, self.trace_id(), u / 2, data.len() as u32);
+            obs::bump(obs::ctr::RING_SEND);
+        }
         Ok(())
     }
 
@@ -230,6 +253,17 @@ impl<W: World> ChannelRing<W> {
         let u2 = u + 2 * k as u64;
         self.update.store(u2); // exit: publishes all k payloads at once
         self.prod.own.set(u2);
+        if obs::tracing() {
+            for (i, data) in payloads[..k].iter().enumerate() {
+                obs::emit::<W>(
+                    EventKind::SendCommit,
+                    self.trace_id(),
+                    u / 2 + i as u64,
+                    data.len() as u32,
+                );
+            }
+            obs::add(obs::ctr::RING_SEND, k as u64);
+        }
         Ok(k)
     }
 
@@ -260,6 +294,12 @@ impl<W: World> ChannelRing<W> {
         let u2 = u + 2 * k as u64;
         self.update.store(u2); // exit
         self.prod.own.set(u2);
+        if obs::tracing() {
+            for i in 0..k as u64 {
+                obs::emit::<W>(EventKind::SendCommit, self.trace_id(), u / 2 + i, width);
+            }
+            obs::add(obs::ctr::RING_SEND, k as u64);
+        }
         Ok(k)
     }
 
@@ -299,11 +339,22 @@ impl<W: World> ChannelRing<W> {
     pub fn recv_with<R>(&self, f: impl FnOnce(&[u8]) -> R) -> Result<R, RecvError> {
         let a = self.cons.own.get();
         self.avail_slots(a)?;
+        // Wakeup mark: the consumer has *observed* the payload as
+        // available — the doorbell→wakeup stage ends here.
+        if obs::tracing() {
+            obs::emit::<W>(EventKind::Wakeup, self.trace_id(), a / 2, 0);
+        }
         self.ack.store(a + 1); // enter: odd = read in progress
         let idx = ((a / 2) % self.cap) as usize;
-        let r = f(unsafe { self.slot_bytes(idx) });
+        let b = unsafe { self.slot_bytes(idx) };
+        let blen = b.len() as u32;
+        let r = f(b);
         self.ack.store(a + 2); // exit: acknowledge
         self.cons.own.set(a + 2);
+        if obs::tracing() {
+            obs::emit::<W>(EventKind::RecvReturn, self.trace_id(), a / 2, blen);
+            obs::bump(obs::ctr::RING_RECV);
+        }
         Ok(r)
     }
 
@@ -341,6 +392,11 @@ impl<W: World> ChannelRing<W> {
             RecvError::Empty => BatchStatus::WouldBlock,
         })?;
         let k = (avail as usize).min(max);
+        if obs::tracing() {
+            for i in 0..k as u64 {
+                obs::emit::<W>(EventKind::Wakeup, self.trace_id(), a / 2 + i, 0);
+            }
+        }
         self.ack.store(a + 1); // enter once
         for i in 0..k as u64 {
             let idx = ((a / 2 + i) % self.cap) as usize;
@@ -349,6 +405,13 @@ impl<W: World> ChannelRing<W> {
         let a2 = a + 2 * k as u64;
         self.ack.store(a2); // exit: acknowledges all k payloads at once
         self.cons.own.set(a2);
+        if obs::tracing() {
+            for i in 0..k as u64 {
+                let len = out[out.len() - k + i as usize].len() as u32;
+                obs::emit::<W>(EventKind::RecvReturn, self.trace_id(), a / 2 + i, len);
+            }
+            obs::add(obs::ctr::RING_RECV, k as u64);
+        }
         Ok(k)
     }
 
@@ -394,6 +457,16 @@ impl<W: World> ChannelRing<W> {
         let a2 = a + 2 * consumed;
         self.ack.store(a2); // exit: acknowledges everything consumed
         self.cons.own.set(a2);
+        if obs::tracing() {
+            // One Wakeup+RecvReturn pair per consumed slot (a dropped
+            // width-mismatch still consumed its sequence number — the
+            // trace must account for it or replay flags a false gap).
+            for i in 0..consumed {
+                obs::emit::<W>(EventKind::Wakeup, self.trace_id(), a / 2 + i, 0);
+                obs::emit::<W>(EventKind::RecvReturn, self.trace_id(), a / 2 + i, width);
+            }
+            obs::add(obs::ctr::RING_RECV, consumed);
+        }
         if matched == 0 && mismatched {
             return Err(ScalarBatchError::SizeMismatch);
         }

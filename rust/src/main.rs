@@ -11,11 +11,18 @@
 //! * `chaos`       — fault-injection gate: seeded kill/stall plans or a
 //!   full kill-point sweep, with recovery-invariant checking and a
 //!   reproducible per-seed report. Exits non-zero on invariant failure.
+//! * `trace`       — run a workload with the observability plane armed:
+//!   per-stage latency attribution, NDJSON / chrome-trace / metrics
+//!   exports, and the event-stream replay verdict. Exits non-zero when
+//!   the replay check fails.
 //! * `info`        — platform/runtime information.
 
 use mcapi::coordinator::chaos::{run_kill_sweep, run_seeded, ChaosOpts, Scenario, Victim};
 use mcapi::coordinator::experiment::{print_fig7, print_fig8, print_table2, Matrix};
-use mcapi::coordinator::{run_stress_real, run_stress_sim, MsgKind, StressOpts, Topology};
+use mcapi::coordinator::{
+    run_stress_real, run_stress_sim, run_traced_chaos, run_traced_stress, MsgKind, StressOpts,
+    Topology, TraceOpts,
+};
 use mcapi::mcapi::types::{BackendKind, RuntimeCfg};
 use mcapi::model::{stop_criterion, QpnModel, Workload};
 use mcapi::os::{AffinityMode, OsProfile};
@@ -47,6 +54,7 @@ fn run(args: &Args) -> mcapi::Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("model") => cmd_model(args),
         Some("chaos") => cmd_chaos(args),
+        Some("trace") => cmd_trace(args),
         Some("info") => cmd_info(args),
         Some(other) => {
             eprintln!("unknown command `{other}`");
@@ -73,6 +81,9 @@ fn usage() {
          \x20 model       fig6 [--kind K] [--solver artifact|native|sweep] | stopcrit [--measured-ns X]\n\
          \x20 chaos       --faults seed=N | --seed N [--scenario pkt|msg] [--msgs N]\n\
          \x20             --sweep [--victim prod|cons] (kill at every priced op in the window)\n\
+         \x20 trace       --kind message|packet|scalar --tx N --plane sim|real\n\
+         \x20             --cores N --batch N [--chaos-seed N] [--out PREFIX]\n\
+         \x20             (writes PREFIX.chrome.json / .ndjson / .metrics.json)\n\
          \x20 info"
     );
 }
@@ -111,9 +122,18 @@ fn cmd_stress(args: &Args) -> mcapi::Result<()> {
     println!("  elapsed        : {} ns", report.elapsed_ns);
     println!("  throughput     : {:.1} kmsg/s", report.kmsgs_per_s());
     println!("  latency mean   : {:.0} ns", report.latency_mean_ns());
-    println!("  latency p50/p99: {} / {} ns", report.latency.p50(), report.latency.p99());
+    println!(
+        "  latency p50/p99/p999: {} / {} / {} ns",
+        report.latency.p50(),
+        report.latency.p99(),
+        report.latency.p999()
+    );
     println!("  yields         : {}", report.yields);
     println!("  order errors   : {}", report.order_violations);
+    println!(
+        "  robustness     : timeouts={} poisons={} leases_reclaimed={}",
+        report.timeouts, report.poisons, report.leases_reclaimed
+    );
     if let Some(s) = report.sim {
         println!(
             "  sim: misses={} hits={} ctx={} syscalls={} bus_util={:.2}",
@@ -256,6 +276,52 @@ fn cmd_chaos(args: &Args) -> mcapi::Result<()> {
     };
     println!("{}", report.text);
     if !report.pass {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> mcapi::Result<()> {
+    let kind = MsgKind::parse(&args.get_or("kind", "packet"))
+        .ok_or_else(|| mcapi::Error::Config("bad --kind".into()))?;
+    let tx = args.get_u64_or("tx", 400)?;
+    let cores = args.get_u64_or("cores", 2)? as usize;
+    let batch = args.get_u64_or("batch", 1)? as usize;
+    let plane = args.get_or("plane", "sim");
+    let chaos_seed = args.get_u64("chaos-seed")?;
+    let out = args.get("out").map(str::to_owned);
+    args.finish()?;
+
+    let real = match plane.as_str() {
+        "real" => true,
+        "sim" => false,
+        other => return Err(mcapi::Error::Config(format!("bad --plane `{other}`"))),
+    };
+    let run = match chaos_seed {
+        Some(seed) => run_traced_chaos(seed),
+        None => run_traced_stress(
+            RuntimeCfg::default(),
+            TraceOpts { kind, tx, cores, batch, real },
+        ),
+    };
+    if let Some(r) = &run.stress {
+        println!("plane={plane} kind={} tx={tx}: {r:?}", kind.label());
+    }
+    if let Some(c) = &run.chaos {
+        println!("{}", c.text);
+    }
+    print!("{}", run.summary_text());
+    if let Some(prefix) = out {
+        std::fs::write(format!("{prefix}.chrome.json"), run.collector.chrome_trace_json())?;
+        std::fs::write(format!("{prefix}.ndjson"), run.collector.ndjson())?;
+        std::fs::write(
+            format!("{prefix}.metrics.json"),
+            run.collector.metrics_json(&run.counters, run.dropped),
+        )?;
+        println!("wrote {prefix}.chrome.json / {prefix}.ndjson / {prefix}.metrics.json");
+    }
+    println!("{}", run.bench_json_line());
+    if !run.replay_pass() {
         std::process::exit(1);
     }
     Ok(())

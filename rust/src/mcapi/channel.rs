@@ -38,6 +38,8 @@ use crate::lockfree::bitset::BitSet;
 use crate::lockfree::mem::{Atom32, World};
 use crate::lockfree::nbb::{BatchStatus, InsertStatus};
 use crate::lockfree::ring::{ChannelRing, RecvError, ScalarBatchError};
+use crate::obs;
+use crate::obs::EventKind;
 
 use super::queue::Entry;
 use super::request::{PendingOp, RequestHandle};
@@ -121,6 +123,7 @@ impl<W: World> McapiRuntime<W> {
         match attempt(ring) {
             Err(Status::WouldBlock) => {
                 self.doorbell.clear(ch);
+                obs::bump(obs::ctr::DOORBELL_RECHECK);
                 match attempt(ring) {
                     Ok(v) => {
                         self.doorbell.set(ch);
@@ -147,10 +150,23 @@ impl<W: World> McapiRuntime<W> {
             return Err(Status::MessageLimit);
         }
         self.check_peer_alive_tx(ch)?;
+        // Stage mark: API entry. Seq = next committed insert (u/2; the
+        // producer's counter is even here — SPSC, and we are the
+        // producer). A retried full send re-emits, and the collector
+        // keeps the last attempt (the one that pairs with the commit).
+        if obs::tracing() {
+            let (u, _) = self.ring(ch).counters_peek();
+            obs::emit::<W>(EventKind::SendEnter, ch as u32, u / 2, data.len() as u32);
+        }
         match self.ring(ch).send(data) {
             Ok(()) => {
                 // Flag AFTER the ring's publishing store (Doorbell docs).
                 self.doorbell.set(ch);
+                if obs::tracing() {
+                    let (u, _) = self.ring(ch).counters_peek();
+                    obs::emit::<W>(EventKind::DoorbellSet, ch as u32, (u / 2).saturating_sub(1), 0);
+                    obs::bump(obs::ctr::DOORBELL_SET);
+                }
                 self.chan_waits[ch].wake_all::<W>();
                 Ok(())
             }
@@ -176,9 +192,18 @@ impl<W: World> McapiRuntime<W> {
     /// Lock-free scalar send (`width` bytes: 1/2/4/8).
     pub(super) fn ring_sclr_send(&self, ch: usize, value: u64, width: u32) -> Result<(), Status> {
         self.check_peer_alive_tx(ch)?;
+        if obs::tracing() {
+            let (u, _) = self.ring(ch).counters_peek();
+            obs::emit::<W>(EventKind::SendEnter, ch as u32, u / 2, width);
+        }
         match self.ring(ch).send_scalar(value, width) {
             Ok(()) => {
                 self.doorbell.set(ch);
+                if obs::tracing() {
+                    let (u, _) = self.ring(ch).counters_peek();
+                    obs::emit::<W>(EventKind::DoorbellSet, ch as u32, (u / 2).saturating_sub(1), 0);
+                    obs::bump(obs::ctr::DOORBELL_SET);
+                }
                 self.chan_waits[ch].wake_all::<W>();
                 Ok(())
             }
@@ -209,6 +234,7 @@ impl<W: World> McapiRuntime<W> {
     fn check_peer_alive_tx(&self, ch: usize) -> Result<(), Status> {
         if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_RX_DEAD != 0 {
             self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+            obs::bump(obs::ctr::POISONS);
             return Err(Status::EndpointDead);
         }
         Ok(())
@@ -225,6 +251,7 @@ impl<W: World> McapiRuntime<W> {
                 if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_TX_DEAD != 0 =>
             {
                 self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                obs::bump(obs::ctr::POISONS);
                 Err(Status::EndpointDead)
             }
             other => other,
@@ -268,9 +295,34 @@ impl<W: World> McapiRuntime<W> {
                     return Err(Status::MessageLimit);
                 }
                 self.check_peer_alive_tx(ch)?;
+                // Stage mark per payload offered; over-emitted enters for
+                // the unsent tail never pair and are dropped harmlessly.
+                if obs::tracing() {
+                    let (u, _) = self.ring(ch).counters_peek();
+                    for (i, data) in payloads[..valid].iter().enumerate() {
+                        obs::emit::<W>(
+                            EventKind::SendEnter,
+                            ch as u32,
+                            u / 2 + i as u64,
+                            data.len() as u32,
+                        );
+                    }
+                }
                 match self.ring(ch).send_batch(&payloads[..valid]) {
                     Ok(n) => {
                         self.doorbell.set(ch);
+                        if obs::tracing() {
+                            let (u, _) = self.ring(ch).counters_peek();
+                            for i in 0..n as u64 {
+                                obs::emit::<W>(
+                                    EventKind::DoorbellSet,
+                                    ch as u32,
+                                    (u / 2).saturating_sub(n as u64) + i,
+                                    n as u32,
+                                );
+                            }
+                            obs::bump(obs::ctr::DOORBELL_SET);
+                        }
                         self.chan_waits[ch].wake_all::<W>();
                         Ok(n)
                     }
@@ -348,9 +400,27 @@ impl<W: World> McapiRuntime<W> {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Scalar)?;
                 self.check_peer_alive_tx(ch)?;
+                if obs::tracing() {
+                    let (u, _) = self.ring(ch).counters_peek();
+                    for i in 0..values.len() as u64 {
+                        obs::emit::<W>(EventKind::SendEnter, ch as u32, u / 2 + i, 8);
+                    }
+                }
                 match self.ring(ch).send_scalars(values, 8) {
                     Ok(n) => {
                         self.doorbell.set(ch);
+                        if obs::tracing() {
+                            let (u, _) = self.ring(ch).counters_peek();
+                            for i in 0..n as u64 {
+                                obs::emit::<W>(
+                                    EventKind::DoorbellSet,
+                                    ch as u32,
+                                    (u / 2).saturating_sub(n as u64) + i,
+                                    n as u32,
+                                );
+                            }
+                            obs::bump(obs::ctr::DOORBELL_SET);
+                        }
                         self.chan_waits[ch].wake_all::<W>();
                         Ok(n)
                     }

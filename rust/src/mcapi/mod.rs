@@ -37,6 +37,7 @@ use crate::lockfree::mem::{Atom32, Atom64, World};
 use crate::lockfree::nbw::Nbw;
 use crate::lockfree::ring::ChannelRing;
 use crate::mrapi::rwlock::RwLock;
+use crate::obs;
 use crate::mrapi::shmem::{Lease, Partition};
 use channel::Doorbell;
 use queue::{entry_state, Entry, LockFreeQueue, LockedQueue};
@@ -83,11 +84,19 @@ const YIELDS_BEFORE_PARK: u32 = 4;
 struct WaitCell {
     seq: AtomicU64,
     waiters: AtomicU32,
+    /// Observability id for park/unpark trace events: the channel slot,
+    /// or `obs::CH_ENDPOINT_BIT | ep` for endpoint cells ([`obs::CH_NONE`]
+    /// until tagged). Host atomic, never priced.
+    trace_ch: AtomicU32,
 }
 
 impl WaitCell {
     fn new() -> Self {
-        WaitCell { seq: AtomicU64::new(0), waiters: AtomicU32::new(0) }
+        WaitCell {
+            seq: AtomicU64::new(0),
+            waiters: AtomicU32::new(0),
+            trace_ch: AtomicU32::new(obs::CH_NONE),
+        }
     }
 
     /// Futex address token: the cell's own location (unique and stable;
@@ -246,6 +255,28 @@ impl<W: World> McapiRuntime<W> {
                 },
             })
             .collect();
+        // Tag each fast-path structure with its slot index so trace
+        // events carry a stable channel/endpoint id (host atomics; free).
+        let channels: Vec<ChannelSlot<W>> = channels;
+        for (ch, slot) in channels.iter().enumerate() {
+            if let Some(ring) = &slot.ring {
+                ring.set_trace_id(ch as u32);
+            }
+        }
+        let endpoints: Vec<EndpointSlot<W>> = endpoints;
+        for (ep, slot) in endpoints.iter().enumerate() {
+            if let QueueImpl::LockFree(q) = &slot.queue {
+                q.set_trace_id(ep as u32);
+            }
+        }
+        let chan_waits: Vec<WaitCell> = (0..cfg.max_channels).map(|_| WaitCell::new()).collect();
+        for (ch, cell) in chan_waits.iter().enumerate() {
+            cell.trace_ch.store(ch as u32, Ordering::Relaxed);
+        }
+        let ep_waits: Vec<WaitCell> = (0..cfg.max_endpoints).map(|_| WaitCell::new()).collect();
+        for (ep, cell) in ep_waits.iter().enumerate() {
+            cell.trace_ch.store(obs::CH_ENDPOINT_BIT | ep as u32, Ordering::Relaxed);
+        }
         Arc::new(McapiRuntime {
             endpoints,
             channels,
@@ -260,8 +291,8 @@ impl<W: World> McapiRuntime<W> {
             ep_owner_shadow: (0..cfg.max_endpoints).map(|_| AtomicU32::new(0)).collect(),
             chan_poison: (0..cfg.max_channels).map(|_| AtomicU32::new(0)).collect(),
             buffer_holder: (0..cfg.pool_buffers).map(|_| AtomicU32::new(0)).collect(),
-            chan_waits: (0..cfg.max_channels).map(|_| WaitCell::new()).collect(),
-            ep_waits: (0..cfg.max_endpoints).map(|_| WaitCell::new()).collect(),
+            chan_waits,
+            ep_waits,
             stat_timeouts: AtomicU64::new(0),
             stat_poisons: AtomicU64::new(0),
             stat_leases_reclaimed: AtomicU64::new(0),
@@ -406,6 +437,7 @@ impl<W: World> McapiRuntime<W> {
             reclaimed += 1;
         }
         self.stat_leases_reclaimed.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        obs::add(obs::ctr::LEASES_RECLAIMED, reclaimed as u64);
         // 3) Wake waiters parked on the dead node's endpoints (blocked
         //    senders re-attempt, see the dead-destination check, and
         //    surface `EndpointDead`).
@@ -628,6 +660,7 @@ impl<W: World> McapiRuntime<W> {
             Ok(())
         } else {
             self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+            obs::bump(obs::ctr::POISONS);
             Err(Status::EndpointDead)
         }
     }
@@ -932,6 +965,7 @@ impl<W: World> McapiRuntime<W> {
                     self.global.with_read(|| self.channel_ready(ch, ChannelKind::Packet))?;
                 if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_RX_DEAD != 0 {
                     self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                    obs::bump(obs::ctr::POISONS);
                     return Err(Status::EndpointDead);
                 }
                 let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
@@ -986,6 +1020,7 @@ impl<W: World> McapiRuntime<W> {
                         if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_TX_DEAD != 0 =>
                     {
                         self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                        obs::bump(obs::ctr::POISONS);
                         return Err(Status::EndpointDead);
                     }
                     other => other?,
@@ -1110,6 +1145,7 @@ impl<W: World> McapiRuntime<W> {
                 Err(s) if s.is_would_block() => {
                     if W::now_ns() >= deadline {
                         self.stat_timeouts.fetch_add(1, Ordering::Relaxed);
+                        obs::bump(obs::ctr::TIMEOUTS);
                         return Err(Status::Timeout);
                     }
                     // Table 1: peer mid-operation — spin within budget.
@@ -1130,7 +1166,16 @@ impl<W: World> McapiRuntime<W> {
                             return Ok(v);
                         }
                         Err(s2) if s2.is_would_block() => {
+                            if obs::tracing() {
+                                let tch = cell.trace_ch.load(Ordering::Relaxed);
+                                obs::emit::<W>(obs::EventKind::BlockPark, tch, seen, bo.yields());
+                                obs::bump(obs::ctr::BLOCK_PARKS);
+                            }
                             cell.wait::<W>(seen, Some(deadline));
+                            if obs::tracing() {
+                                let tch = cell.trace_ch.load(Ordering::Relaxed);
+                                obs::emit::<W>(obs::EventKind::BlockUnpark, tch, seen, 0);
+                            }
                             cell.finish();
                         }
                         Err(e) => {
@@ -1259,6 +1304,7 @@ impl<W: World> McapiRuntime<W> {
                 if let Some(s) = ready {
                     if s == Status::EndpointDead {
                         self.stat_poisons.fetch_add(1, Ordering::Relaxed);
+                        obs::bump(obs::ctr::POISONS);
                     }
                     self.requests.complete(h, s);
                     let s = self.requests.reap(h).unwrap_or(Status::InvalidRequest);
@@ -1267,6 +1313,7 @@ impl<W: World> McapiRuntime<W> {
             }
             if W::now_ns() >= deadline {
                 self.stat_timeouts.fetch_add(1, Ordering::Relaxed);
+                obs::bump(obs::ctr::TIMEOUTS);
                 return Err(Status::Timeout);
             }
             if !bo.immediate() {

@@ -13,6 +13,8 @@ use crate::lockfree::bitset::BitSet;
 use crate::lockfree::mem::World;
 use crate::lockfree::nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 use crate::mcapi::types::{Status, PRIORITIES};
+use crate::obs;
+use crate::obs::EventKind;
 
 /// Queue-entry FSM states (Figure 4).
 pub mod entry_state {
@@ -173,6 +175,13 @@ pub struct LockFreeQueue<W: World> {
     /// a plain host atomic so simulated worlds never price it.
     #[cfg(debug_assertions)]
     consumer: std::sync::atomic::AtomicU64,
+    /// Observability endpoint id ([`obs::CH_NONE`] when unmounted) plus
+    /// push/pop sequence counters for trace events. All host atomics —
+    /// never priced, touched only when tracing is enabled (except the
+    /// one-time id store at runtime construction).
+    trace_id: std::sync::atomic::AtomicU32,
+    trace_push_seq: std::sync::atomic::AtomicU64,
+    trace_pop_seq: std::sync::atomic::AtomicU64,
 }
 
 /// Small monotone per-thread token for the single-consumer debug guard.
@@ -202,6 +211,36 @@ impl<W: World> LockFreeQueue<W> {
             scratch: UnsafeCell::new(vec![0u64; (producers + 63) / 64]),
             #[cfg(debug_assertions)]
             consumer: std::sync::atomic::AtomicU64::new(0),
+            trace_id: std::sync::atomic::AtomicU32::new(obs::CH_NONE),
+            trace_push_seq: std::sync::atomic::AtomicU64::new(0),
+            trace_pop_seq: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Tag this queue with its endpoint slot for trace events (the
+    /// runtime calls it once at construction; the emitted channel id is
+    /// `obs::CH_ENDPOINT_BIT | ep`).
+    pub fn set_trace_id(&self, ep: u32) {
+        use std::sync::atomic::Ordering;
+        self.trace_id.store(obs::CH_ENDPOINT_BIT | ep, Ordering::Relaxed);
+    }
+
+    /// Trace-event channel id carried by this queue's events.
+    fn trace_ch(&self) -> u32 {
+        use std::sync::atomic::Ordering;
+        self.trace_id.load(Ordering::Relaxed)
+    }
+
+    /// Emit `n` QueuePop trace events (single consumer, so the plain
+    /// fetch_add sequence matches delivery order).
+    fn note_pops(&self, prio: usize, n: u64) {
+        if obs::tracing() {
+            use std::sync::atomic::Ordering;
+            let seq = self.trace_pop_seq.fetch_add(n, Ordering::Relaxed);
+            for i in 0..n {
+                obs::emit::<W>(EventKind::QueuePop, self.trace_ch(), seq + i, prio as u32);
+            }
+            obs::add(obs::ctr::QUEUE_POP, n);
         }
     }
 
@@ -235,6 +274,12 @@ impl<W: World> LockFreeQueue<W> {
             Ok(()) => {
                 // Flag AFTER the insert's release store (see type docs).
                 self.occupancy[prio].set(lane);
+                if obs::tracing() {
+                    use std::sync::atomic::Ordering;
+                    let seq = self.trace_push_seq.fetch_add(1, Ordering::Relaxed);
+                    obs::emit::<W>(EventKind::QueuePush, self.trace_ch(), seq, prio as u32);
+                    obs::bump(obs::ctr::QUEUE_PUSH);
+                }
                 Ok(())
             }
             Err((s, e)) => {
@@ -268,6 +313,14 @@ impl<W: World> LockFreeQueue<W> {
         match self.lanes[prio][lane].insert_batch(entries) {
             Ok(n) => {
                 self.occupancy[prio].set(lane);
+                if obs::tracing() {
+                    use std::sync::atomic::Ordering;
+                    let seq = self.trace_push_seq.fetch_add(n as u64, Ordering::Relaxed);
+                    for i in 0..n as u64 {
+                        obs::emit::<W>(EventKind::QueuePush, self.trace_ch(), seq + i, prio as u32);
+                    }
+                    obs::add(obs::ctr::QUEUE_PUSH, n as u64);
+                }
                 Ok(n)
             }
             Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
@@ -300,6 +353,7 @@ impl<W: World> LockFreeQueue<W> {
                 match self.lanes[prio][lane].read() {
                     ReadStatus::Ok(e) => {
                         *cursor = (lane + 1) % self.producers;
+                        self.note_pops(prio, 1);
                         return Ok(e);
                     }
                     ReadStatus::EmptyButProducerInserting => saw_peer_active = true,
@@ -311,6 +365,7 @@ impl<W: World> LockFreeQueue<W> {
                             ReadStatus::Ok(e) => {
                                 occ.set(lane); // conservatively re-flag (may hold more)
                                 *cursor = (lane + 1) % self.producers;
+                                self.note_pops(prio, 1);
                                 return Ok(e);
                             }
                             ReadStatus::EmptyButProducerInserting => {
@@ -367,6 +422,7 @@ impl<W: World> LockFreeQueue<W> {
                     Ok(n) => {
                         total += n;
                         *cursor = (lane + 1) % self.producers;
+                        self.note_pops(prio, n as u64);
                     }
                     Err(BatchStatus::PeerActive) => saw_peer_active = true,
                     Err(BatchStatus::WouldBlock) => {
@@ -376,6 +432,7 @@ impl<W: World> LockFreeQueue<W> {
                                 occ.set(lane);
                                 total += n;
                                 *cursor = (lane + 1) % self.producers;
+                                self.note_pops(prio, n as u64);
                             }
                             Err(BatchStatus::PeerActive) => {
                                 occ.set(lane);

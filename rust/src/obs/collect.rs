@@ -1,0 +1,476 @@
+//! Collector: drained events → stage-latency histograms, exporters, and
+//! the trace-replay invariant checker.
+//!
+//! The collector pairs the five per-message stage marks by `(channel,
+//! seq)` into the four stage latencies:
+//!
+//! | stage | from → to | what it measures |
+//! |---|---|---|
+//! | `send_commit` | `SendEnter` → `SendCommit` | API entry to ring publish (incl. full-ring retries: the *last* enter before the commit wins) |
+//! | `commit_doorbell` | `SendCommit` → `DoorbellSet` | publish to receiver-visible doorbell |
+//! | `doorbell_wakeup` | `DoorbellSet` → `Wakeup` | doorbell to the receiver's first successful probe (poll or futex-wake latency) |
+//! | `wakeup_recv` | `Wakeup` → `RecvReturn` | probe to payload handed to the caller (slot copy + ack) |
+//!
+//! Timestamps come from each *emitting* task's clock: exact deltas
+//! within one side (send→commit, wakeup→recv), cross-task deltas are
+//! exact on the real plane (one wall clock) and approximate on the sim
+//! (per-task virtual clocks) — negative skews clamp to zero.
+//!
+//! The replay checker re-derives the FIFO / no-loss / no-dup invariants
+//! from nothing but the event stream, giving the chaos harness a second
+//! ground truth independent of the ring counters.
+
+use std::collections::BTreeMap;
+
+use crate::util::Histogram;
+
+use super::event::{Event, EventKind, CH_ENDPOINT_BIT};
+
+/// Stage names, pairing order.
+pub const STAGES: [&str; 4] =
+    ["send_commit", "commit_doorbell", "doorbell_wakeup", "wakeup_recv"];
+
+/// The four per-channel stage-latency histograms.
+#[derive(Debug, Default)]
+pub struct StageSet {
+    /// `SendEnter` → `SendCommit`.
+    pub send_commit: Histogram,
+    /// `SendCommit` → `DoorbellSet`.
+    pub commit_doorbell: Histogram,
+    /// `DoorbellSet` → `Wakeup`.
+    pub doorbell_wakeup: Histogram,
+    /// `Wakeup` → `RecvReturn`.
+    pub wakeup_recv: Histogram,
+}
+
+impl StageSet {
+    /// Histograms in [`STAGES`] order.
+    pub fn by_stage(&self) -> [&Histogram; 4] {
+        [&self.send_commit, &self.commit_doorbell, &self.doorbell_wakeup, &self.wakeup_recv]
+    }
+
+    fn record(&mut self, stage: usize, ns: u64) {
+        match stage {
+            0 => self.send_commit.record(ns),
+            1 => self.commit_doorbell.record(ns),
+            2 => self.doorbell_wakeup.record(ns),
+            3 => self.wakeup_recv.record(ns),
+            _ => unreachable!("stage index"),
+        }
+    }
+
+    /// Fold `other` into `self` (per-channel → merged view).
+    pub fn merge(&mut self, other: &StageSet) {
+        self.send_commit.merge(&other.send_commit);
+        self.commit_doorbell.merge(&other.commit_doorbell);
+        self.doorbell_wakeup.merge(&other.doorbell_wakeup);
+        self.wakeup_recv.merge(&other.wakeup_recv);
+    }
+
+    /// Compact JSON object, one [`Histogram::to_json`] per stage.
+    pub fn to_json(&self) -> String {
+        let h = self.by_stage();
+        format!(
+            "{{\"send_commit\":{},\"commit_doorbell\":{},\"doorbell_wakeup\":{},\"wakeup_recv\":{}}}",
+            h[0].to_json(),
+            h[1].to_json(),
+            h[2].to_json(),
+            h[3].to_json()
+        )
+    }
+}
+
+/// One completed stage span (for the chrome-trace duration events).
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    channel: u32,
+    seq: u64,
+    stage: usize,
+    start_ns: u64,
+    dur_ns: u64,
+}
+
+/// Stage-mark timestamps pending completion for one `(channel, seq)`.
+type Pending = [Option<u64>; 5];
+
+fn mark_index(kind: EventKind) -> Option<usize> {
+    Some(match kind {
+        EventKind::SendEnter => 0,
+        EventKind::SendCommit => 1,
+        EventKind::DoorbellSet => 2,
+        EventKind::Wakeup => 3,
+        EventKind::RecvReturn => 4,
+        _ => return None,
+    })
+}
+
+/// Drained-event aggregator. Feed with [`Collector::ingest`] (events in
+/// timestamp order — [`Collector::from_events`] sorts for you), then
+/// read the histograms / exports.
+#[derive(Debug, Default)]
+pub struct Collector {
+    /// Every ingested event, in ingest order.
+    pub events: Vec<Event>,
+    channels: BTreeMap<u32, StageSet>,
+    pending: BTreeMap<(u32, u64), Pending>,
+    spans: Vec<Span>,
+}
+
+impl Collector {
+    /// Empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a drained batch: stable-sorts by timestamp (preserving
+    /// per-lane emit order on ties) and ingests everything.
+    pub fn from_events(mut events: Vec<Event>) -> Self {
+        events.sort_by_key(|e| e.ts_ns);
+        let mut c = Collector::new();
+        for ev in events {
+            c.ingest(ev);
+        }
+        c
+    }
+
+    /// Feed one event: stores it, and on a `RecvReturn` completes the
+    /// `(channel, seq)` pair chain into stage samples. Repeated marks for
+    /// the same `(channel, seq)` overwrite — the last attempt wins (a
+    /// send retried on a full ring re-enters; only the successful pass
+    /// pairs with the commit).
+    pub fn ingest(&mut self, ev: Event) {
+        self.events.push(ev);
+        let Some(idx) = mark_index(ev.kind) else {
+            return;
+        };
+        // Stage pairing applies to connected channels only; queue and
+        // park events ride along in the dump but have no stage chain.
+        if ev.channel & CH_ENDPOINT_BIT != 0 {
+            return;
+        }
+        let key = (ev.channel, ev.seq);
+        let marks = self.pending.entry(key).or_default();
+        marks[idx] = Some(ev.ts_ns);
+        if idx == 4 {
+            let marks = self.pending.remove(&key).unwrap();
+            let set = self.channels.entry(ev.channel).or_default();
+            for stage in 0..4 {
+                if let (Some(a), Some(b)) = (marks[stage], marks[stage + 1]) {
+                    let dur = b.saturating_sub(a);
+                    set.record(stage, dur);
+                    self.spans.push(Span {
+                        channel: ev.channel,
+                        seq: ev.seq,
+                        stage,
+                        start_ns: a.min(b),
+                        dur_ns: dur,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Per-channel stage histograms (connected channels only).
+    pub fn channels(&self) -> &BTreeMap<u32, StageSet> {
+        &self.channels
+    }
+
+    /// All channels folded into one stage set.
+    pub fn merged_stages(&self) -> StageSet {
+        let mut all = StageSet::default();
+        for set in self.channels.values() {
+            all.merge(set);
+        }
+        all
+    }
+
+    // -- exporters ----------------------------------------------------------
+
+    /// NDJSON: one JSON object per event per line, in ingest order.
+    pub fn ndjson(&self) -> String {
+        let mut out = String::with_capacity(self.events.len() * 96);
+        for ev in &self.events {
+            out.push_str(&format!(
+                "{{\"kind\":\"{}\",\"ch\":{},\"seq\":{},\"ts_ns\":{},\"aux\":{},\"lane\":{}}}\n",
+                ev.kind.label(),
+                ev.channel,
+                ev.seq,
+                ev.ts_ns,
+                ev.aux,
+                ev.lane
+            ));
+        }
+        out
+    }
+
+    /// Chrome-trace JSON (open in `chrome://tracing` / Perfetto): every
+    /// raw event as an instant, every completed stage as a duration
+    /// event. `pid` = channel id, `tid` = lane; timestamps in µs.
+    pub fn chrome_trace_json(&self) -> String {
+        let mut items = Vec::with_capacity(self.events.len() + self.spans.len());
+        for ev in &self.events {
+            items.push(format!(
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\"pid\":{},\"tid\":{},\
+                 \"args\":{{\"seq\":{},\"aux\":{}}}}}",
+                ev.kind.label(),
+                ev.ts_ns as f64 / 1000.0,
+                ev.channel,
+                ev.lane,
+                ev.seq,
+                ev.aux
+            ));
+        }
+        for sp in &self.spans {
+            items.push(format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\
+                 \"tid\":{},\"args\":{{\"seq\":{}}}}}",
+                STAGES[sp.stage],
+                sp.start_ns as f64 / 1000.0,
+                sp.dur_ns as f64 / 1000.0,
+                sp.channel,
+                sp.stage,
+                sp.seq
+            ));
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[{}]}}\n",
+            items.join(",\n")
+        )
+    }
+
+    /// Metrics snapshot JSON: event totals, the counter registry, merged
+    /// and per-channel stage histograms.
+    pub fn metrics_json(&self, counters: &[(String, u64)], dropped: u64) -> String {
+        let ctrs = counters
+            .iter()
+            .map(|(n, v)| format!("\"{}\":{}", n.replace('"', ""), v))
+            .collect::<Vec<_>>()
+            .join(",");
+        let chans = self
+            .channels
+            .iter()
+            .map(|(ch, set)| format!("\"{ch}\":{}", set.to_json()))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"events\":{},\"dropped\":{},\"counters\":{{{}}},\"stages\":{},\
+             \"channels\":{{{}}}}}\n",
+            self.events.len(),
+            dropped,
+            ctrs,
+            self.merged_stages().to_json(),
+            chans
+        )
+    }
+
+    // -- replay checker -----------------------------------------------------
+
+    /// Re-validate FIFO / no-loss / no-dup from the event stream alone.
+    ///
+    /// Per connected channel, in stream order: `SendCommit` sequences
+    /// must increase by exactly 1 from the first observed (the producer
+    /// publishes a gapless, duplicate-free sequence), `RecvReturn`
+    /// sequences likewise (the consumer receives that sequence in order,
+    /// possibly a shorter prefix — in-flight or crash-salvaged tails are
+    /// not loss), and nothing may be received before it was committed.
+    pub fn replay_check(&self) -> ReplayReport {
+        let mut per_chan: BTreeMap<u32, (Vec<u64>, Vec<u64>)> = BTreeMap::new();
+        for ev in &self.events {
+            if ev.channel & CH_ENDPOINT_BIT != 0 {
+                continue;
+            }
+            match ev.kind {
+                EventKind::SendCommit => {
+                    per_chan.entry(ev.channel).or_default().0.push(ev.seq)
+                }
+                EventKind::RecvReturn => {
+                    per_chan.entry(ev.channel).or_default().1.push(ev.seq)
+                }
+                _ => {}
+            }
+        }
+        let mut rep = ReplayReport {
+            channels: per_chan.len(),
+            ..ReplayReport::default()
+        };
+        let mut fails = Vec::new();
+        for (ch, (commits, recvs)) in &per_chan {
+            rep.commits += commits.len() as u64;
+            rep.recvs += recvs.len() as u64;
+            for (what, seqs) in [("commit", commits), ("recv", recvs)] {
+                for w in seqs.windows(2) {
+                    if w[1] <= w[0] {
+                        rep.dups += 1;
+                        fails.push(format!("ch{ch}: {what} seq {} after {} (dup/reorder)", w[1], w[0]));
+                    } else if w[1] != w[0] + 1 {
+                        rep.lost += w[1] - w[0] - 1;
+                        fails.push(format!("ch{ch}: {what} gap {}..{}", w[0] + 1, w[1]));
+                    }
+                }
+            }
+            if let (Some(&rf), Some(&cf)) = (recvs.first(), commits.first()) {
+                if rf < cf {
+                    fails.push(format!("ch{ch}: recv seq {rf} before first commit {cf}"));
+                }
+            }
+            if recvs.len() > commits.len() {
+                fails.push(format!(
+                    "ch{ch}: {} recvs exceed {} commits",
+                    recvs.len(),
+                    commits.len()
+                ));
+            }
+        }
+        rep.pass = fails.is_empty();
+        rep.text = if rep.pass {
+            format!(
+                "replay channels={} commits={} recvs={} verdict=PASS",
+                rep.channels, rep.commits, rep.recvs
+            )
+        } else {
+            format!(
+                "replay channels={} commits={} recvs={} verdict=FAIL[{}]",
+                rep.channels,
+                rep.commits,
+                rep.recvs,
+                fails.join("; ")
+            )
+        };
+        rep
+    }
+}
+
+/// Verdict of [`Collector::replay_check`].
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    /// Connected channels that emitted commit/recv events.
+    pub channels: usize,
+    /// Total `SendCommit` events checked.
+    pub commits: u64,
+    /// Total `RecvReturn` events checked.
+    pub recvs: u64,
+    /// Sequence-gap messages (loss).
+    pub lost: u64,
+    /// Duplicate / reordered sequences.
+    pub dups: u64,
+    /// True when every invariant held.
+    pub pass: bool,
+    /// One-line report.
+    pub text: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, ch: u32, seq: u64, ts: u64) -> Event {
+        Event { kind, channel: ch, seq, ts_ns: ts, aux: 0, lane: 0 }
+    }
+
+    fn full_chain(ch: u32, seq: u64, t0: u64) -> [Event; 5] {
+        [
+            ev(EventKind::SendEnter, ch, seq, t0),
+            ev(EventKind::SendCommit, ch, seq, t0 + 10),
+            ev(EventKind::DoorbellSet, ch, seq, t0 + 15),
+            ev(EventKind::Wakeup, ch, seq, t0 + 40),
+            ev(EventKind::RecvReturn, ch, seq, t0 + 52),
+        ]
+    }
+
+    #[test]
+    fn pairing_populates_all_four_stages() {
+        let mut events = Vec::new();
+        for seq in 0..8 {
+            events.extend(full_chain(3, seq, seq * 1000));
+        }
+        let c = Collector::from_events(events);
+        let set = &c.channels()[&3];
+        for (h, name) in set.by_stage().iter().zip(STAGES) {
+            assert_eq!(h.count(), 8, "stage {name}");
+        }
+        assert_eq!(set.send_commit.max(), 10);
+        assert_eq!(set.commit_doorbell.max(), 5);
+        assert_eq!(set.doorbell_wakeup.max(), 25);
+        assert_eq!(set.wakeup_recv.max(), 12);
+        assert!(c.replay_check().pass);
+    }
+
+    #[test]
+    fn retried_send_enter_uses_last_attempt() {
+        let mut events = vec![ev(EventKind::SendEnter, 1, 0, 0)]; // failed attempt
+        events.extend(full_chain(1, 0, 500));
+        let c = Collector::from_events(events);
+        // 510 - 500, not 510 - 0.
+        assert_eq!(c.channels()[&1].send_commit.max(), 10);
+    }
+
+    #[test]
+    fn replay_flags_gap_dup_and_early_recv() {
+        let base: Vec<Event> = [0, 1, 3]
+            .iter()
+            .map(|&s| ev(EventKind::SendCommit, 2, s, s * 10))
+            .collect();
+        let r = Collector::from_events(base).replay_check();
+        assert!(!r.pass);
+        assert_eq!(r.lost, 1);
+
+        let dup = vec![
+            ev(EventKind::RecvReturn, 2, 4, 10),
+            ev(EventKind::RecvReturn, 2, 4, 20),
+        ];
+        let r = Collector::from_events(dup).replay_check();
+        assert!(!r.pass);
+        assert_eq!(r.dups, 1);
+
+        let early = vec![
+            ev(EventKind::SendCommit, 2, 5, 10),
+            ev(EventKind::RecvReturn, 2, 4, 20),
+        ];
+        assert!(!Collector::from_events(early).replay_check().pass);
+    }
+
+    #[test]
+    fn unreceived_tail_is_not_loss() {
+        let mut events = Vec::new();
+        for seq in 0..6 {
+            events.push(ev(EventKind::SendCommit, 0, seq, seq * 10));
+        }
+        for seq in 0..4 {
+            events.push(ev(EventKind::RecvReturn, 0, seq, 1000 + seq * 10));
+        }
+        let r = Collector::from_events(events).replay_check();
+        assert!(r.pass, "{}", r.text);
+        assert_eq!((r.commits, r.recvs), (6, 4));
+    }
+
+    #[test]
+    fn exports_are_wellformed() {
+        let mut events = Vec::new();
+        for seq in 0..3 {
+            events.extend(full_chain(1, seq, seq * 100));
+        }
+        let c = Collector::from_events(events);
+        let chrome = c.chrome_trace_json();
+        assert!(chrome.contains("\"traceEvents\""));
+        assert!(chrome.contains("\"ph\":\"X\""));
+        assert!(chrome.contains("doorbell_wakeup"));
+        let nd = c.ndjson();
+        assert_eq!(nd.lines().count(), 15);
+        assert!(nd.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+        let metrics = c.metrics_json(&[("timeouts".into(), 2)], 0);
+        assert!(metrics.contains("\"timeouts\":2"));
+        assert!(metrics.contains("\"wakeup_recv\""));
+    }
+
+    #[test]
+    fn queue_events_ride_along_without_stage_pairing() {
+        let events = vec![
+            ev(EventKind::QueuePush, CH_ENDPOINT_BIT | 2, 0, 5),
+            ev(EventKind::QueuePop, CH_ENDPOINT_BIT | 2, 0, 9),
+        ];
+        let c = Collector::from_events(events);
+        assert!(c.channels().is_empty());
+        assert_eq!(c.events.len(), 2);
+        assert!(c.replay_check().pass);
+    }
+}

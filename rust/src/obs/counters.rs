@@ -1,0 +1,206 @@
+//! Named monotonic counter registry.
+//!
+//! Generalizes the ad-hoc per-runtime `stat_timeouts` /` stat_poisons` /
+//! `stat_leases_reclaimed` fields into one process-wide table: hot paths
+//! bump a pre-registered counter by index (one relaxed host-atomic add —
+//! never a priced operation), exporters snapshot the whole table by
+//! name. The per-runtime accessors (`timeouts_observed()` & co.) stay as
+//! the per-instance ground truth — this registry is the *process* view
+//! the `trace` CLI and metrics snapshot export.
+//!
+//! Cells are pre-allocated (`MAX_COUNTERS`) and padded so bumping one
+//! counter never takes a lock or false-shares with its neighbours; the
+//! name table behind a mutex is touched only by `register`/`snapshot`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::lockfree::CachePadded;
+
+/// Well-known counter ids, registered (in this order) by
+/// [`CounterRegistry::new`], so hot paths bump by constant index.
+pub mod ctr {
+    /// NBB `insert` committed.
+    pub const NBB_INSERT: usize = 0;
+    /// NBB `read` returned an item.
+    pub const NBB_READ: usize = 1;
+    /// NBB insert rejected: ring full (either Table 1 flavour).
+    pub const NBB_FULL: usize = 2;
+    /// NBB read found nothing (either Table 1 flavour).
+    pub const NBB_EMPTY: usize = 3;
+    /// Connected-channel ring publishes (messages + scalars).
+    pub const RING_SEND: usize = 4;
+    /// Connected-channel ring consumptions.
+    pub const RING_RECV: usize = 5;
+    /// Lock-free queue pushes committed.
+    pub const QUEUE_PUSH: usize = 6;
+    /// Lock-free queue pops returned an entry.
+    pub const QUEUE_POP: usize = 7;
+    /// Doorbell bits set after a publish.
+    pub const DOORBELL_SET: usize = 8;
+    /// Doorbell clear-then-recheck round trips that re-set the bit.
+    pub const DOORBELL_RECHECK: usize = 9;
+    /// Blocking waits that escalated to a futex park.
+    pub const BLOCK_PARKS: usize = 10;
+    /// Waits that expired with `Status::Timeout`.
+    pub const TIMEOUTS: usize = 11;
+    /// Operations that surfaced `Status::EndpointDead`.
+    pub const POISONS: usize = 12;
+    /// Pool leases reclaimed from dead nodes.
+    pub const LEASES_RECLAIMED: usize = 13;
+    /// Trace records dropped on lane-ring overflow (mirrored at drain).
+    pub const TRACE_DROPPED: usize = 14;
+
+    /// `(id, name)` for every builtin, in registration order.
+    pub const BUILTIN: [(usize, &str); 15] = [
+        (NBB_INSERT, "nbb.insert"),
+        (NBB_READ, "nbb.read"),
+        (NBB_FULL, "nbb.full"),
+        (NBB_EMPTY, "nbb.empty"),
+        (RING_SEND, "ring.send"),
+        (RING_RECV, "ring.recv"),
+        (QUEUE_PUSH, "queue.push"),
+        (QUEUE_POP, "queue.pop"),
+        (DOORBELL_SET, "doorbell.set"),
+        (DOORBELL_RECHECK, "doorbell.recheck"),
+        (BLOCK_PARKS, "block.parks"),
+        (TIMEOUTS, "timeouts"),
+        (POISONS, "poisons"),
+        (LEASES_RECLAIMED, "leases.reclaimed"),
+        (TRACE_DROPPED, "trace.dropped"),
+    ];
+}
+
+/// Maximum counters the registry can hold (builtins + dynamic).
+pub const MAX_COUNTERS: usize = 64;
+
+/// Process-wide monotonic counter table.
+pub struct CounterRegistry {
+    /// Registered names, index == counter id.
+    names: Mutex<Vec<String>>,
+    /// Value cells — always `MAX_COUNTERS`, so `bump` is lock-free.
+    cells: Vec<CachePadded<AtomicU64>>,
+}
+
+impl CounterRegistry {
+    /// Registry pre-seeded with the [`ctr`] builtins.
+    pub fn new() -> Self {
+        let names = ctr::BUILTIN.iter().map(|(_, n)| n.to_string()).collect::<Vec<_>>();
+        debug_assert!(names.len() <= MAX_COUNTERS);
+        CounterRegistry {
+            names: Mutex::new(names),
+            cells: (0..MAX_COUNTERS).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+        }
+    }
+
+    /// Register a counter by name; returns its id, or the existing id if
+    /// the name is already taken (idempotent). `None` once the table is
+    /// full — callers must not silently lose a counter, so they should
+    /// surface this (it cannot happen with the builtin set alone).
+    pub fn register(&self, name: &str) -> Option<usize> {
+        let mut names = self.names.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(id) = names.iter().position(|n| n == name) {
+            return Some(id);
+        }
+        if names.len() >= MAX_COUNTERS {
+            return None;
+        }
+        names.push(name.to_string());
+        Some(names.len() - 1)
+    }
+
+    /// Add 1 to counter `id` (relaxed host atomic — never priced).
+    #[inline]
+    pub fn bump(&self, id: usize) {
+        self.add(id, 1);
+    }
+
+    /// Add `n` to counter `id`.
+    #[inline]
+    pub fn add(&self, id: usize, n: u64) {
+        if let Some(cell) = self.cells.get(id) {
+            cell.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value of counter `id`.
+    pub fn get(&self, id: usize) -> u64 {
+        self.cells.get(id).map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// `(name, value)` for every registered counter, in id order.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let names = self.names.lock().unwrap_or_else(|e| e.into_inner());
+        names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), self.cells[i].load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Zero every value (session reset; names stay registered).
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for CounterRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_preregistered_in_id_order() {
+        let r = CounterRegistry::new();
+        let snap = r.snapshot();
+        for (id, name) in ctr::BUILTIN {
+            assert_eq!(snap[id].0, name);
+            assert_eq!(snap[id].1, 0);
+        }
+    }
+
+    #[test]
+    fn bump_add_get_and_reset() {
+        let r = CounterRegistry::new();
+        r.bump(ctr::TIMEOUTS);
+        r.add(ctr::TIMEOUTS, 4);
+        assert_eq!(r.get(ctr::TIMEOUTS), 5);
+        r.reset();
+        assert_eq!(r.get(ctr::TIMEOUTS), 0);
+    }
+
+    #[test]
+    fn dynamic_registration_is_idempotent_and_bounded() {
+        let r = CounterRegistry::new();
+        let a = r.register("my.subsystem.widgets").unwrap();
+        let b = r.register("my.subsystem.widgets").unwrap();
+        assert_eq!(a, b);
+        assert!(a >= ctr::BUILTIN.len());
+        r.bump(a);
+        assert_eq!(r.get(a), 1);
+        // Existing names keep resolving even once the table fills.
+        let mut filled = 0;
+        for i in 0..MAX_COUNTERS {
+            if r.register(&format!("filler.{i}")).is_some() {
+                filled += 1;
+            }
+        }
+        assert!(filled < MAX_COUNTERS, "table must eventually report full");
+        assert_eq!(r.register("my.subsystem.widgets"), Some(a));
+        assert_eq!(r.register("one.too.many"), None);
+    }
+
+    #[test]
+    fn out_of_range_ids_are_inert() {
+        let r = CounterRegistry::new();
+        r.bump(MAX_COUNTERS + 5); // must not panic
+        assert_eq!(r.get(MAX_COUNTERS + 5), 0);
+    }
+}

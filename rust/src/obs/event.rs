@@ -1,0 +1,204 @@
+//! Fixed-size binary trace records.
+//!
+//! Every event the hot paths emit is one 32-byte little-endian record —
+//! fixed size so the per-lane rings can carry them without allocation,
+//! torn-read-free slot copies, or length framing. The encoding is the
+//! wire/disk format too: the NDJSON and chrome-trace exporters decode
+//! from exactly these bytes, and the round-trip is property-tested.
+
+/// Encoded record size in bytes (half a cache line: two records per
+/// line keeps the ring slot array dense without straddling).
+pub const RECORD_LEN: usize = 32;
+
+/// Channel-id namespace bit: ids with this bit set are **endpoint**
+/// indices (connectionless queue / endpoint wait cells), not connected-
+/// channel indices. Keeps one `u32` id space for both tables.
+pub const CH_ENDPOINT_BIT: u32 = 1 << 24;
+
+/// "No channel attribution" sentinel.
+pub const CH_NONE: u32 = u32::MAX;
+
+/// What happened. The first five kinds are the per-message stage marks
+/// the collector pairs into the four stage-latency histograms:
+///
+/// ```text
+/// SendEnter --(send_commit)--> SendCommit --(commit_doorbell)-->
+/// DoorbellSet --(doorbell_wakeup)--> Wakeup --(wakeup_recv)--> RecvReturn
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Sender entered the channel API (before the ring insert).
+    SendEnter = 1,
+    /// Ring publish: the producer's even counter store made the payload
+    /// visible.
+    SendCommit = 2,
+    /// Doorbell bit set for the channel (receiver can now see it).
+    DoorbellSet = 3,
+    /// Receiver observed the payload available (first successful probe).
+    Wakeup = 4,
+    /// Payload handed back to the receiving caller.
+    RecvReturn = 5,
+    /// Connectionless queue push committed (aux = priority).
+    QueuePush = 6,
+    /// Connectionless queue pop returned an entry.
+    QueuePop = 7,
+    /// Blocking path parked on its wait cell (aux = yields beforehand).
+    BlockPark = 8,
+    /// Blocking path woke from its wait cell.
+    BlockUnpark = 9,
+}
+
+impl EventKind {
+    /// Inverse of the `repr(u8)` discriminant; `None` for junk bytes.
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => Self::SendEnter,
+            2 => Self::SendCommit,
+            3 => Self::DoorbellSet,
+            4 => Self::Wakeup,
+            5 => Self::RecvReturn,
+            6 => Self::QueuePush,
+            7 => Self::QueuePop,
+            8 => Self::BlockPark,
+            9 => Self::BlockUnpark,
+            _ => return None,
+        })
+    }
+
+    /// Stable export label (NDJSON `kind`, chrome-trace `name`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::SendEnter => "send_enter",
+            Self::SendCommit => "send_commit",
+            Self::DoorbellSet => "doorbell_set",
+            Self::Wakeup => "wakeup",
+            Self::RecvReturn => "recv_return",
+            Self::QueuePush => "queue_push",
+            Self::QueuePop => "queue_pop",
+            Self::BlockPark => "block_park",
+            Self::BlockUnpark => "block_unpark",
+        }
+    }
+
+    /// Every kind, for exhaustive round-trip tests.
+    pub fn all() -> [Self; 9] {
+        [
+            Self::SendEnter,
+            Self::SendCommit,
+            Self::DoorbellSet,
+            Self::Wakeup,
+            Self::RecvReturn,
+            Self::QueuePush,
+            Self::QueuePop,
+            Self::BlockPark,
+            Self::BlockUnpark,
+        ]
+    }
+}
+
+/// One decoded trace event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// Channel id (or `CH_ENDPOINT_BIT | endpoint`, or `CH_NONE`).
+    pub channel: u32,
+    /// Per-channel message sequence (ring `update/2` message index for
+    /// the stage kinds; a monotonic per-queue counter for queue kinds).
+    pub seq: u64,
+    /// Timestamp: `World::timestamp_peek()` nanoseconds — wall clock on
+    /// the real plane, the emitting task's virtual clock on the sim.
+    pub ts_ns: u64,
+    /// Kind-specific extra (payload length, batch count, priority, ...).
+    pub aux: u32,
+    /// Originating lane (per-thread ring index). Not part of the wire
+    /// record — the collector fills it in at drain time from which ring
+    /// the record came out of.
+    pub lane: u32,
+}
+
+impl Event {
+    /// Encode to the fixed 32-byte wire record (lane is *not* encoded).
+    ///
+    /// Layout (little-endian):
+    /// `[0] kind | [1..4] zero | [4..8] channel | [8..16] seq |
+    ///  [16..24] ts_ns | [24..28] aux | [28..32] zero`
+    pub fn encode(&self) -> [u8; RECORD_LEN] {
+        let mut b = [0u8; RECORD_LEN];
+        b[0] = self.kind as u8;
+        b[4..8].copy_from_slice(&self.channel.to_le_bytes());
+        b[8..16].copy_from_slice(&self.seq.to_le_bytes());
+        b[16..24].copy_from_slice(&self.ts_ns.to_le_bytes());
+        b[24..28].copy_from_slice(&self.aux.to_le_bytes());
+        b
+    }
+
+    /// Decode a wire record; `None` when the kind byte is invalid (a
+    /// corrupt or torn record must never silently become an event).
+    pub fn decode(b: &[u8; RECORD_LEN]) -> Option<Event> {
+        let kind = EventKind::from_u8(b[0])?;
+        Some(Event {
+            kind,
+            channel: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            seq: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            ts_ns: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+            aux: u32::from_le_bytes(b[24..28].try_into().unwrap()),
+            lane: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_kind_and_extremes() {
+        for kind in EventKind::all() {
+            for (channel, seq, ts_ns, aux) in [
+                (0u32, 0u64, 0u64, 0u32),
+                (3, 7, 1_234_567_890, 24),
+                (CH_ENDPOINT_BIT | 12, u64::MAX, u64::MAX, u32::MAX),
+                (CH_NONE, 1 << 63, 1, 1),
+            ] {
+                let ev = Event { kind, channel, seq, ts_ns, aux, lane: 0 };
+                let rec = ev.encode();
+                assert_eq!(Event::decode(&rec), Some(ev), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn junk_kind_bytes_are_rejected() {
+        let mut rec = Event {
+            kind: EventKind::SendCommit,
+            channel: 1,
+            seq: 2,
+            ts_ns: 3,
+            aux: 4,
+            lane: 0,
+        }
+        .encode();
+        rec[0] = 0;
+        assert_eq!(Event::decode(&rec), None);
+        rec[0] = 200;
+        assert_eq!(Event::decode(&rec), None);
+    }
+
+    #[test]
+    fn record_is_exactly_32_bytes_and_reserved_bytes_zero() {
+        let rec = Event {
+            kind: EventKind::Wakeup,
+            channel: u32::MAX,
+            seq: u64::MAX,
+            ts_ns: u64::MAX,
+            aux: u32::MAX,
+            lane: 9,
+        }
+        .encode();
+        assert_eq!(rec.len(), RECORD_LEN);
+        assert_eq!(&rec[1..4], &[0, 0, 0], "reserved bytes must stay zero");
+        assert_eq!(&rec[28..32], &[0, 0, 0, 0]);
+    }
+}

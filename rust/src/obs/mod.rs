@@ -1,0 +1,288 @@
+//! Zero-perturbation observability plane: per-lane event rings, stage
+//! latency attribution, and a named counter registry.
+//!
+//! The paper's argument is a measured latency delta, so the harness must
+//! be able to show *where* a message's nanoseconds go without disturbing
+//! the hot path it measures. Everything here is therefore built from
+//! the two ingredients the simulator never prices:
+//!
+//! * **host-side `std::sync::atomic` state** (the established pattern of
+//!   `chan_poison`, the liveness epochs, the `stat_*` counters), and
+//! * **unpriced peeks** ([`World::timestamp_peek`], `counters_peek`).
+//!
+//! So the overhead contract is strict and sim-assertable: with tracing
+//! disabled *or enabled*, instrumentation adds **zero priced
+//! operations** — the pinned coherence gates (PR 1–2) stay
+//! byte-identical either way (`tests/trace_properties.rs` asserts it).
+//! On the real plane a disabled trace point costs one relaxed load of
+//! the global enable flag.
+//!
+//! # Architecture
+//!
+//! Hot paths call [`emit`] (events) and [`bump`]/[`add`] (counters).
+//! Each emitting thread lazily registers its own SPSC [`EventRing`]
+//! (per-core in the pinned-task model) and pushes fixed 32-byte
+//! [`Event`] records into it — dogfooding the repo's own padded /
+//! cached-peer-counter ring design; overflow is counted exactly, never
+//! silent. A [`Collector`] drains every lane, pairs the stage marks
+//! into per-channel stage-latency histograms, and exports NDJSON /
+//! chrome-trace / metrics-snapshot JSON; its replay checker re-derives
+//! the FIFO / no-loss / no-dup invariants from the event stream alone.
+//!
+//! # Gating
+//!
+//! Compile-time: the `obs-trace` cargo feature (default on) — without
+//! it every trace point compiles to nothing. Runtime: [`set_enabled`]
+//! (default **off**); [`tracing`] is the one-relaxed-load check every
+//! trace point performs first.
+
+mod collect;
+mod counters;
+mod event;
+mod ring;
+
+pub use collect::{Collector, ReplayReport, StageSet, STAGES};
+pub use counters::{ctr, CounterRegistry, MAX_COUNTERS};
+pub use event::{Event, EventKind, CH_ENDPOINT_BIT, CH_NONE, RECORD_LEN};
+pub use ring::EventRing;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::lockfree::World;
+
+/// Capacity (records) of each per-lane event ring: 64 Ki × 32 B = 2 MiB
+/// per lane, enough for ~13k traced messages between collector drains.
+pub const RING_CAPACITY: usize = 1 << 16;
+
+/// Runtime enable flag. Host atomic: reading it is never priced.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The process-wide sink: every lane ring + the counter registry.
+struct TraceSink {
+    lanes: Mutex<Vec<Arc<EventRing>>>,
+    counters: CounterRegistry,
+}
+
+fn sink() -> &'static TraceSink {
+    static SINK: OnceLock<TraceSink> = OnceLock::new();
+    SINK.get_or_init(|| TraceSink {
+        lanes: Mutex::new(Vec::new()),
+        counters: CounterRegistry::new(),
+    })
+}
+
+thread_local! {
+    /// This thread's lane: `(lane index, its ring)`, registered on first
+    /// emit. The ring is never unregistered — a lane that outlives its
+    /// thread just drains empty.
+    static LANE: std::cell::RefCell<Option<(u32, Arc<EventRing>)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// True when tracing is compiled in *and* runtime-enabled — the guard
+/// every trace point checks first (one relaxed host-atomic load; a
+/// constant `false` when the `obs-trace` feature is off).
+#[inline(always)]
+pub fn tracing() -> bool {
+    #[cfg(feature = "obs-trace")]
+    {
+        ENABLED.load(Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "obs-trace"))]
+    {
+        false
+    }
+}
+
+/// Flip the runtime enable flag. Returns the effective state (`false`
+/// forever when the `obs-trace` feature is compiled out).
+pub fn set_enabled(on: bool) -> bool {
+    #[cfg(feature = "obs-trace")]
+    {
+        ENABLED.store(on, Ordering::SeqCst);
+        on
+    }
+    #[cfg(not(feature = "obs-trace"))]
+    {
+        let _ = on;
+        false
+    }
+}
+
+/// Emit one trace event, timestamped with `W`'s unpriced clock peek.
+/// No-op unless [`tracing`] — callers just call it unconditionally, or
+/// pre-check `tracing()` themselves when arguments need computing.
+#[inline]
+pub fn emit<W: World>(kind: EventKind, channel: u32, seq: u64, aux: u32) {
+    #[cfg(feature = "obs-trace")]
+    {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return;
+        }
+        emit_at(kind, channel, seq, W::timestamp_peek(), aux);
+    }
+    #[cfg(not(feature = "obs-trace"))]
+    {
+        let _ = (kind, channel, seq, aux);
+    }
+}
+
+/// Emit with an explicit timestamp (exporters/tests; [`emit`] for hot
+/// paths). Registers this thread's lane ring on first use.
+pub fn emit_at(kind: EventKind, channel: u32, seq: u64, ts_ns: u64, aux: u32) {
+    LANE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let s = sink();
+            let mut lanes = s.lanes.lock().unwrap_or_else(|e| e.into_inner());
+            let ring = Arc::new(EventRing::new(RING_CAPACITY));
+            lanes.push(ring.clone());
+            *slot = Some(((lanes.len() - 1) as u32, ring));
+        }
+        let (_, ring) = slot.as_ref().unwrap();
+        ring.push(&Event { kind, channel, seq, ts_ns, aux, lane: 0 }.encode());
+    });
+}
+
+/// Bump a registry counter by 1. No-op unless [`tracing`].
+#[inline]
+pub fn bump(id: usize) {
+    if tracing() {
+        sink().counters.bump(id);
+    }
+}
+
+/// Add `n` to a registry counter. No-op unless [`tracing`].
+#[inline]
+pub fn add(id: usize, n: u64) {
+    if tracing() {
+        sink().counters.add(id, n);
+    }
+}
+
+/// Register a counter by name (see [`CounterRegistry::register`]).
+pub fn register_counter(name: &str) -> Option<usize> {
+    sink().counters.register(name)
+}
+
+/// Current value of a registry counter.
+pub fn counter(id: usize) -> u64 {
+    sink().counters.get(id)
+}
+
+/// `(name, value)` snapshot of the whole counter registry.
+pub fn counters_snapshot() -> Vec<(String, u64)> {
+    sink().counters.snapshot()
+}
+
+/// Drain every lane ring into decoded events (lane field filled from
+/// the ring index). Records dropped on overflow so far are mirrored
+/// into the `trace.dropped` counter. Holding the lane table lock for
+/// the whole drain serializes concurrent collectors (SPSC stays SPSC).
+pub fn drain() -> Vec<Event> {
+    let s = sink();
+    let lanes = s.lanes.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for (lane, ring) in lanes.iter().enumerate() {
+        while let Some(rec) = ring.pop() {
+            if let Some(mut ev) = Event::decode(&rec) {
+                ev.lane = lane as u32;
+                out.push(ev);
+            }
+        }
+    }
+    let dropped: u64 = lanes.iter().map(|r| r.dropped()).sum();
+    let have = s.counters.get(ctr::TRACE_DROPPED);
+    s.counters.add(ctr::TRACE_DROPPED, dropped.saturating_sub(have));
+    out
+}
+
+/// Serialize tests that arm the process-global plane — the sink is
+/// shared across the whole test binary, so concurrent traced tests
+/// would cross-contaminate each other's drains.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Total records dropped on lane-ring overflow so far.
+pub fn dropped() -> u64 {
+    let s = sink();
+    let lanes = s.lanes.lock().unwrap_or_else(|e| e.into_inner());
+    lanes.iter().map(|r| r.dropped()).sum()
+}
+
+/// Reset the plane between sessions: discard buffered events, zero the
+/// drop accounting and every counter. Call with tracing disabled (or
+/// accept losing concurrently-emitted events).
+pub fn reset() {
+    let s = sink();
+    let lanes = s.lanes.lock().unwrap_or_else(|e| e.into_inner());
+    for ring in lanes.iter() {
+        while ring.pop().is_some() {}
+        ring.reset_dropped();
+    }
+    s.counters.reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::RealWorld;
+
+    /// The sink is process-global; serialize the tests that enable it.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn disabled_emit_is_inert() {
+        let _g = guard();
+        set_enabled(false);
+        reset();
+        emit::<RealWorld>(EventKind::SendCommit, 1, 0, 0);
+        bump(ctr::RING_SEND);
+        assert!(drain().is_empty());
+        assert_eq!(counter(ctr::RING_SEND), 0);
+    }
+
+    #[cfg(feature = "obs-trace")]
+    #[test]
+    fn enabled_emit_drains_with_lane_and_counters() {
+        let _g = guard();
+        reset();
+        set_enabled(true);
+        for seq in 0..10u64 {
+            emit::<RealWorld>(EventKind::SendCommit, 7, seq, 24);
+            bump(ctr::RING_SEND);
+        }
+        set_enabled(false);
+        let events = drain();
+        assert_eq!(events.len(), 10);
+        assert!(events.iter().all(|e| e.channel == 7 && e.kind == EventKind::SendCommit));
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(counter(ctr::RING_SEND), 10);
+        assert_eq!(dropped(), 0);
+        let snap = counters_snapshot();
+        assert!(snap.iter().any(|(n, v)| n == "ring.send" && *v == 10));
+        reset();
+        assert_eq!(counter(ctr::RING_SEND), 0);
+    }
+
+    #[cfg(feature = "obs-trace")]
+    #[test]
+    fn timestamps_come_from_the_world_clock() {
+        let _g = guard();
+        reset();
+        set_enabled(true);
+        let t0 = crate::os::monotonic_ns();
+        emit::<RealWorld>(EventKind::Wakeup, 0, 0, 0);
+        let t1 = crate::os::monotonic_ns();
+        set_enabled(false);
+        let events = drain();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].ts_ns >= t0 && events[0].ts_ns <= t1);
+    }
+}

@@ -1,0 +1,208 @@
+//! Per-lane SPSC event ring — the tracing plane dogfooding the repo's
+//! own ring design.
+//!
+//! Same counter discipline as [`crate::lockfree::ring::ChannelRing`]
+//! (padded head/tail on separate lines, the producer re-loads the
+//! consumer's counter only on apparent full), but built on **plain
+//! `std::sync::atomic`** words: host-side atomics are the one kind of
+//! memory the simulator never prices, so pushing a trace event costs
+//! zero priced operations — the whole point of the plane. Producer is
+//! the thread that owns the lane (each emitting thread gets its own
+//! ring, see [`super`]); consumer is the collector draining it.
+//!
+//! Overflow is **never silent**: when the ring is full the record is
+//! dropped and the `dropped` counter incremented — exactly one bump per
+//! lost record, asserted by the overflow-accounting test.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::lockfree::CachePadded;
+
+use super::event::RECORD_LEN;
+
+/// Lock-free SPSC ring of encoded 32-byte trace records.
+pub struct EventRing {
+    /// Producer counter: records ever pushed (writer-owned line).
+    head: CachePadded<AtomicU64>,
+    /// Consumer counter: records ever popped (reader-owned line).
+    tail: CachePadded<AtomicU64>,
+    /// Producer-private snapshot of `tail`, re-loaded only on apparent
+    /// full (an atomic only so the ring stays `Sync`; one writer).
+    cached_tail: CachePadded<AtomicU64>,
+    /// Records dropped on overflow — exact, monotonic.
+    dropped: AtomicU64,
+    slots: Box<[UnsafeCell<[u8; RECORD_LEN]>]>,
+    cap: u64,
+}
+
+// The head/tail protocol guarantees the producer and consumer never
+// address the same slot (standard SPSC argument: tail <= head <= tail+cap
+// and each side only advances its own counter after its slot access).
+unsafe impl Sync for EventRing {}
+unsafe impl Send for EventRing {}
+
+impl EventRing {
+    /// Ring with `cap` record slots (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "event ring capacity must be >= 1");
+        let slots = (0..cap)
+            .map(|_| UnsafeCell::new([0u8; RECORD_LEN]))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        EventRing {
+            head: CachePadded::new(AtomicU64::new(0)),
+            tail: CachePadded::new(AtomicU64::new(0)),
+            cached_tail: CachePadded::new(AtomicU64::new(0)),
+            dropped: AtomicU64::new(0),
+            slots,
+            cap: cap as u64,
+        }
+    }
+
+    /// Producer side (lane-owning thread only): append one record.
+    /// Returns `false` — and bumps the drop counter by exactly one —
+    /// when the ring is full even after refreshing the tail snapshot.
+    pub fn push(&self, rec: &[u8; RECORD_LEN]) -> bool {
+        let h = self.head.load(Ordering::Relaxed);
+        let mut t = self.cached_tail.load(Ordering::Relaxed);
+        if h.wrapping_sub(t) >= self.cap {
+            t = self.tail.load(Ordering::Acquire);
+            self.cached_tail.store(t, Ordering::Relaxed);
+            if h.wrapping_sub(t) >= self.cap {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+        }
+        unsafe { *self.slots[(h % self.cap) as usize].get() = *rec };
+        self.head.store(h + 1, Ordering::Release);
+        true
+    }
+
+    /// Consumer side (one drainer at a time): pop the oldest record.
+    pub fn pop(&self) -> Option<[u8; RECORD_LEN]> {
+        let t = self.tail.load(Ordering::Relaxed);
+        let h = self.head.load(Ordering::Acquire);
+        if t == h {
+            return None;
+        }
+        let rec = unsafe { *self.slots[(t % self.cap) as usize].get() };
+        self.tail.store(t + 1, Ordering::Release);
+        Some(rec)
+    }
+
+    /// Records currently buffered (monitoring; racy under concurrency).
+    pub fn len(&self) -> usize {
+        let h = self.head.load(Ordering::Relaxed);
+        let t = self.tail.load(Ordering::Relaxed);
+        h.wrapping_sub(t) as usize
+    }
+
+    /// True when no records are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Records dropped on overflow so far (exact).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Zero the drop counter (collector reset between sessions).
+    pub fn reset_dropped(&self) {
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::{Event, EventKind};
+    use super::*;
+    use std::sync::Arc;
+
+    fn rec(seq: u64) -> [u8; RECORD_LEN] {
+        Event { kind: EventKind::SendCommit, channel: 1, seq, ts_ns: seq * 10, aux: 0, lane: 0 }
+            .encode()
+    }
+
+    #[test]
+    fn fifo_and_wraparound() {
+        let r = EventRing::new(4);
+        for round in 0..50u64 {
+            assert!(r.push(&rec(round)));
+            let got = Event::decode(&r.pop().unwrap()).unwrap();
+            assert_eq!(got.seq, round);
+        }
+        assert!(r.pop().is_none());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_accounting_is_exact_never_silent() {
+        let r = EventRing::new(8);
+        let mut accepted = 0u64;
+        for i in 0..20u64 {
+            if r.push(&rec(i)) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 8, "exactly cap records fit");
+        assert_eq!(r.dropped(), 12, "every rejected push counted exactly once");
+        // The 8 survivors are the oldest 8, in order — drops never tear
+        // or reorder what was already committed.
+        for want in 0..8u64 {
+            let got = Event::decode(&r.pop().unwrap()).unwrap();
+            assert_eq!(got.seq, want);
+        }
+        assert!(r.pop().is_none());
+        // Space freed: pushes flow again, the drop counter stands still.
+        assert!(r.push(&rec(99)));
+        assert_eq!(r.dropped(), 12);
+    }
+
+    #[test]
+    fn concurrent_spsc_drain_loses_nothing() {
+        const N: u64 = 100_000;
+        let r = Arc::new(EventRing::new(256));
+        let producer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                let mut pushed = 0u64;
+                for i in 0..N {
+                    if r.push(&rec(i)) {
+                        pushed += 1;
+                    }
+                }
+                pushed
+            })
+        };
+        let mut seen = 0u64;
+        let mut last = None::<u64>;
+        loop {
+            match r.pop() {
+                Some(b) => {
+                    let ev = Event::decode(&b).unwrap();
+                    if let Some(p) = last {
+                        assert!(ev.seq > p, "ring reordered events");
+                    }
+                    last = Some(ev.seq);
+                    seen += 1;
+                }
+                None => {
+                    if producer.is_finished() && r.is_empty() {
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        let pushed = producer.join().unwrap();
+        assert_eq!(seen, pushed, "accepted records all drained");
+        assert_eq!(pushed + r.dropped(), N, "accepted + dropped == offered");
+    }
+}

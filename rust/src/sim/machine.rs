@@ -263,6 +263,15 @@ impl Machine {
         lock(&self.shared).tasks[id].ops
     }
 
+    /// Virtual clock of task `id` (unpriced read — the timestamp source
+    /// for the observability plane's [`World::timestamp_peek`] on the
+    /// sim plane; 0 for unknown ids).
+    ///
+    /// [`World::timestamp_peek`]: crate::lockfree::World::timestamp_peek
+    pub fn task_clock(&self, id: usize) -> u64 {
+        lock(&self.shared).tasks.get(id).map_or(0, |t| t.clock)
+    }
+
     /// True once task `id` has finished (normally or by injected kill).
     pub fn task_done(&self, id: usize) -> bool {
         let st = lock(&self.shared);

@@ -370,6 +370,19 @@ impl World for SimWorld {
         with_machine(|m| m.op(|ctx| ctx.now()))
     }
 
+    // Unpriced peek of the calling task's virtual clock: the timestamp
+    // source for src/obs/ trace events. Deliberately bypasses the
+    // monitor's pricing (no `m.op`), so instrumented runs keep the exact
+    // hit/miss/op counts of uninstrumented ones. 0 off-plane — exporter
+    // threads outside any task emit epoch-less events rather than panic.
+    fn timestamp_peek() -> u64 {
+        CTX.with(|c| {
+            c.borrow()
+                .as_ref()
+                .map_or(0, |(machine, id)| machine.task_clock(*id))
+        })
+    }
+
     fn alloc_region(bytes: usize) -> u64 {
         alloc_region(bytes)
     }

@@ -135,6 +135,29 @@ impl Histogram {
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
+
+    /// 99.9th percentile shorthand (tail latency — the paper's Figure 8
+    /// is a tail story; mean alone hides it).
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Compact JSON serialization: counts, mean and the quantile ladder.
+    /// Flat integers (mean rounded) so snapshot tooling can diff fields
+    /// without float-noise churn.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"n\":{},\"mean_ns\":{},\"min_ns\":{},\"p50_ns\":{},\"p99_ns\":{},\
+             \"p999_ns\":{},\"max_ns\":{}}}",
+            self.total,
+            self.mean().round() as u64,
+            self.min(),
+            self.p50(),
+            self.p99(),
+            self.p999(),
+            self.max()
+        )
+    }
 }
 
 impl std::fmt::Debug for Histogram {
@@ -222,5 +245,33 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.max(), u64::MAX);
         assert!(h.quantile(1.0) <= u64::MAX);
+    }
+
+    #[test]
+    fn p999_sits_in_the_tail() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        let p999 = h.p999() as f64;
+        assert!((p999 - 99_900.0).abs() / 99_900.0 < 0.10, "p999={p999}");
+        assert!(h.p999() >= h.p99());
+        assert!(h.p99() >= h.p50());
+    }
+
+    #[test]
+    fn to_json_is_flat_and_complete() {
+        let mut h = Histogram::new();
+        for v in [5u64, 10, 15] {
+            h.record(v);
+        }
+        let j = h.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"n\":3", "\"mean_ns\":10", "\"min_ns\":5", "\"p50_ns\":", "\"p99_ns\":", "\"p999_ns\":", "\"max_ns\":15"] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        // Empty histograms serialize to all-zero fields, not junk.
+        let e = Histogram::new().to_json();
+        assert!(e.contains("\"n\":0") && e.contains("\"max_ns\":0"));
     }
 }

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# Run the micro_lockfree bench and snapshot its machine-readable summary
-# (every BENCH_JSON line, merged into one object) into a JSON baseline
-# for the perf trajectory.
+# Run the micro_lockfree bench plus a traced stress run and snapshot
+# their machine-readable summaries (every BENCH_JSON line, merged into
+# one object) into a JSON baseline for the perf trajectory.
 #
 # Usage: scripts/bench_snapshot.sh [output.json]   (default: BENCH_micro.json
-# at the repo root). The full human-readable bench report streams to stdout.
+# at the repo root). The full human-readable reports stream to stdout.
+# Trace exports (chrome-trace / NDJSON / metrics JSON) land next to the
+# snapshot as <output>.trace.{chrome.json,ndjson,metrics.json}.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -19,14 +21,27 @@ trap 'rm -f "$log"' EXIT
 
 (cd "$repo_root/rust" && cargo bench --bench micro_lockfree) | tee "$log"
 
-# The bench emits one BENCH_JSON line per section (NBB coherence row,
-# connected-channel ring-vs-queue row, ...). Each is a flat JSON object;
-# merge them into a single object, last key wins on collision.
+# Stage-latency attribution on the same workload family: a traced
+# packet stress on the sim plane (deterministic), exporting alongside
+# the snapshot. Its BENCH_JSON line rides into the merged object.
+trace_prefix="${out%.json}.trace"
+(cd "$repo_root/rust" \
+  && cargo run --release -- trace \
+       --kind packet --tx 400 --cores 2 --plane sim --out "$trace_prefix") \
+  | tee -a "$log"
+
+# Every BENCH_JSON line is a flat JSON object; merge them into a single
+# object, last key wins on collision. Host metadata keys come last so a
+# snapshot always records where it was taken.
 mapfile -t json_lines < <(grep '^BENCH_JSON: ' "$log" | sed 's/^BENCH_JSON: //')
 if [ "${#json_lines[@]}" -eq 0 ]; then
   echo "error: bench produced no BENCH_JSON line" >&2
   exit 1
 fi
+host_cores="$(nproc 2>/dev/null || getconf _NPROCESSORS_ONLN 2>/dev/null || echo 0)"
+host_os="$(uname -sr 2>/dev/null || echo unknown)"
+git_sha="$(git -C "$repo_root" rev-parse --short HEAD 2>/dev/null || echo unknown)"
+json_lines+=("{\"host_cores\": ${host_cores}, \"host_os\": \"${host_os}\", \"git_sha\": \"${git_sha}\"}")
 merged="$(printf '%s\n' "${json_lines[@]}" \
   | sed 's/^[[:space:]]*{//; s/}[[:space:]]*$//' \
   | paste -sd ',' -)"
@@ -38,7 +53,10 @@ if command -v python3 >/dev/null 2>&1; then
 fi
 
 # Required rows: the PR-over-PR trajectory keys must all be present.
-for key in spsc_ratio spsc_batch_ratio empty_pop_ns pkt_queue_mps pkt_ring_mps pkt_ring_vs_queue; do
+for key in spsc_ratio spsc_batch_ratio empty_pop_ns pkt_queue_mps pkt_ring_mps pkt_ring_vs_queue \
+           stress_pkt_timeouts stress_pkt_poisons stress_pkt_leases_reclaimed \
+           trace_events trace_send_commit_p99_ns trace_wakeup_recv_p99_ns trace_replay_pass \
+           host_cores host_os git_sha; do
   if ! grep -q "\"$key\"" "$out"; then
     echo "error: BENCH_micro snapshot is missing \"$key\"" >&2
     exit 1
