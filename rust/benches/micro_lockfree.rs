@@ -8,6 +8,9 @@
 //!   of the seed datapath, scalar and batched (the PR-over-PR perf
 //!   trajectory gate — `scripts/bench_snapshot.sh` snapshots the
 //!   `BENCH_JSON:` line this bench emits),
+//! * **MPMC scaling**: 2 producers × M ∈ {1, 2, 4} consumers on the
+//!   slot-sequence ring, exactly-once asserted, plus the batched-claim
+//!   ratio (the `mpmc_scaling_*` BENCH_JSON row),
 //! * occupancy bitmap: empty-queue poll cost of `LockFreeQueue::pop`,
 //! * NBW write / read vs. a Mutex<T> state cell,
 //! * bit-set alloc/free vs. Mutex<Vec> free list (why the paper switched
@@ -26,7 +29,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use mcapi::harness::{header, time_batched};
-use mcapi::lockfree::{Backoff, BitSet, ChannelRing, FreeList, Nbb, Nbw, ReadStatus, RealWorld};
+use mcapi::lockfree::{
+    Backoff, BitSet, ChannelRing, FreeList, MpmcRing, Nbb, Nbw, ReadStatus, RealWorld,
+};
 use mcapi::mcapi::queue::{Entry, LockFreeQueue};
 use mcapi::mrapi::shmem::{Lease, Partition};
 
@@ -298,6 +303,91 @@ fn spsc_queue_pkt_mps() -> f64 {
     PKT_N as f64 / t0.elapsed().as_secs_f64()
 }
 
+// ---------------------------------------------------------------------------
+// MPMC endpoint plane: consumer-group scaling on the slot-sequence ring.
+// ---------------------------------------------------------------------------
+
+const MPMC_N: u64 = 200_000;
+const MPMC_CAP: usize = 1024;
+
+/// Cross-thread MPMC throughput (msgs/s): `producers` senders fan
+/// 8-byte sequence frames into one slot-sequence ring, `consumers`
+/// claimants drain it concurrently. Exactly-once is asserted with a
+/// count + checksum pair (each sequence claimed by exactly one
+/// consumer). `batch > 1` drives the amortized multi-slot claim.
+fn mpmc_ring_mps(producers: usize, consumers: usize, batch: usize) -> f64 {
+    let ring = Arc::new(MpmcRing::<RealWorld>::new(MPMC_CAP, 16));
+    let done = Arc::new(AtomicU64::new(0));
+    let sum = Arc::new(AtomicU64::new(0));
+    let per = MPMC_N / producers as u64;
+    let total = per * producers as u64;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let ring = ring.clone();
+        handles.push(std::thread::spawn(move || {
+            let who = p as u32;
+            let base = p as u64 * per;
+            if batch <= 1 {
+                for i in 0..per {
+                    let b = (base + i).to_le_bytes();
+                    while ring.send(who, &b).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+            } else {
+                let mut i = 0u64;
+                while i < per {
+                    let k = ((per - i) as usize).min(batch);
+                    let bufs: Vec<[u8; 8]> =
+                        (0..k).map(|j| (base + i + j as u64).to_le_bytes()).collect();
+                    let mut sent = 0usize;
+                    while sent < k {
+                        let refs: Vec<&[u8]> =
+                            bufs[sent..k].iter().map(|b| b.as_slice()).collect();
+                        match ring.send_batch(who, &refs) {
+                            Ok(n) => sent += n,
+                            Err(_) => std::thread::yield_now(),
+                        }
+                    }
+                    i += k as u64;
+                }
+            }
+        }));
+    }
+    for c in 0..consumers {
+        let ring = ring.clone();
+        let (done, sum) = (done.clone(), sum.clone());
+        handles.push(std::thread::spawn(move || {
+            let who = (producers + c) as u32;
+            loop {
+                match ring.recv_with(who, |b| u64::from_le_bytes(b[..8].try_into().unwrap())) {
+                    Ok(v) => {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        if done.load(Ordering::Relaxed) >= total {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(done.load(Ordering::SeqCst), total, "MPMC lost or duplicated a frame");
+    assert_eq!(
+        sum.load(Ordering::SeqCst),
+        total * (total - 1) / 2,
+        "MPMC sequence checksum mismatch (duplicate + loss cancelled out)"
+    );
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     println!("{}", header());
 
@@ -349,6 +439,27 @@ fn main() {
     println!(
         "ring vs pool+queue: {pkt_ring_ratio:.2}x | with batching: {pkt_ring_batch_ratio:.2}x \
          (the ring drops the Treiber lease pop/push and one payload hop per packet)"
+    );
+
+    // --- MPMC endpoint plane: consumer-group scaling -------------------------
+    println!(
+        "\nmpmc scaling: 2 producers x M consumers on the slot-sequence ring \
+         ({MPMC_N} msgs, cap {MPMC_CAP})"
+    );
+    println!("| consumers | throughput (Mmsg/s) |");
+    println!("|---|---|");
+    let mpmc_c1_mps = mpmc_ring_mps(2, 1, 1);
+    println!("| 1 | {:.2} |", mpmc_c1_mps / 1e6);
+    let mpmc_c2_mps = mpmc_ring_mps(2, 2, 1);
+    println!("| 2 | {:.2} |", mpmc_c2_mps / 1e6);
+    let mpmc_c4_mps = mpmc_ring_mps(2, 4, 1);
+    println!("| 4 | {:.2} |", mpmc_c4_mps / 1e6);
+    let mpmc_batch_mps = mpmc_ring_mps(2, 2, 32);
+    let mpmc_batch_ratio = mpmc_batch_mps / mpmc_c2_mps;
+    println!(
+        "mpmc batch-32 producers at 2 consumers: {:.2} Mmsg/s = {mpmc_batch_ratio:.2}x scalar \
+         (scaling with M needs >= 4 free cores; CI runners only gate > 0 and exactly-once)",
+        mpmc_batch_mps / 1e6
     );
 
     // --- occupancy bitmap: empty-queue poll cost -----------------------------
@@ -528,6 +639,19 @@ fn main() {
          \"pkt_ring_batch32_mps\": {:.0}, \"pkt_ring_vs_queue\": {:.3}, \
          \"pkt_ring_batch_vs_queue\": {:.3}}}",
         queue_pkt_mps, ring_pkt_mps, ring_pkt_batch_mps, pkt_ring_ratio, pkt_ring_batch_ratio
+    );
+    // MPMC scaling row: absolute throughputs per consumer count plus the
+    // batched-claim ratio. No cross-count assertion here — scaling with M
+    // is machine-dependent (needs >= 4 free cores); the exactly-once
+    // count+checksum asserts inside mpmc_ring_mps are the hard gate.
+    assert!(
+        mpmc_c1_mps > 0.0 && mpmc_c2_mps > 0.0 && mpmc_c4_mps > 0.0 && mpmc_batch_mps > 0.0,
+        "MPMC scaling run produced a zero throughput"
+    );
+    println!(
+        "BENCH_JSON: {{\"mpmc_scaling_c1_mps\": {:.0}, \"mpmc_scaling_c2_mps\": {:.0}, \
+         \"mpmc_scaling_c4_mps\": {:.0}, \"mpmc_scaling_batch_ratio\": {:.3}}}",
+        mpmc_c1_mps, mpmc_c2_mps, mpmc_c4_mps, mpmc_batch_ratio
     );
     // Robustness counters from one steady packet stress run. All three
     // must stay zero on the healthy path (the chaos suite exercises the

@@ -36,7 +36,7 @@ use crate::lockfree::World;
 use crate::mcapi::types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status};
 use crate::mcapi::McapiRuntime;
 use crate::os::{AffinityMode, OsProfile};
-use crate::sim::faults::{sweep_kill_points, FaultAction, FaultPlan, OpWindow};
+use crate::sim::faults::{sweep_kill_points, sweep_stall_points, FaultAction, FaultPlan, OpWindow};
 use crate::sim::{Machine, MachineCfg, SimWorld};
 
 /// Spawn-order task id of the producer (fault victim 0).
@@ -48,6 +48,9 @@ const NODE_PROD: usize = 1;
 /// Dense node slot owning the consumer-side endpoint.
 const NODE_CONS: usize = 2;
 
+/// Payloads per batched API call in the `PktBatch` scenario.
+const CHAOS_BATCH: usize = 4;
+
 /// Which workload runs under fault injection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scenario {
@@ -55,6 +58,11 @@ pub enum Scenario {
     Pkt,
     /// Connectionless messages (lock-free queue + pool leases).
     Msg,
+    /// Connected scalar channel (checksummed 64-bit frames).
+    Sclr,
+    /// Connected packet channel through the batched submit/drain API
+    /// (`pkt_send_batch`/`pkt_recv_batch`, [`CHAOS_BATCH`] per call).
+    PktBatch,
 }
 
 impl Scenario {
@@ -63,6 +71,8 @@ impl Scenario {
         match s {
             "pkt" | "packet" => Some(Self::Pkt),
             "msg" | "message" => Some(Self::Msg),
+            "sclr" | "scalar" => Some(Self::Sclr),
+            "pkt_batch" | "pktbatch" | "batch" => Some(Self::PktBatch),
             _ => None,
         }
     }
@@ -72,6 +82,20 @@ impl Scenario {
         match self {
             Self::Pkt => "pkt",
             Self::Msg => "msg",
+            Self::Sclr => "sclr",
+            Self::PktBatch => "pkt_batch",
+        }
+    }
+
+    /// Largest admissible consumer-kill hole: a victim killed between
+    /// acknowledging and returning loses one message on the scalar
+    /// paths, but up to a whole batch on the batched drain (the ring
+    /// acks the batch with one counter pair, so everything copied out
+    /// but not yet returned dies with the caller).
+    fn admissible_hole(self) -> u64 {
+        match self {
+            Self::PktBatch => CHAOS_BATCH as u64,
+            _ => 1,
         }
     }
 }
@@ -141,17 +165,17 @@ pub struct ChaosReport {
 // Self-describing frames: seq + checksum, so tears are detectable.
 // ---------------------------------------------------------------------------
 
-const FRAME_MAGIC: u64 = 0x5AFE_C0DE_D00D_F01D;
-const FRAME_LEN: usize = 16;
+pub(crate) const FRAME_MAGIC: u64 = 0x5AFE_C0DE_D00D_F01D;
+pub(crate) const FRAME_LEN: usize = 16;
 
-fn frame(seq: u64) -> [u8; FRAME_LEN] {
+pub(crate) fn frame(seq: u64) -> [u8; FRAME_LEN] {
     let mut f = [0u8; FRAME_LEN];
     f[..8].copy_from_slice(&seq.to_le_bytes());
     f[8..].copy_from_slice(&(seq ^ FRAME_MAGIC).to_le_bytes());
     f
 }
 
-fn parse_frame(b: &[u8]) -> Option<u64> {
+pub(crate) fn parse_frame(b: &[u8]) -> Option<u64> {
     if b.len() != FRAME_LEN {
         return None;
     }
@@ -161,6 +185,42 @@ fn parse_frame(b: &[u8]) -> Option<u64> {
         Some(seq)
     } else {
         None
+    }
+}
+
+/// Scalar frames pack a 32-bit sequence and a 32-bit checksum into one
+/// 64-bit scalar, so a torn scalar is detectable just like a torn
+/// packet frame.
+fn sclr_frame(seq: u64) -> u64 {
+    (seq << 32) | u64::from((seq as u32) ^ (FRAME_MAGIC as u32))
+}
+
+fn parse_sclr(v: u64) -> Option<u64> {
+    let seq = v >> 32;
+    if (v as u32) == ((seq as u32) ^ (FRAME_MAGIC as u32)) {
+        Some(seq)
+    } else {
+        None
+    }
+}
+
+/// Record one received packet frame into `into` (or count it torn).
+fn record_bytes(into: &Mutex<Vec<u64>>, torn: &AtomicU64, b: &[u8]) {
+    match parse_frame(b) {
+        Some(seq) => into.lock().unwrap().push(seq),
+        None => {
+            torn.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Record one received scalar frame into `into` (or count it torn).
+fn record_sclr(into: &Mutex<Vec<u64>>, torn: &AtomicU64, v: u64) {
+    match parse_sclr(v) {
+        Some(seq) => into.lock().unwrap().push(seq),
+        None => {
+            torn.fetch_add(1, Ordering::SeqCst);
+        }
     }
 }
 
@@ -239,18 +299,39 @@ fn run_scenario(
             }
             let t = target.load(Ordering::SeqCst);
             let mut sent = 0u64;
+            let mut bracketed = false;
             'stream: while sent < messages {
-                let fr = frame(sent);
-                // Bracket the priced-op window of one mid-stream send for
-                // the kill sweep (probe runs read it back).
-                let start = if sent == mark { Some(SimWorld::op_count()) } else { None };
+                let take = match scenario {
+                    Scenario::PktBatch => CHAOS_BATCH.min((messages - sent) as usize),
+                    _ => 1,
+                };
+                let frames: Vec<[u8; FRAME_LEN]> =
+                    (sent..sent + take as u64).map(frame).collect();
+                // Bracket the priced-op window of the mid-stream send
+                // covering frame `mark` for the kill/stall sweeps (probe
+                // runs read it back).
+                let start = if !bracketed && sent + take as u64 > mark {
+                    bracketed = true;
+                    Some(SimWorld::op_count())
+                } else {
+                    None
+                };
                 loop {
                     let r = match scenario {
-                        Scenario::Pkt => rt.pkt_send(t, &fr),
-                        Scenario::Msg => rt.msg_send(NODE_PROD, dst, &fr, 0),
+                        Scenario::Pkt => rt.pkt_send(t, &frames[0]).map(|()| 1),
+                        Scenario::Msg => rt.msg_send(NODE_PROD, dst, &frames[0], 0).map(|()| 1),
+                        Scenario::Sclr => rt.sclr_send(t, sclr_frame(sent)).map(|()| 1),
+                        Scenario::PktBatch => {
+                            let refs: Vec<&[u8]> =
+                                frames.iter().map(|f| f.as_slice()).collect();
+                            rt.pkt_send_batch(t, &refs)
+                        }
                     };
                     match r {
-                        Ok(()) => break,
+                        Ok(n) => {
+                            sent += n as u64;
+                            break;
+                        }
                         Err(s) if s.is_would_block() => SimWorld::yield_now(),
                         Err(_) => break 'stream, // peer declared dead
                     }
@@ -259,7 +340,6 @@ fn run_scenario(
                     windows.lock().unwrap().0 =
                         Some(OpWindow { task: TASK_PROD, start: s, end: SimWorld::op_count() });
                 }
-                sent += 1;
             }
             clean.store(true, Ordering::SeqCst);
         })
@@ -280,33 +360,70 @@ fn run_scenario(
             let t = target.load(Ordering::SeqCst);
             let mut buf = [0u8; 64];
             let mut exit = None;
+            let mut bracket_at = None;
             loop {
                 let have = delivered.lock().unwrap().len() as u64;
                 if have >= messages {
                     break;
                 }
-                let start = if have == mark { Some(SimWorld::op_count()) } else { None };
+                // Bracket the receive attempt covering frame `mark`;
+                // re-bracket while stuck at the same count so the probe
+                // window ends up covering the successful receive.
+                let start = if have >= mark && bracket_at.map_or(true, |b| b == have) {
+                    bracket_at = Some(have);
+                    Some(SimWorld::op_count())
+                } else {
+                    None
+                };
                 let r = match scenario {
-                    Scenario::Pkt => rt.chan_recv_wait(t, &mut buf, recv_timeout_ns),
+                    Scenario::Pkt => rt
+                        .chan_recv_wait(t, &mut buf, recv_timeout_ns)
+                        .map(|n| record_bytes(&delivered, &torn, &buf[..n])),
                     Scenario::Msg => match rt.msg_recv(t, &mut buf) {
+                        Ok(n) => {
+                            record_bytes(&delivered, &torn, &buf[..n]);
+                            Ok(())
+                        }
                         Err(s) if s.is_would_block() => {
                             SimWorld::yield_now();
                             Err(Status::Timeout)
                         }
-                        r => r,
+                        Err(e) => Err(e),
                     },
+                    Scenario::Sclr => match rt.sclr_recv(t) {
+                        Ok(v) => {
+                            record_sclr(&delivered, &torn, v);
+                            Ok(())
+                        }
+                        Err(s) if s.is_would_block() => {
+                            SimWorld::yield_now();
+                            Err(Status::Timeout)
+                        }
+                        Err(e) => Err(e),
+                    },
+                    Scenario::PktBatch => {
+                        let mut batch = Vec::new();
+                        match rt.pkt_recv_batch(t, &mut batch, CHAOS_BATCH) {
+                            Ok(_) => {
+                                for p in &batch {
+                                    record_bytes(&delivered, &torn, p);
+                                }
+                                Ok(())
+                            }
+                            Err(s) if s.is_would_block() => {
+                                SimWorld::yield_now();
+                                Err(Status::Timeout)
+                            }
+                            Err(e) => Err(e),
+                        }
+                    }
                 };
                 if let Some(s) = start {
                     windows.lock().unwrap().1 =
                         Some(OpWindow { task: TASK_CONS, start: s, end: SimWorld::op_count() });
                 }
                 match r {
-                    Ok(n) => match parse_frame(&buf[..n]) {
-                        Some(seq) => delivered.lock().unwrap().push(seq),
-                        None => {
-                            torn.fetch_add(1, Ordering::SeqCst);
-                        }
-                    },
+                    Ok(()) => {}
                     Err(Status::Timeout) => {
                         // The connectionless path has no per-endpoint
                         // poison: once the producer is declared dead and
@@ -341,10 +458,15 @@ fn run_scenario(
         let prod_declared = prod_declared.clone();
         m.spawn(move || {
             match scenario {
-                Scenario::Pkt => {
+                Scenario::Pkt | Scenario::PktBatch | Scenario::Sclr => {
+                    let kind = if scenario == Scenario::Sclr {
+                        ChannelKind::Scalar
+                    } else {
+                        ChannelKind::Packet
+                    };
                     rt.create_endpoint(src, NODE_PROD).unwrap();
                     rt.create_endpoint(dst, NODE_CONS).unwrap();
-                    let ch = rt.connect(src, dst, ChannelKind::Packet).unwrap();
+                    let ch = rt.connect(src, dst, kind).unwrap();
                     rt.open_send(ch).unwrap();
                     rt.open_recv(ch).unwrap();
                     target.store(ch, Ordering::SeqCst);
@@ -379,16 +501,16 @@ fn run_scenario(
             let mut buf = [0u8; 64];
             loop {
                 let r = match scenario {
-                    Scenario::Pkt => rt.pkt_recv(t, &mut buf),
-                    Scenario::Msg => rt.msg_recv(t, &mut buf),
+                    Scenario::Pkt | Scenario::PktBatch => {
+                        rt.pkt_recv(t, &mut buf).map(|n| record_bytes(&drained, &torn, &buf[..n]))
+                    }
+                    Scenario::Msg => {
+                        rt.msg_recv(t, &mut buf).map(|n| record_bytes(&drained, &torn, &buf[..n]))
+                    }
+                    Scenario::Sclr => rt.sclr_recv(t).map(|v| record_sclr(&drained, &torn, v)),
                 };
                 match r {
-                    Ok(n) => match parse_frame(&buf[..n]) {
-                        Some(seq) => drained.lock().unwrap().push(seq),
-                        None => {
-                            torn.fetch_add(1, Ordering::SeqCst);
-                        }
-                    },
+                    Ok(()) => {}
                     Err(_) => break, // empty (or empty + poison)
                 }
             }
@@ -402,8 +524,15 @@ fn run_scenario(
     let stats = m.run(vec![producer, consumer, watchdog]);
 
     let (ring_committed, ring_settled) = match scenario {
-        Scenario::Pkt => match rt.chan_counters(target.load(Ordering::SeqCst)) {
+        Scenario::Pkt | Scenario::Sclr => match rt.chan_counters(target.load(Ordering::SeqCst)) {
             Some((u, a)) => (Some(u / 2), u % 2 == 0 && a % 2 == 0 && u == a),
+            None => (None, false),
+        },
+        // A batch issues one counter pair for the whole run of payloads,
+        // so `update/2` counts calls, not messages: settle-check only,
+        // and infer the committed prefix from the sequences themselves.
+        Scenario::PktBatch => match rt.chan_counters(target.load(Ordering::SeqCst)) {
+            Some((u, a)) => (None, u % 2 == 0 && a % 2 == 0 && u == a),
             None => (None, false),
         },
         Scenario::Msg => (None, true),
@@ -433,7 +562,9 @@ fn run_scenario(
 // ---------------------------------------------------------------------------
 
 /// Check the recovery invariants; returns `(committed, gap, failures)`.
-fn judge(out: &Outcome) -> (u64, u64, Vec<String>) {
+/// `max_hole` is the scenario's admissible consumer-kill hole (see
+/// [`Scenario::admissible_hole`]).
+fn judge(out: &Outcome, max_hole: u64) -> (u64, u64, Vec<String>) {
     let mut fails = Vec::new();
     if out.torn != 0 {
         fails.push(format!("{} torn frames", out.torn));
@@ -461,17 +592,21 @@ fn judge(out: &Outcome) -> (u64, u64, Vec<String>) {
                 fails.push("delivered+drained != committed prefix (loss/dup/reorder)".into());
             }
         }
-        1 => {
+        g if g <= max_hole => {
             // Only admissible hole: the consumer died between
-            // acknowledging a message and reporting it to the caller.
+            // acknowledging and reporting to the caller — one message on
+            // scalar paths, up to one batch on the batched drain. The
+            // hole is FIFO-contiguous, right after the last delivery.
             if out.consumer_clean {
-                fails.push("one committed message missing without a consumer kill".into());
+                fails.push(format!("{g} committed messages missing without a consumer kill"));
             }
             let hole = out.delivered.len() as u64;
-            let expected: Vec<u64> = (0..committed).filter(|&s| s != hole).collect();
+            let expected: Vec<u64> =
+                (0..committed).filter(|&s| s < hole || s >= hole + g).collect();
             if combined != expected {
                 fails.push(format!(
-                    "missing message is not the ack-boundary hole (expected seq {hole})"
+                    "missing messages are not the ack-boundary hole (expected seqs {hole}..{})",
+                    hole + g
                 ));
             }
         }
@@ -532,7 +667,7 @@ pub fn run_seeded(opts: &ChaosOpts) -> ChaosReport {
     let plan = FaultPlan::from_seed(opts.seed, 2, 400);
     let events: Vec<String> = plan.events().map(fmt_event).collect();
     let out = run_scenario(opts.scenario, plan, opts.messages, opts.recv_timeout_ns);
-    let (committed, gap, fails) = judge(&out);
+    let (committed, gap, fails) = judge(&out, opts.scenario.admissible_hole());
     let prefix = format!(
         "chaos seed={} scenario={} msgs={} events=[{}]",
         opts.seed,
@@ -551,7 +686,7 @@ pub fn run_seeded(opts: &ChaosOpts) -> ChaosReport {
 pub fn run_kill_sweep(scenario: Scenario, victim: Victim, messages: u64) -> ChaosReport {
     let opts = ChaosOpts { scenario, messages, ..Default::default() };
     let probe = run_scenario(scenario, FaultPlan::new(), messages, opts.recv_timeout_ns);
-    let (_, _, probe_fails) = judge(&probe);
+    let (_, _, probe_fails) = judge(&probe, scenario.admissible_hole());
     let window = match victim {
         Victim::Producer => probe.prod_window,
         Victim::Consumer => probe.cons_window,
@@ -579,9 +714,72 @@ pub fn run_kill_sweep(scenario: Scenario, victim: Victim, messages: u64) -> Chao
     )];
     for (k, plan) in sweep_kill_points(window) {
         let out = run_scenario(scenario, plan, messages, opts.recv_timeout_ns);
-        let (committed, gap, fails) = judge(&out);
+        let (committed, gap, fails) = judge(&out, scenario.admissible_hole());
         pass &= fails.is_empty();
         lines.push(fmt_line(&format!("  kill@{k}"), &out, committed, gap, &fails));
+    }
+    lines.push(format!("sweep verdict={}", if pass { "PASS" } else { "FAIL" }));
+    ChaosReport { text: lines.join("\n"), pass }
+}
+
+/// Stall-point sweep: like [`run_kill_sweep`], but instead of killing
+/// the victim it freezes the victim for `stall_ns` of virtual time at
+/// every priced-op index inside the probed window. A stall kills no
+/// one, so the bar is *strictly higher* than the kill sweep's: every
+/// point must deliver the complete stream with both sides finishing
+/// clean — no gap, no salvage, no leases leaked. This is the liveness
+/// gate for the peer-active handshakes (`WouldBlockPeerActive`,
+/// doorbell re-check): a consumer frozen mid-acknowledge or a producer
+/// frozen mid-publish must delay, never wedge or corrupt, the stream.
+pub fn run_stall_sweep(
+    scenario: Scenario,
+    victim: Victim,
+    messages: u64,
+    stall_ns: u64,
+) -> ChaosReport {
+    let opts = ChaosOpts { scenario, messages, ..Default::default() };
+    let probe = run_scenario(scenario, FaultPlan::new(), messages, opts.recv_timeout_ns);
+    let (_, _, probe_fails) = judge(&probe, scenario.admissible_hole());
+    let window = match victim {
+        Victim::Producer => probe.prod_window,
+        Victim::Consumer => probe.cons_window,
+    };
+    let Some(window) = window else {
+        return ChaosReport {
+            text: format!(
+                "stall-sweep scenario={} victim={} verdict=FAIL[probe run never reached \
+                 the bracketed operation]",
+                scenario.label(),
+                victim.label()
+            ),
+            pass: false,
+        };
+    };
+    let mut pass = probe_fails.is_empty();
+    let mut lines = vec![format!(
+        "stall-sweep scenario={} victim={} stall_ns={} window={}..{} points={} probe={}",
+        scenario.label(),
+        victim.label(),
+        stall_ns,
+        window.start,
+        window.end,
+        window.len(),
+        if pass { "PASS" } else { "FAIL" }
+    )];
+    for (k, plan) in sweep_stall_points(window, stall_ns) {
+        let out = run_scenario(scenario, plan, messages, opts.recv_timeout_ns);
+        let (committed, gap, mut fails) = judge(&out, scenario.admissible_hole());
+        if !(out.producer_clean && out.consumer_clean) {
+            fails.push("a stalled victim did not finish clean".into());
+        }
+        if (out.delivered.len() as u64) < messages {
+            fails.push(format!(
+                "stalled run delivered {}/{messages} in-band",
+                out.delivered.len()
+            ));
+        }
+        pass &= fails.is_empty();
+        lines.push(fmt_line(&format!("  stall@{k}"), &out, committed, gap, &fails));
     }
     lines.push(format!("sweep verdict={}", if pass { "PASS" } else { "FAIL" }));
     ChaosReport { text: lines.join("\n"), pass }
@@ -593,15 +791,20 @@ mod tests {
 
     #[test]
     fn fault_free_run_delivers_everything() {
-        for scenario in [Scenario::Pkt, Scenario::Msg] {
+        for scenario in
+            [Scenario::Pkt, Scenario::Msg, Scenario::Sclr, Scenario::PktBatch]
+        {
             let out = run_scenario(scenario, FaultPlan::new(), 12, 2_000_000);
-            let (committed, gap, fails) = judge(&out);
+            let (committed, gap, fails) = judge(&out, scenario.admissible_hole());
             assert!(fails.is_empty(), "{scenario:?}: {fails:?}");
-            assert_eq!(committed, 12);
-            assert_eq!(gap, 0);
-            assert_eq!(out.delivered.len(), 12);
-            assert!(out.producer_clean && out.consumer_clean);
-            assert!(out.prod_window.is_some() && out.cons_window.is_some());
+            assert_eq!(committed, 12, "{scenario:?}");
+            assert_eq!(gap, 0, "{scenario:?}");
+            assert_eq!(out.delivered.len(), 12, "{scenario:?}");
+            assert!(out.producer_clean && out.consumer_clean, "{scenario:?}");
+            assert!(
+                out.prod_window.is_some() && out.cons_window.is_some(),
+                "{scenario:?}"
+            );
         }
     }
 
@@ -626,5 +829,26 @@ mod tests {
         bad[3] ^= 0x40;
         assert_eq!(parse_frame(&bad), None);
         assert_eq!(parse_frame(&f[..12]), None);
+    }
+
+    #[test]
+    fn scalar_frame_checksum_catches_corruption() {
+        let v = sclr_frame(9);
+        assert_eq!(parse_sclr(v), Some(9));
+        assert_eq!(parse_sclr(v ^ 0x10), None);
+        assert_eq!(parse_sclr(v ^ (0x10 << 32)), None);
+    }
+
+    #[test]
+    fn seeded_runs_pass_on_new_scenarios() {
+        for scenario in [Scenario::Sclr, Scenario::PktBatch] {
+            for seed in 1..=2u64 {
+                let opts = ChaosOpts { scenario, seed, messages: 12, ..Default::default() };
+                let a = run_seeded(&opts);
+                assert!(a.pass, "seed {seed} {scenario:?}: {}", a.text);
+                let b = run_seeded(&opts);
+                assert_eq!(a.text, b.text, "seed {seed} report must reproduce exactly");
+            }
+        }
     }
 }

@@ -15,7 +15,10 @@
 //!   Figure 8 report generators.
 //! * [`chaos`] — fault-injection harness: stress workloads under
 //!   deterministic kills/stalls with recovery-invariant checking and
-//!   reproducible per-seed reports (seeded mode + kill-point sweeps).
+//!   reproducible per-seed reports (seeded mode + kill/stall sweeps).
+//! * [`mpmc`] — the N×M multi-consumer harness: producers fan work into
+//!   one MPMC endpoint, a consumer group drains it, exactly-once judged
+//!   under fault-free, seeded-chaos and kill-sweep modes.
 //! * [`trace`] — the same drivers with the [`crate::obs`] plane armed:
 //!   drained stage-latency histograms, trace exporters, and the
 //!   event-stream replay verdict.
@@ -23,11 +26,15 @@
 pub mod chaos;
 pub mod experiment;
 pub mod metrics;
+pub mod mpmc;
 pub mod runner;
 pub mod topology;
 pub mod trace;
 
-pub use chaos::{run_kill_sweep, run_seeded, ChaosOpts, ChaosReport, Scenario, Victim};
+pub use chaos::{
+    run_kill_sweep, run_seeded, run_stall_sweep, ChaosOpts, ChaosReport, Scenario, Victim,
+};
+pub use mpmc::{run_mpmc_chaos, run_mpmc_kill_sweep, run_mpmc_stress, MpmcOpts, MpmcReport};
 pub use experiment::{Cell, CellResult, Matrix};
 pub use metrics::StressReport;
 pub use runner::{run_pingpong_real, run_pingpong_sim, run_stress_real, run_stress_sim, StressOpts};

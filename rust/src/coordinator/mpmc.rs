@@ -1,0 +1,501 @@
+//! N×M MPMC endpoint harness: many producers fan checksummed frames
+//! into one multi-consumer endpoint, a consumer group drains it, and a
+//! set-based judge checks **exactly-once** delivery — fault-free, under
+//! seeded chaos, and under kill-point sweeps with either role as the
+//! victim.
+//!
+//! The judge is deliberately set-based, not FIFO-based: dead-consumer
+//! recovery salvages wedged claims and *re-enqueues* them
+//! ([`crate::mcapi::queue::ConsumerGroup::repair_dead`]), so global
+//! FIFO order is not preserved across a repair — but the delivered
+//! multiset must still equal the sent set exactly. The admissible
+//! API-boundary holes mirror the SPSC chaos harness, per victim:
+//!
+//! * a killed **consumer** may lose at most one message per kill — the
+//!   one it acknowledged but never returned to the caller;
+//! * a killed **producer** may *add* at most one message per kill that
+//!   its caller never saw confirmed — committed by the ring, delivered
+//!   downstream, but the sender died before `msg_send` returned `Ok`.
+//!
+//! Duplicates and torn frames are never admissible, and every pool
+//! lease must be accounted for after recovery.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::lockfree::World;
+use crate::mcapi::types::{BackendKind, EndpointId, RuntimeCfg};
+use crate::mcapi::McapiRuntime;
+use crate::os::{AffinityMode, OsProfile};
+use crate::sim::faults::{sweep_kill_points, FaultAction, FaultPlan, OpWindow};
+use crate::sim::{Machine, MachineCfg, SimWorld};
+
+use super::chaos::{frame, parse_frame, Victim};
+
+/// Dense node slot owning the MPMC endpoint (the watchdog's node —
+/// never a fault target, and the fallback claimant for the final
+/// drain).
+const NODE_EP: usize = 0;
+
+/// MPMC harness parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MpmcOpts {
+    /// Producer tasks (spawn-order tasks `0..producers`).
+    pub producers: usize,
+    /// Consumer tasks (spawn-order tasks `producers..producers+consumers`).
+    pub consumers: usize,
+    /// Frames **per producer**.
+    pub messages: u64,
+    /// Seed for [`FaultPlan::from_seed`] in [`run_mpmc_chaos`].
+    pub seed: u64,
+}
+
+impl Default for MpmcOpts {
+    fn default() -> Self {
+        MpmcOpts { producers: 2, consumers: 2, messages: 12, seed: 1 }
+    }
+}
+
+/// A finished MPMC run: deterministic report text plus the verdict.
+#[derive(Debug, Clone)]
+pub struct MpmcReport {
+    /// Human-readable, byte-for-byte reproducible per seed.
+    pub text: String,
+    /// True when every invariant held.
+    pub pass: bool,
+    /// Frames delivered in-band (consumer pops, excluding salvage).
+    pub delivered: usize,
+}
+
+/// Everything observable after one machine run (host-side state only).
+struct Outcome {
+    /// Sequences each producer saw confirmed (`msg_send` returned `Ok`).
+    sent: Vec<u64>,
+    /// Sequences the consumer group delivered, claim order per consumer.
+    delivered: Vec<u64>,
+    /// Sequences the watchdog drained after everyone stopped.
+    drained: Vec<u64>,
+    torn: u64,
+    /// Per worker task (producers then consumers): finished cleanly.
+    clean: Vec<bool>,
+    leaked: u64,
+    reclaimed: u64,
+    vtime_ns: u64,
+    prod_window: Option<OpWindow>,
+    cons_window: Option<OpWindow>,
+}
+
+fn run_mpmc(opts: &MpmcOpts, plan: FaultPlan) -> Outcome {
+    let producers = opts.producers.max(1);
+    let consumers = opts.consumers.max(1);
+    let messages = opts.messages;
+    let workers = producers + consumers;
+    let m = Machine::new(MachineCfg::new(
+        4,
+        OsProfile::linux_rt(),
+        AffinityMode::PinnedSpread,
+    ));
+    let cfg = RuntimeCfg {
+        backend: BackendKind::LockFree,
+        max_nodes: 1 + workers,
+        nbb_capacity: 8,
+        pool_buffers: 64,
+        ..Default::default()
+    };
+    let rt = McapiRuntime::<SimWorld>::new(cfg);
+    let dst = EndpointId::new(0, NODE_EP as u16, 1);
+
+    // Host-side coordination (unpriced; invisible to the op indices the
+    // fault plan keys on for the victims).
+    let ready = Arc::new(AtomicBool::new(false));
+    let ep_slot = Arc::new(AtomicUsize::new(usize::MAX));
+    let halt = Arc::new(AtomicBool::new(false));
+    let clean: Vec<Arc<AtomicBool>> =
+        (0..workers).map(|_| Arc::new(AtomicBool::new(false))).collect();
+    let sent = Arc::new(Mutex::new(Vec::new()));
+    let delivered = Arc::new(Mutex::new(Vec::new()));
+    let drained = Arc::new(Mutex::new(Vec::new()));
+    let torn = Arc::new(AtomicU64::new(0));
+    let leaked = Arc::new(AtomicU64::new(0));
+    let windows = Arc::new(Mutex::new((None::<OpWindow>, None::<OpWindow>)));
+    let mark = messages / 2;
+
+    let mut handles = Vec::with_capacity(workers + 1);
+
+    // Tasks 0..P: producers. Producer `p` owns node `1 + p` and streams
+    // the global sequences `p*messages .. (p+1)*messages`, recording
+    // each one host-side only *after* `msg_send` confirms it.
+    for p in 0..producers {
+        let (rt, ready) = (rt.clone(), ready.clone());
+        let (clean, windows, sent) = (clean[p].clone(), windows.clone(), sent.clone());
+        handles.push(m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let node = 1 + p;
+            'stream: for j in 0..messages {
+                let seq = p as u64 * messages + j;
+                let fr = frame(seq);
+                // Bracket the priced-op window of producer 0's
+                // mid-stream send for the kill sweep.
+                let start =
+                    if p == 0 && j == mark { Some(SimWorld::op_count()) } else { None };
+                loop {
+                    match rt.msg_send(node, dst, &fr, 0) {
+                        Ok(()) => {
+                            sent.lock().unwrap().push(seq);
+                            break;
+                        }
+                        Err(s) if s.is_would_block() => SimWorld::yield_now(),
+                        Err(_) => break 'stream,
+                    }
+                }
+                if let Some(s) = start {
+                    windows.lock().unwrap().0 =
+                        Some(OpWindow { task: p, start: s, end: SimWorld::op_count() });
+                }
+            }
+            clean.store(true, Ordering::SeqCst);
+        }));
+    }
+
+    // Tasks P..P+C: consumers. Consumer `c` owns node `1+P+c`, attaches
+    // to the group, and claim-drains until the watchdog raises `halt`.
+    for c in 0..consumers {
+        let (rt, ready, ep_slot) = (rt.clone(), ready.clone(), ep_slot.clone());
+        let (clean, windows) = (clean[producers + c].clone(), windows.clone());
+        let (delivered, torn, halt) = (delivered.clone(), torn.clone(), halt.clone());
+        handles.push(m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let ep = ep_slot.load(Ordering::SeqCst);
+            let node = 1 + producers + c;
+            rt.endpoint_attach_consumer(ep, node).unwrap();
+            let mut buf = [0u8; 64];
+            let mut got_mine = 0u64;
+            loop {
+                // Bracket consumer 0's receive attempts until its first
+                // successful claim; the last bracket written covers the
+                // successful pop (kill-sweep probe window).
+                let start = if c == 0 && got_mine == 0 {
+                    Some(SimWorld::op_count())
+                } else {
+                    None
+                };
+                let r = rt.msg_recv(ep, &mut buf);
+                if let Some(s) = start {
+                    windows.lock().unwrap().1 = Some(OpWindow {
+                        task: producers + c,
+                        start: s,
+                        end: SimWorld::op_count(),
+                    });
+                }
+                match r {
+                    Ok(n) => {
+                        got_mine += 1;
+                        match parse_frame(&buf[..n]) {
+                            Some(seq) => delivered.lock().unwrap().push(seq),
+                            None => {
+                                torn.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                    Err(s) if s.is_would_block() => {
+                        if halt.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        SimWorld::yield_now();
+                    }
+                    Err(_) => break,
+                }
+            }
+            clean.store(true, Ordering::SeqCst);
+        }));
+    }
+
+    // Last task: watchdog. Never a fault target. Creates the endpoint
+    // (so a victim killed at op 0 cannot wedge the rendezvous), declares
+    // abnormal deaths, raises `halt` once the stream has drained, then
+    // salvages anything recovery re-exposed and audits the pool.
+    {
+        let (rt, ready, ep_slot) = (rt.clone(), ready.clone(), ep_slot.clone());
+        let clean_flags: Vec<Arc<AtomicBool>> = clean.clone();
+        let (drained, torn, leaked) = (drained.clone(), torn.clone(), leaked.clone());
+        let halt = halt.clone();
+        handles.push(m.spawn(move || {
+            let ep = rt.create_endpoint(dst, NODE_EP).unwrap();
+            ep_slot.store(ep, Ordering::SeqCst);
+            ready.store(true, Ordering::SeqCst);
+            let mut declared = vec![false; workers];
+            let mut stable = 0u32;
+            loop {
+                let mut all_done = true;
+                let mut prod_done = true;
+                for t in 0..workers {
+                    let done = SimWorld::task_done(t);
+                    all_done &= done;
+                    if t < producers {
+                        prod_done &= done;
+                    }
+                    if done && !declared[t] && !clean_flags[t].load(Ordering::SeqCst) {
+                        // Worker task `t` owns node `1 + t` on both
+                        // sides of the split.
+                        rt.declare_node_dead(1 + t);
+                        declared[t] = true;
+                    }
+                }
+                // Raise `halt` only after the producers stopped, every
+                // abnormal death was declared (salvage re-enqueued), and
+                // the endpoint stayed empty for a few consecutive polls.
+                if prod_done && rt.msg_available(ep).unwrap_or(0) == 0 {
+                    stable += 1;
+                    if stable >= 3 {
+                        halt.store(true, Ordering::SeqCst);
+                    }
+                } else {
+                    stable = 0;
+                }
+                if all_done {
+                    break;
+                }
+                SimWorld::yield_now();
+            }
+            // Salvage: claims wedged by consumers that died after `halt`
+            // were re-enqueued by their declare; drain them here as the
+            // fallback claimant (the endpoint owner never attaches).
+            let mut buf = [0u8; 64];
+            while let Ok(n) = rt.msg_recv(ep, &mut buf) {
+                match parse_frame(&buf[..n]) {
+                    Some(seq) => drained.lock().unwrap().push(seq),
+                    None => {
+                        torn.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            let free = rt.buffers_available() as u64;
+            leaked.store(
+                (rt.cfg().pool_buffers as u64).saturating_sub(free),
+                Ordering::SeqCst,
+            );
+        }));
+    }
+
+    m.set_faults(plan);
+    let stats = m.run(handles);
+
+    let (w0, w1) = *windows.lock().unwrap();
+    Outcome {
+        sent: sent.lock().unwrap().clone(),
+        delivered: delivered.lock().unwrap().clone(),
+        drained: drained.lock().unwrap().clone(),
+        torn: torn.load(Ordering::SeqCst),
+        clean: clean.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
+        leaked: leaked.load(Ordering::SeqCst),
+        reclaimed: rt.leases_reclaimed(),
+        vtime_ns: stats.virtual_ns,
+        prod_window: w0,
+        cons_window: w1,
+    }
+}
+
+/// Set-based exactly-once judge; returns `(missing, extra, failures)`.
+fn judge(out: &Outcome, opts: &MpmcOpts) -> (u64, u64, Vec<String>) {
+    let producers = opts.producers.max(1);
+    let total = producers as u64 * opts.messages;
+    let mut fails = Vec::new();
+    if out.torn != 0 {
+        fails.push(format!("{} torn frames", out.torn));
+    }
+    let killed_prod = out.clean[..producers].iter().filter(|c| !**c).count() as u64;
+    let killed_cons = out.clean[producers..].iter().filter(|c| !**c).count() as u64;
+    let sent: BTreeSet<u64> = out.sent.iter().copied().collect();
+    let mut observed: Vec<u64> =
+        out.delivered.iter().chain(out.drained.iter()).copied().collect();
+    observed.sort_unstable();
+    if observed.windows(2).any(|w| w[0] == w[1]) {
+        fails.push("duplicate delivery".into());
+    }
+    let observed_set: BTreeSet<u64> = observed.iter().copied().collect();
+    if let Some(&bad) = observed_set.iter().find(|s| **s >= total) {
+        fails.push(format!("unknown sequence {bad} delivered"));
+    }
+    // Missing: confirmed to a sender, never seen again. Only a killed
+    // consumer's ack-boundary can eat one, one per kill.
+    let missing = sent.difference(&observed_set).count() as u64;
+    if missing > killed_cons {
+        fails.push(format!(
+            "{missing} confirmed messages missing ({killed_cons} consumer kills admit \
+             at most {killed_cons})"
+        ));
+    }
+    // Extra: delivered but never confirmed. Only a producer killed
+    // between the ring commit and its `Ok` can add one, one per kill.
+    let extra = observed_set.difference(&sent).count() as u64;
+    if extra > killed_prod {
+        fails.push(format!(
+            "{extra} unconfirmed messages delivered ({killed_prod} producer kills admit \
+             at most {killed_prod})"
+        ));
+    }
+    if out.leaked != 0 {
+        fails.push(format!("{} pool leases leaked", out.leaked));
+    }
+    (missing, extra, fails)
+}
+
+fn fmt_event((t, k, a): (usize, u64, FaultAction)) -> String {
+    match a {
+        FaultAction::Kill => format!("kill(t{t}@{k})"),
+        FaultAction::Stall(ns) => format!("stall(t{t}@{k},{ns}ns)"),
+        FaultAction::Delay(ns) => format!("delay(t{t}@{k},{ns}ns)"),
+    }
+}
+
+fn fmt_line(prefix: &str, out: &Outcome, missing: u64, extra: u64, fails: &[String]) -> String {
+    let verdict = if fails.is_empty() {
+        "PASS".to_string()
+    } else {
+        format!("FAIL[{}]", fails.join("; "))
+    };
+    let clean: Vec<&str> =
+        out.clean.iter().map(|c| if *c { "t" } else { "f" }).collect();
+    format!(
+        "{prefix} sent={} delivered={} drained={} missing={missing} extra={extra} \
+         torn={} leaked={} reclaimed={} clean=[{}] vtime_ns={} verdict={verdict}",
+        out.sent.len(),
+        out.delivered.len(),
+        out.drained.len(),
+        out.torn,
+        out.leaked,
+        out.reclaimed,
+        clean.join(""),
+        out.vtime_ns,
+    )
+}
+
+/// Fault-free N×M stress: every frame confirmed, delivered in-band,
+/// exactly once, nothing leaked.
+pub fn run_mpmc_stress(opts: &MpmcOpts) -> MpmcReport {
+    let out = run_mpmc(opts, FaultPlan::new());
+    let (missing, extra, mut fails) = judge(&out, opts);
+    let total = opts.producers.max(1) as u64 * opts.messages;
+    if out.sent.len() as u64 != total {
+        fails.push(format!("only {}/{total} sends confirmed", out.sent.len()));
+    }
+    if out.clean.iter().any(|c| !c) {
+        fails.push("a fault-free worker did not finish clean".into());
+    }
+    let prefix = format!(
+        "mpmc producers={} consumers={} msgs={}",
+        opts.producers, opts.consumers, opts.messages
+    );
+    MpmcReport {
+        text: fmt_line(&prefix, &out, missing, extra, &fails),
+        pass: fails.is_empty(),
+        delivered: out.delivered.len(),
+    }
+}
+
+/// Seeded chaos on the N×M topology: a 1–3 event fault plan over the
+/// worker tasks (the watchdog is never a target). Deterministic: the
+/// same opts produce the same report byte-for-byte.
+pub fn run_mpmc_chaos(opts: &MpmcOpts) -> MpmcReport {
+    let workers = opts.producers.max(1) + opts.consumers.max(1);
+    let plan = FaultPlan::from_seed(opts.seed, workers, 400);
+    let events: Vec<String> = plan.events().map(fmt_event).collect();
+    let out = run_mpmc(opts, plan);
+    let (missing, extra, fails) = judge(&out, opts);
+    let prefix = format!(
+        "mpmc-chaos seed={} producers={} consumers={} msgs={} events=[{}]",
+        opts.seed,
+        opts.producers,
+        opts.consumers,
+        opts.messages,
+        events.join(",")
+    );
+    MpmcReport {
+        text: fmt_line(&prefix, &out, missing, extra, &fails),
+        pass: fails.is_empty(),
+        delivered: out.delivered.len(),
+    }
+}
+
+/// Kill-point sweep over the MPMC plane: probe the victim's priced-op
+/// window (producer 0's mid-stream send, or consumer 0's first claim),
+/// then kill the victim at every op index inside it, one fresh machine
+/// per point. Every point must uphold exactly-once within the victim's
+/// admissible hole.
+pub fn run_mpmc_kill_sweep(victim: Victim, opts: &MpmcOpts) -> MpmcReport {
+    let probe = run_mpmc(opts, FaultPlan::new());
+    let (_, _, probe_fails) = judge(&probe, opts);
+    let window = match victim {
+        Victim::Producer => probe.prod_window,
+        Victim::Consumer => probe.cons_window,
+    };
+    let Some(window) = window else {
+        return MpmcReport {
+            text: format!(
+                "mpmc-sweep victim={} verdict=FAIL[probe run never reached the \
+                 bracketed operation]",
+                victim.label()
+            ),
+            pass: false,
+            delivered: probe.delivered.len(),
+        };
+    };
+    let mut pass = probe_fails.is_empty();
+    let delivered = probe.delivered.len();
+    let mut lines = vec![format!(
+        "mpmc-sweep victim={} producers={} consumers={} msgs={} window={}..{} points={} probe={}",
+        victim.label(),
+        opts.producers,
+        opts.consumers,
+        opts.messages,
+        window.start,
+        window.end,
+        window.len(),
+        if pass { "PASS" } else { "FAIL" }
+    )];
+    for (k, plan) in sweep_kill_points(window) {
+        let out = run_mpmc(opts, plan);
+        let (missing, extra, fails) = judge(&out, opts);
+        pass &= fails.is_empty();
+        lines.push(fmt_line(&format!("  kill@{k}"), &out, missing, extra, &fails));
+    }
+    lines.push(format!("sweep verdict={}", if pass { "PASS" } else { "FAIL" }));
+    MpmcReport { text: lines.join("\n"), pass, delivered }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_free_mpmc_delivers_exactly_once() {
+        let opts = MpmcOpts { messages: 10, ..Default::default() };
+        let r = run_mpmc_stress(&opts);
+        assert!(r.pass, "{}", r.text);
+        assert_eq!(r.delivered, 20, "{}", r.text);
+    }
+
+    #[test]
+    fn seeded_mpmc_chaos_passes_and_reproduces() {
+        for seed in 1..=3u64 {
+            let opts = MpmcOpts { seed, messages: 10, ..Default::default() };
+            let a = run_mpmc_chaos(&opts);
+            assert!(a.pass, "seed {seed}: {}", a.text);
+            let b = run_mpmc_chaos(&opts);
+            assert_eq!(a.text, b.text, "seed {seed} report must reproduce exactly");
+        }
+    }
+
+    #[test]
+    fn single_consumer_group_still_passes() {
+        let opts = MpmcOpts { consumers: 1, messages: 8, ..Default::default() };
+        let r = run_mpmc_stress(&opts);
+        assert!(r.pass, "{}", r.text);
+        assert_eq!(r.delivered, 16, "{}", r.text);
+    }
+}

@@ -48,6 +48,8 @@ pub struct TraceRun {
     pub counters: Vec<(String, u64)>,
     /// Lane-ring records lost to overflow (0 in every gate).
     pub dropped: u64,
+    /// Per-lane `(high_water, dropped)` drop watermarks, lane order.
+    pub lanes: Vec<(u64, u64)>,
     /// The stress report (stress runs only).
     pub stress: Option<StressReport>,
     /// The chaos harness's own verdict (chaos runs only).
@@ -82,13 +84,16 @@ impl TraceRun {
     /// greps into `BENCH_trace.json`.
     pub fn bench_json_line(&self) -> String {
         let m = self.collector.merged_stages();
+        let lane_peak = self.lanes.iter().map(|(hw, _)| *hw).max().unwrap_or(0);
         format!(
             "BENCH_JSON: {{\"trace_events\": {}, \"trace_dropped\": {}, \
+             \"trace_lane_peak\": {}, \
              \"trace_send_commit_p50_ns\": {}, \"trace_send_commit_p99_ns\": {}, \
              \"trace_commit_doorbell_p99_ns\": {}, \"trace_doorbell_wakeup_p99_ns\": {}, \
              \"trace_wakeup_recv_p99_ns\": {}, \"trace_replay_pass\": {}}}",
             self.events(),
             self.dropped,
+            lane_peak,
             m.send_commit.p50(),
             m.send_commit.p99(),
             m.commit_doorbell.p99(),
@@ -136,10 +141,11 @@ fn disarm_and_collect(stress: Option<StressReport>, chaos: Option<ChaosReport>) 
     obs::set_enabled(false);
     let events = obs::drain();
     let dropped = obs::dropped();
+    let lanes = obs::lanes_snapshot();
     let counters = obs::counters_snapshot();
     let collector = Collector::from_events(events);
     let replay = collector.replay_check();
-    TraceRun { collector, replay, counters, dropped, stress, chaos }
+    TraceRun { collector, replay, counters, dropped, lanes, stress, chaos }
 }
 
 /// Run a one-way stress topology with tracing armed.
@@ -189,8 +195,13 @@ mod tests {
             assert_eq!(h.count(), 64, "stage {name}");
         }
         assert!(run.counters.iter().any(|(n, v)| n == "ring.send" && *v == 64));
+        // Per-lane drop watermarks ride along: at least one lane
+        // buffered events this run, and nothing overflowed.
+        assert!(run.lanes.iter().any(|(hw, _)| *hw > 0), "{:?}", run.lanes);
+        assert!(run.lanes.iter().all(|(_, dr)| *dr == 0), "{:?}", run.lanes);
         let line = run.bench_json_line();
         assert!(line.contains("\"trace_replay_pass\": 1"), "{line}");
+        assert!(line.contains("\"trace_lane_peak\""), "{line}");
         assert!(run.collector.chrome_trace_json().contains("\"traceEvents\""));
     }
 

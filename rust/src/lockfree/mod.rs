@@ -10,6 +10,14 @@
 //!   written directly, no shared pool lease) plus batch submission and
 //!   in-place zero-copy consumption — the fast path behind
 //!   `mcapi::channel`.
+//! * [`mpmc`] — the slot-sequence MPMC ring for multi-receiver endpoint
+//!   profiles: per-slot [`mem::CachePadded`] sequence words arbitrate
+//!   Vyukov-style claim/publish between N producers and M consumers,
+//!   one shared-counter CAS per claim (amortized over a whole batch by
+//!   [`mpmc::MpmcRing::send_batch`]), with claimant-board crash repair
+//!   (`repair_dead`: tombstone dead-producer claims, salvage
+//!   dead-consumer claims). Backs `mcapi::queue::ConsumerGroup`; the
+//!   SPSC paths above stay untouched for 1:1 channels.
 //! * [`bitset`] — the lock-free bit-set request allocator that replaced
 //!   the infeasible lock-free doubly linked list (refactoring step 3),
 //!   doubling as the occupancy flag board for `mcapi::queue`.
@@ -76,6 +84,8 @@
 //! | task dies holding a [`freelist`] lease (buffer not yet queued / not yet released) | pool buffer leaked | custody shadow (`buffer_holder`) | dead holder's leases force-released back to the `FreeList`; `leases_reclaimed` counter | `buffers_available()` returns to pool size |
 //! | task dies between retry attempts ([`backoff`]) | none — no shared state mid-flight | — | nothing to repair; peers' `*_BUT_*` statuses decay to plain would-block | spin → yield → park, woken by poison |
 //! | peer stalls (alive but descheduled) | `*PeerActive` status persists | bounded immediate retries ([`Backoff`]) | escalate spin → `yield_now` → futex park with deadline | `Timeout` after its deadline, never a hang |
+//! | producer dies inside an [`mpmc`] claim (slot seq parked at `p`) | claimed-unpublished slot wedges every later position | claimant board (`writers[idx] == who+1`, stamped kill-atomically with the claim CAS) | `MpmcRing::repair_dead`: publish a [`mpmc::TOMBSTONE`] length word — consumers consume and skip it, freeing the slot | consumers resume past the wedge; no payload existed to lose |
+//! | consumer dies inside an [`mpmc`] claim (slot seq parked at `p+1`) | claimed-unconsumed payload wedges the slot's next lap | claimant board (`readers[idx]`) | `repair_dead` salvages the payload to the runtime (re-enqueued — the dead claim never completed, so exactly-once holds) and frees the slot | payload redelivered to a live consumer |
 //!
 //! The repairs are sound because each NBB/ring counter has a **single
 //! owner** (SPSC lanes) and occupancy uses floor division: an odd
@@ -88,6 +98,7 @@ pub mod bitset;
 pub mod freelist;
 pub mod fsm;
 pub mod mem;
+pub mod mpmc;
 pub mod nbb;
 pub mod nbw;
 pub mod ring;
@@ -97,6 +108,7 @@ pub use bitset::BitSet;
 pub use freelist::FreeList;
 pub use fsm::AtomicFsm;
 pub use mem::{Atom32, Atom64, CachePadded, KernelLock, RealWorld, World};
+pub use mpmc::{MpmcError, MpmcRing};
 pub use nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 pub use nbw::Nbw;
 pub use ring::{ChannelRing, RecvError, ScalarBatchError};

@@ -1,0 +1,845 @@
+//! Slot-sequence MPMC ring: the first structure in the repo where
+//! *both* sides contend — N producers claim slots with a shared tail
+//! CAS, M consumers claim with a shared head CAS, and per-slot
+//! sequence words arbitrate publication (the Vyukov bounded-queue
+//! design the lock-free survey arXiv:1302.2757 frames as the
+//! practical MPMC baseline; Virtual-Link arXiv:2012.05181 makes the
+//! case that a purpose-built MPMC cross-core queue beats naive CAS
+//! loops on coherence traffic).
+//!
+//! Contrast with the SPSC [`super::ring::ChannelRing`]: that design's
+//! single-owner counters need no RMW at all, which is why the 1:1
+//! connected-channel fast path keeps it untouched. This ring exists
+//! for the MCAPI multi-receiver endpoint profile
+//! ([`crate::mcapi::queue::ConsumerGroup`]): work distribution across
+//! M consumers, exactly-once per payload, unordered across consumers
+//! (each consumer still observes its own claims in claim order).
+//!
+//! Protocol (per slot, position `p`, capacity `cap`):
+//!
+//! * `seq == p`          — free: the producer claiming `p` may write.
+//! * `seq == p + 1`      — published: the consumer claiming `p` may read.
+//! * `seq == p + cap`    — consumed: free again for position `p + cap`.
+//!
+//! A producer claims position `p` by CAS on `tail` (only after seeing
+//! `seq == p`, so the CAS never claims an unconsumed slot); it writes
+//! the payload, then publishes with a release store `seq = p + 1`. A
+//! consumer mirrors this on `head`/`seq = p + cap`. Each sequence word
+//! sits on its own [`CachePadded`] line so publication traffic never
+//! false-shares with neighbouring slots, and every shared access is a
+//! priced [`World`] atom — the simulator sees the full coherence cost.
+//!
+//! [`MpmcRing::send_batch`] amortizes the shared-counter CAS: one
+//! `tail` CAS claims a verified-free *run* of k slots, then each slot
+//! is published independently — batch growth costs only per-slot
+//! lines, sim-asserted in `batched_claim_amortizes_shared_cas_in_sim`.
+//!
+//! ## Crash repair (chaos/PR 3 machinery)
+//!
+//! A task killed between claim and publish (or claim and consume)
+//! wedges the ring for everyone — Vyukov positions are strictly
+//! ordered, so one missing publication blocks every later consumer.
+//! Repair relies on *claimant boards*: host-side (unpriced) per-slot
+//! `AtomicU32` words recording who holds an open claim. The injected-
+//! kill model makes the board exact: faults fire at priced-op *entry*
+//! ([`crate::sim::machine`]), so the host store announcing a claim —
+//! placed immediately after the winning CAS with no priced op between
+//! — is kill-atomic with the claim itself, and the host clear after
+//! the publishing store is kill-atomic with publication. The clear
+//! uses `compare_exchange` against the owner's own stamp so a delayed
+//! clear can never erase a successor's claim on the recycled slot.
+//!
+//! [`MpmcRing::repair_dead`] then:
+//! * tombstones a dead *producer's* claimed-unpublished slot (length
+//!   word [`TOMBSTONE`]; consumers skip it and free the slot), and
+//! * salvages a dead *consumer's* claimed-unconsumed payload to a
+//!   closure (the runtime re-enqueues it — the dead claim never
+//!   completed, so exactly-once is preserved) and frees the slot.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::mem::{Atom64, CachePadded, World};
+use crate::obs;
+use crate::obs::EventKind;
+
+/// Length-word sentinel marking a repaired (tombstoned) slot:
+/// consumers consume and skip it without surfacing a payload.
+pub const TOMBSTONE: u32 = u32::MAX;
+
+/// Why an MPMC operation made no progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MpmcError {
+    /// Every slot in the claim window is unconsumed; retry after a
+    /// consumer frees one.
+    Full,
+    /// No published payload at the head position; retry after a
+    /// producer publishes (or a wedged claim is repaired).
+    Empty,
+}
+
+/// Bounded MPMC ring with per-slot sequence arbitration. `who`
+/// arguments stamp the claimant boards for crash repair — any stable
+/// small id works (the MCAPI layer passes node ids); producer and
+/// consumer boards are separate, so the id spaces may overlap.
+pub struct MpmcRing<W: World> {
+    /// Producer claim counter (next position to claim) — own line.
+    tail: CachePadded<W::U64>,
+    /// Consumer claim counter — own line.
+    head: CachePadded<W::U64>,
+    /// Per-slot sequence words, one padded line each (see protocol
+    /// table above).
+    seqs: Box<[CachePadded<W::U64>]>,
+    /// Per-slot payload length in bytes ([`TOMBSTONE`] = repaired).
+    lens: Box<[UnsafeCell<u32>]>,
+    /// Slot payload bytes: `cap * slot_len`, contiguous.
+    bytes: Box<[UnsafeCell<u8>]>,
+    /// Synthetic per-slot region (length word + payload) for
+    /// simulator cost accounting.
+    regions: Box<[u64]>,
+    /// Producer claimant board: `who + 1` while a producer holds an
+    /// open claim on the slot, 0 otherwise. Host-side and unpriced —
+    /// repair metadata must not perturb the priced protocol.
+    writers: Box<[AtomicU32]>,
+    /// Consumer claimant board, same contract.
+    readers: Box<[AtomicU32]>,
+    slot_len: usize,
+    cap: u64,
+    /// Observability channel id for trace events ([`obs::CH_NONE`]
+    /// when unmounted). Host atomic, never priced.
+    trace_id: AtomicU32,
+}
+
+unsafe impl<W: World> Send for MpmcRing<W> {}
+unsafe impl<W: World> Sync for MpmcRing<W> {}
+
+impl<W: World> MpmcRing<W> {
+    /// Ring with `cap` slots of `slot_len` payload bytes each.
+    /// `cap >= 2`: with one slot, "published at p" and "free for
+    /// p + cap" collapse onto the same sequence value.
+    pub fn new(cap: usize, slot_len: usize) -> Self {
+        assert!(cap >= 2, "mpmc ring capacity must be >= 2");
+        assert!(slot_len >= 1, "mpmc ring slot must hold at least one byte");
+        let seqs = (0..cap)
+            .map(|i| CachePadded::new(W::U64::new(i as u64)))
+            .collect::<Vec<_>>();
+        let lens = (0..cap).map(|_| UnsafeCell::new(0u32)).collect::<Vec<_>>();
+        let bytes = (0..cap * slot_len)
+            .map(|_| UnsafeCell::new(0u8))
+            .collect::<Vec<_>>();
+        let regions = (0..cap).map(|_| W::alloc_region(4 + slot_len)).collect::<Vec<_>>();
+        let writers = (0..cap).map(|_| AtomicU32::new(0)).collect::<Vec<_>>();
+        let readers = (0..cap).map(|_| AtomicU32::new(0)).collect::<Vec<_>>();
+        MpmcRing {
+            tail: CachePadded::new(W::U64::new(0)),
+            head: CachePadded::new(W::U64::new(0)),
+            seqs: seqs.into_boxed_slice(),
+            lens: lens.into_boxed_slice(),
+            bytes: bytes.into_boxed_slice(),
+            regions: regions.into_boxed_slice(),
+            writers: writers.into_boxed_slice(),
+            readers: readers.into_boxed_slice(),
+            slot_len,
+            cap: cap as u64,
+            trace_id: AtomicU32::new(obs::CH_NONE),
+        }
+    }
+
+    /// Tag this ring with its endpoint id for trace events.
+    pub fn set_trace_id(&self, id: u32) {
+        self.trace_id.store(id, Ordering::Relaxed);
+    }
+
+    /// The channel id trace events carry ([`obs::CH_NONE`] = unmounted).
+    pub fn trace_id(&self) -> u32 {
+        self.trace_id.load(Ordering::Relaxed)
+    }
+
+    /// Ring capacity in slots.
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Payload bytes per slot.
+    pub fn slot_len(&self) -> usize {
+        self.slot_len
+    }
+
+    /// Claims outstanding (approximate under concurrency — claim
+    /// counters, not completions; includes tombstones not yet
+    /// skipped). Monitoring only: unpriced peeks, safe from watchdogs.
+    pub fn len(&self) -> usize {
+        let t = self.tail.peek();
+        let h = self.head.peek();
+        t.wrapping_sub(h) as usize
+    }
+
+    /// True when no claims are outstanding (monitoring only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw `(tail, head)` claim counters — unpriced peeks for
+    /// watchdogs and post-run assertions.
+    pub fn counters_peek(&self) -> (u64, u64) {
+        (self.tail.peek(), self.head.peek())
+    }
+
+    /// Write `data` into slot `idx` with length word `len_word`
+    /// (inside an open producer claim).
+    fn write_slot(&self, idx: usize, data: &[u8], len_word: u32) {
+        debug_assert!(data.len() <= self.slot_len, "payload exceeds mpmc slot");
+        W::touch(self.regions[idx], 4 + data.len().max(1), true);
+        unsafe {
+            *self.lens[idx].get() = len_word;
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr(),
+                self.bytes[idx * self.slot_len].get(),
+                data.len(),
+            );
+        }
+    }
+
+    /// Slot `idx` as a byte slice of its recorded length (inside an
+    /// open consumer claim).
+    ///
+    /// # Safety
+    /// Caller must hold the consumer claim on `idx` (won the head CAS
+    /// for its position and not yet released the sequence word).
+    unsafe fn slot_bytes(&self, idx: usize, len: usize) -> &[u8] {
+        let len = len.min(self.slot_len);
+        W::touch(self.regions[idx], 4 + len.max(1), false);
+        std::slice::from_raw_parts(self.bytes[idx * self.slot_len].get() as *const u8, len)
+    }
+
+    /// Stamp the claimant board for `idx` (host-side, kill-atomic with
+    /// the claim CAS that immediately precedes it).
+    #[inline]
+    fn announce(board: &AtomicU32, who: u32) {
+        board.store(who.wrapping_add(1), Ordering::Relaxed);
+    }
+
+    /// Clear the board only if it still carries our stamp — a delayed
+    /// clear must never erase a successor's claim on the recycled slot.
+    #[inline]
+    fn retract(board: &AtomicU32, who: u32) {
+        let _ = board.compare_exchange(
+            who.wrapping_add(1),
+            0,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Producer side: claim one slot, copy `data` in, publish.
+    ///
+    /// # Panics
+    /// If `data` exceeds `slot_len` (caller bug; the MCAPI layer maps
+    /// oversize to `MessageLimit` before calling).
+    pub fn send(&self, who: u32, data: &[u8]) -> Result<(), MpmcError> {
+        assert!(data.len() <= self.slot_len, "payload exceeds mpmc slot");
+        let mut pos = self.tail.load_relaxed();
+        loop {
+            let idx = (pos % self.cap) as usize;
+            let seq = self.seqs[idx].load();
+            if seq == pos {
+                match self.tail.cas(pos, pos + 1) {
+                    Ok(_) => {
+                        // Claim won. Announce before any other priced
+                        // op so a kill inside the write window is
+                        // repairable (see module doc).
+                        Self::announce(&self.writers[idx], who);
+                        if obs::tracing() {
+                            obs::emit::<W>(EventKind::MpmcClaim, self.trace_id(), pos, 1);
+                        }
+                        self.write_slot(idx, data, data.len() as u32);
+                        self.seqs[idx].store(pos + 1); // publish
+                        Self::retract(&self.writers[idx], who);
+                        if obs::tracing() {
+                            obs::emit::<W>(
+                                EventKind::MpmcPublish,
+                                self.trace_id(),
+                                pos,
+                                data.len() as u32,
+                            );
+                            obs::bump(obs::ctr::MPMC_PUBLISH);
+                        }
+                        return Ok(());
+                    }
+                    Err(actual) => {
+                        pos = actual;
+                        W::spin_hint();
+                    }
+                }
+            } else if seq < pos {
+                // Previous generation not yet consumed: full.
+                return Err(MpmcError::Full);
+            } else {
+                // Another producer already claimed this position —
+                // our tail snapshot is stale.
+                pos = self.tail.load_relaxed();
+            }
+        }
+    }
+
+    /// Producer side: claim a verified-free *run* of up to
+    /// `payloads.len()` slots with **one** tail CAS, then publish each
+    /// slot independently. Returns how many went in; `Err(Full)` only
+    /// when there was room for none.
+    ///
+    /// # Panics
+    /// If any payload exceeds `slot_len` (checked up front).
+    pub fn send_batch(&self, who: u32, payloads: &[&[u8]]) -> Result<usize, MpmcError> {
+        if payloads.is_empty() {
+            return Ok(0);
+        }
+        assert!(
+            payloads.iter().all(|d| d.len() <= self.slot_len),
+            "payload exceeds mpmc slot"
+        );
+        let mut pos = self.tail.load_relaxed();
+        loop {
+            let idx0 = (pos % self.cap) as usize;
+            let s0 = self.seqs[idx0].load();
+            if s0 != pos {
+                if s0 < pos {
+                    return Err(MpmcError::Full);
+                }
+                pos = self.tail.load_relaxed();
+                continue;
+            }
+            // Extend the run while slots stay free (bounded by the
+            // batch and one lap — a run can never wrap onto itself).
+            let mut k = 1usize;
+            while k < payloads.len() && (k as u64) < self.cap {
+                let idx = ((pos + k as u64) % self.cap) as usize;
+                if self.seqs[idx].load() != pos + k as u64 {
+                    break;
+                }
+                k += 1;
+            }
+            match self.tail.cas(pos, pos + k as u64) {
+                Ok(_) => {
+                    if obs::tracing() {
+                        obs::emit::<W>(EventKind::MpmcClaim, self.trace_id(), pos, k as u32);
+                    }
+                    for (i, data) in payloads[..k].iter().enumerate() {
+                        let p = pos + i as u64;
+                        let idx = (p % self.cap) as usize;
+                        Self::announce(&self.writers[idx], who);
+                        self.write_slot(idx, data, data.len() as u32);
+                        self.seqs[idx].store(p + 1);
+                        Self::retract(&self.writers[idx], who);
+                        if obs::tracing() {
+                            obs::emit::<W>(
+                                EventKind::MpmcPublish,
+                                self.trace_id(),
+                                p,
+                                data.len() as u32,
+                            );
+                        }
+                    }
+                    if obs::tracing() {
+                        obs::add(obs::ctr::MPMC_PUBLISH, k as u64);
+                    }
+                    return Ok(k);
+                }
+                Err(actual) => {
+                    pos = actual;
+                    W::spin_hint();
+                }
+            }
+        }
+    }
+
+    /// Consumer side: claim the next published payload and consume it
+    /// **in place** — `f` sees the slot bytes directly. Tombstoned
+    /// slots (dead-producer repairs) are consumed and skipped
+    /// transparently.
+    ///
+    /// Empty-poll cost is O(1) words: one head load + one sequence
+    /// load, independent of capacity, producers, and consumers
+    /// (sim-asserted in `tests/mpmc_properties.rs`).
+    pub fn recv_with<R>(&self, who: u32, f: impl FnOnce(&[u8]) -> R) -> Result<R, MpmcError> {
+        let mut f = Some(f);
+        let mut pos = self.head.load_relaxed();
+        loop {
+            let idx = (pos % self.cap) as usize;
+            let seq = self.seqs[idx].load();
+            if seq == pos + 1 {
+                match self.head.cas(pos, pos + 1) {
+                    Ok(_) => {
+                        Self::announce(&self.readers[idx], who);
+                        if obs::tracing() {
+                            obs::emit::<W>(EventKind::MpmcSteal, self.trace_id(), pos, 0);
+                        }
+                        W::touch(self.regions[idx], 4, false);
+                        let len = unsafe { *self.lens[idx].get() };
+                        if len == TOMBSTONE {
+                            // Dead-producer repair: free the slot and
+                            // keep looking.
+                            self.seqs[idx].store(pos + self.cap);
+                            Self::retract(&self.readers[idx], who);
+                            pos = self.head.load_relaxed();
+                            continue;
+                        }
+                        let r = {
+                            let b = unsafe { self.slot_bytes(idx, len as usize) };
+                            (f.take().expect("mpmc closure consumed twice"))(b)
+                        };
+                        self.seqs[idx].store(pos + self.cap); // release
+                        Self::retract(&self.readers[idx], who);
+                        if obs::tracing() {
+                            obs::bump(obs::ctr::MPMC_CONSUME);
+                        }
+                        return Ok(r);
+                    }
+                    Err(_) => {
+                        pos = self.head.load_relaxed();
+                        W::spin_hint();
+                    }
+                }
+            } else if seq <= pos {
+                // Not yet published at this position. (A wedged dead-
+                // producer claim also parks consumers here until
+                // repair_dead tombstones it — positions are strictly
+                // ordered.)
+                return Err(MpmcError::Empty);
+            } else {
+                // Already claimed past us — stale head snapshot.
+                pos = self.head.load_relaxed();
+            }
+        }
+    }
+
+    /// Consumer side: copy the next payload into `out`; returns the
+    /// byte count copied (`min(payload len, out.len())`).
+    pub fn recv(&self, who: u32, out: &mut [u8]) -> Result<usize, MpmcError> {
+        self.recv_with(who, |b| {
+            let n = b.len().min(out.len());
+            out[..n].copy_from_slice(&b[..n]);
+            n
+        })
+    }
+
+    /// Consumer side: claim a run of up to `max` published slots with
+    /// one head CAS and append the payloads to `out` (tombstones are
+    /// consumed silently). Returns how many were appended — `Ok(0)` is
+    /// possible when the claimed run was all tombstones.
+    pub fn recv_batch(
+        &self,
+        who: u32,
+        out: &mut Vec<Vec<u8>>,
+        max: usize,
+    ) -> Result<usize, MpmcError> {
+        if max == 0 {
+            return Ok(0);
+        }
+        let mut pos = self.head.load_relaxed();
+        loop {
+            let idx0 = (pos % self.cap) as usize;
+            let s0 = self.seqs[idx0].load();
+            if s0 != pos + 1 {
+                if s0 <= pos {
+                    return Err(MpmcError::Empty);
+                }
+                pos = self.head.load_relaxed();
+                continue;
+            }
+            let mut k = 1usize;
+            while k < max && (k as u64) < self.cap {
+                let idx = ((pos + k as u64) % self.cap) as usize;
+                if self.seqs[idx].load() != pos + k as u64 + 1 {
+                    break;
+                }
+                k += 1;
+            }
+            match self.head.cas(pos, pos + k as u64) {
+                Ok(_) => {
+                    let mut appended = 0usize;
+                    for i in 0..k as u64 {
+                        let p = pos + i;
+                        let idx = (p % self.cap) as usize;
+                        Self::announce(&self.readers[idx], who);
+                        if obs::tracing() {
+                            obs::emit::<W>(EventKind::MpmcSteal, self.trace_id(), p, 0);
+                        }
+                        W::touch(self.regions[idx], 4, false);
+                        let len = unsafe { *self.lens[idx].get() };
+                        if len != TOMBSTONE {
+                            out.push(unsafe { self.slot_bytes(idx, len as usize) }.to_vec());
+                            appended += 1;
+                        }
+                        self.seqs[idx].store(p + self.cap);
+                        Self::retract(&self.readers[idx], who);
+                    }
+                    if obs::tracing() && appended > 0 {
+                        obs::add(obs::ctr::MPMC_CONSUME, appended as u64);
+                    }
+                    return Ok(appended);
+                }
+                Err(_) => {
+                    pos = self.head.load_relaxed();
+                    W::spin_hint();
+                }
+            }
+        }
+    }
+
+    /// Repair every claim the dead peer `who` left open: tombstone its
+    /// claimed-unpublished producer slots (consumers will skip them)
+    /// and salvage its claimed-unconsumed payloads to `salvage` (the
+    /// caller re-enqueues them; the dead claim never completed, so
+    /// exactly-once is preserved). Returns `(tombstoned, salvaged)`.
+    ///
+    /// Soundness: the claimant boards are stamped kill-atomically with
+    /// the claim CAS and retracted kill-atomically with the release
+    /// store (module doc), so `board == who + 1` identifies exactly
+    /// the wedged claims — and a wedged claim blocks all later
+    /// positions on its slot, so nobody can race the repair's
+    /// sequence store. Call after the peer is dead (its thread
+    /// unwound), never concurrently with the peer.
+    pub fn repair_dead(&self, who: u32, mut salvage: impl FnMut(&[u8])) -> (usize, usize) {
+        let stamp = who.wrapping_add(1);
+        let mut tombstoned = 0usize;
+        let mut salvaged = 0usize;
+        for idx in 0..self.cap as usize {
+            if self.writers[idx].load(Ordering::Relaxed) == stamp {
+                // Claimed-unpublished: seq still equals the claimed
+                // position p (and p maps to this slot).
+                let p = self.seqs[idx].load();
+                if (p % self.cap) as usize == idx && p < self.tail.load_relaxed() {
+                    W::touch(self.regions[idx], 4, true);
+                    unsafe {
+                        *self.lens[idx].get() = TOMBSTONE;
+                    }
+                    self.seqs[idx].store(p + 1); // publish the tombstone
+                    self.writers[idx].store(0, Ordering::Relaxed);
+                    tombstoned += 1;
+                }
+            }
+            if self.readers[idx].load(Ordering::Relaxed) == stamp {
+                // Claimed-unconsumed: seq still equals p + 1 for the
+                // claimed position p.
+                let s = self.seqs[idx].load();
+                if s >= 1 {
+                    let p = s - 1;
+                    if (p % self.cap) as usize == idx && p < self.head.load_relaxed() {
+                        W::touch(self.regions[idx], 4, false);
+                        let len = unsafe { *self.lens[idx].get() };
+                        if len != TOMBSTONE {
+                            let b = unsafe { self.slot_bytes(idx, len as usize) };
+                            salvage(b);
+                            salvaged += 1;
+                        }
+                        self.seqs[idx].store(p + self.cap); // free the slot
+                        self.readers[idx].store(0, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        if obs::tracing() && tombstoned + salvaged > 0 {
+            obs::add(obs::ctr::MPMC_REPAIRS, (tombstoned + salvaged) as u64);
+        }
+        (tombstoned, salvaged)
+    }
+
+    /// Test hook: win a producer claim on the next position and
+    /// abandon it unpublished, as a task killed mid-`send` would —
+    /// drives the repair path without a full fault-injected machine.
+    #[cfg(test)]
+    pub(crate) fn claim_and_abandon_producer(&self, who: u32) -> bool {
+        let pos = self.tail.load_relaxed();
+        let idx = (pos % self.cap) as usize;
+        if self.seqs[idx].load() != pos {
+            return false;
+        }
+        if self.tail.cas(pos, pos + 1).is_err() {
+            return false;
+        }
+        Self::announce(&self.writers[idx], who);
+        true
+    }
+
+    /// Test hook: win a consumer claim on the next published position
+    /// and abandon it unconsumed, as a task killed mid-`recv` would.
+    #[cfg(test)]
+    pub(crate) fn claim_and_abandon_consumer(&self, who: u32) -> bool {
+        let pos = self.head.load_relaxed();
+        let idx = (pos % self.cap) as usize;
+        if self.seqs[idx].load() != pos + 1 {
+            return false;
+        }
+        if self.head.cas(pos, pos + 1).is_err() {
+            return false;
+        }
+        Self::announce(&self.readers[idx], who);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn single_thread_roundtrip_is_fifo() {
+        let r = MpmcRing::<RealWorld>::new(4, 16);
+        assert_eq!(r.recv_with(0, |_| ()), Err(MpmcError::Empty));
+        for i in 0..4u64 {
+            r.send(0, &i.to_le_bytes()).unwrap();
+        }
+        assert_eq!(r.send(0, b"overflow"), Err(MpmcError::Full));
+        for i in 0..4u64 {
+            let v = r
+                .recv_with(9, |b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+                .unwrap();
+            assert_eq!(v, i);
+        }
+        assert_eq!(r.recv_with(9, |_| ()), Err(MpmcError::Empty));
+        // Wrap across many laps.
+        for lap in 0..100u64 {
+            r.send(1, &lap.to_le_bytes()).unwrap();
+            let mut out = [0u8; 16];
+            assert_eq!(r.recv(2, &mut out), Ok(8));
+            assert_eq!(u64::from_le_bytes(out[..8].try_into().unwrap()), lap);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn batch_claim_roundtrip_and_partial() {
+        let r = MpmcRing::<RealWorld>::new(8, 16);
+        let payloads: Vec<Vec<u8>> = (0..6u64).map(|i| i.to_le_bytes().to_vec()).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        assert_eq!(r.send_batch(0, &refs), Ok(6));
+        // Only 2 slots free: a batch of 6 goes partially in.
+        assert_eq!(r.send_batch(0, &refs), Ok(2));
+        assert_eq!(r.send_batch(0, &refs), Err(MpmcError::Full));
+        let mut out = Vec::new();
+        assert_eq!(r.recv_batch(1, &mut out, 16), Ok(8));
+        let got: Vec<u64> = out
+            .iter()
+            .map(|b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5, 0, 1]);
+        assert_eq!(r.recv_batch(1, &mut out, 16), Err(MpmcError::Empty));
+        assert_eq!(r.send_batch(0, &[]), Ok(0));
+        assert_eq!(r.recv_batch(1, &mut out, 0), Ok(0));
+    }
+
+    #[test]
+    fn capacity_below_two_rejected() {
+        let res = std::panic::catch_unwind(|| MpmcRing::<RealWorld>::new(1, 16));
+        assert!(res.is_err(), "cap=1 collapses published/free states");
+    }
+
+    #[test]
+    fn dead_producer_tombstone_unwedges_consumers() {
+        let r = MpmcRing::<RealWorld>::new(4, 16);
+        r.send(0, &1u64.to_le_bytes()).unwrap();
+        // Producer 7 claims position 1 and dies before publishing;
+        // producer 0 publishes position 2 behind the wedge.
+        assert!(r.claim_and_abandon_producer(7));
+        r.send(0, &3u64.to_le_bytes()).unwrap();
+        // Position 0 delivers, then the wedge parks everyone.
+        let v = r
+            .recv_with(9, |b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(r.recv_with(9, |_| ()), Err(MpmcError::Empty));
+        let (tomb, salv) = r.repair_dead(7, |_| panic!("nothing to salvage"));
+        assert_eq!((tomb, salv), (1, 0));
+        // The tombstone is skipped transparently; position 2 delivers.
+        let v = r
+            .recv_with(9, |b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .unwrap();
+        assert_eq!(v, 3);
+        // Ring stays usable across the repaired slot for many laps.
+        for lap in 0..12u64 {
+            r.send(0, &lap.to_le_bytes()).unwrap();
+            let got = r
+                .recv_with(9, |b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+                .unwrap();
+            assert_eq!(got, lap);
+        }
+    }
+
+    #[test]
+    fn dead_consumer_salvage_preserves_payload_exactly_once() {
+        let r = MpmcRing::<RealWorld>::new(4, 16);
+        for i in 0..3u64 {
+            r.send(0, &(100 + i).to_le_bytes()).unwrap();
+        }
+        // Consumer 5 claims position 0 and dies before consuming.
+        assert!(r.claim_and_abandon_consumer(5));
+        // A live consumer still gets positions 1 and 2.
+        let mut live = Vec::new();
+        while let Ok(v) = r.recv_with(6, |b| u64::from_le_bytes(b[..8].try_into().unwrap())) {
+            live.push(v);
+        }
+        assert_eq!(live, vec![101, 102]);
+        let salvaged = Arc::new(Mutex::new(Vec::new()));
+        let s2 = salvaged.clone();
+        let (tomb, salv) = r.repair_dead(5, move |b| {
+            s2.lock()
+                .unwrap()
+                .push(u64::from_le_bytes(b[..8].try_into().unwrap()));
+        });
+        assert_eq!((tomb, salv), (0, 1));
+        assert_eq!(*salvaged.lock().unwrap(), vec![100]);
+        // The salvaged slot is free again: re-enqueue works.
+        r.send(0, &100u64.to_le_bytes()).unwrap();
+        let v = r
+            .recv_with(6, |b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .unwrap();
+        assert_eq!(v, 100);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn repair_for_live_peers_is_a_noop() {
+        let r = MpmcRing::<RealWorld>::new(4, 16);
+        r.send(3, &7u64.to_le_bytes()).unwrap();
+        assert_eq!(r.repair_dead(3, |_| panic!("no wedged claim")), (0, 0));
+        assert_eq!(r.repair_dead(99, |_| panic!("no wedged claim")), (0, 0));
+        let v = r
+            .recv_with(1, |b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn mpmc_threads_deliver_exactly_once() {
+        // 3 producers × 3 consumers on real threads: every payload
+        // arrives exactly once (set equality), unordered across
+        // consumers.
+        const PRODUCERS: u64 = 3;
+        const CONSUMERS: usize = 3;
+        const PER: u64 = 2000;
+        let r = Arc::new(MpmcRing::<RealWorld>::new(16, 16));
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..PER {
+                    let v = p * PER + j;
+                    while r.send(p as u32, &v.to_le_bytes()).is_err() {
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        let total = PRODUCERS * PER;
+        let taken = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        for c in 0..CONSUMERS {
+            let r = r.clone();
+            let got = got.clone();
+            let taken = taken.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut mine = Vec::new();
+                while taken.load(Ordering::Relaxed) < total {
+                    match r.recv_with(10 + c as u32, |b| {
+                        u64::from_le_bytes(b[..8].try_into().unwrap())
+                    }) {
+                        Ok(v) => {
+                            mine.push(v);
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => std::hint::spin_loop(),
+                    }
+                }
+                got.lock().unwrap().extend(mine);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = got.lock().unwrap().clone();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..total).collect();
+        assert_eq!(all, expect, "lost or duplicated payloads");
+    }
+
+    #[test]
+    fn empty_poll_is_two_priced_loads_in_sim() {
+        use crate::os::{AffinityMode, OsProfile};
+        use crate::sim::{Machine, MachineCfg, SimWorld};
+        // Acceptance gate: an idle MPMC consumer pays one head load +
+        // one sequence load per poll — O(1) words, independent of
+        // capacity (and therefore of producer/consumer count).
+        let poll_ops = |cap: usize| {
+            let m = Machine::new(MachineCfg::new(
+                1,
+                OsProfile::linux_rt(),
+                AffinityMode::SingleCore,
+            ));
+            let ops = Arc::new(std::sync::atomic::AtomicU64::new(0));
+            let ops2 = ops.clone();
+            let h = m.spawn(move || {
+                let r = MpmcRing::<SimWorld>::new(cap, 32);
+                let before = SimWorld::op_count();
+                for _ in 0..10 {
+                    assert_eq!(r.recv_with(0, |_| ()), Err(MpmcError::Empty));
+                }
+                ops2.store(SimWorld::op_count() - before, Ordering::SeqCst);
+            });
+            m.run(vec![h]);
+            ops.load(Ordering::SeqCst)
+        };
+        let small = poll_ops(2);
+        let large = poll_ops(512);
+        assert_eq!(small, 20, "empty poll must cost exactly 2 priced loads");
+        assert_eq!(small, large, "empty-poll cost must not scale with capacity");
+    }
+
+    #[test]
+    fn batched_claim_amortizes_shared_cas_in_sim() {
+        use crate::os::{AffinityMode, OsProfile};
+        use crate::sim::{Machine, MachineCfg, SimWorld};
+        // Acceptance gate: one tail CAS claims the whole batch — per
+        // payload, the batch path saves exactly the tail load + tail
+        // CAS that the one-at-a-time path pays.
+        let send_ops = |batch: bool| {
+            const K: u64 = 8;
+            let m = Machine::new(MachineCfg::new(
+                1,
+                OsProfile::linux_rt(),
+                AffinityMode::SingleCore,
+            ));
+            let ops = Arc::new(std::sync::atomic::AtomicU64::new(0));
+            let ops2 = ops.clone();
+            let h = m.spawn(move || {
+                let r = MpmcRing::<SimWorld>::new(16, 32);
+                let payloads: Vec<Vec<u8>> =
+                    (0..K).map(|i| i.to_le_bytes().to_vec()).collect();
+                let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                let before = SimWorld::op_count();
+                if batch {
+                    assert_eq!(r.send_batch(0, &refs), Ok(K as usize));
+                } else {
+                    for d in &refs {
+                        r.send(0, d).unwrap();
+                    }
+                }
+                ops2.store(SimWorld::op_count() - before, Ordering::SeqCst);
+            });
+            m.run(vec![h]);
+            ops.load(Ordering::SeqCst)
+        };
+        let singles = send_ops(false);
+        let batched = send_ops(true);
+        assert!(
+            batched < singles,
+            "batched claim must be cheaper ({batched} vs {singles})"
+        );
+        assert_eq!(
+            singles - batched,
+            2 * (8 - 1),
+            "batch must save exactly one tail load + one tail CAS per extra payload"
+        );
+    }
+}

@@ -316,7 +316,7 @@ fn cmd_trace(args: &Args) -> mcapi::Result<()> {
         std::fs::write(format!("{prefix}.ndjson"), run.collector.ndjson())?;
         std::fs::write(
             format!("{prefix}.metrics.json"),
-            run.collector.metrics_json(&run.counters, run.dropped),
+            run.collector.metrics_json(&run.counters, run.dropped, &run.lanes),
         )?;
         println!("wrote {prefix}.chrome.json / {prefix}.ndjson / {prefix}.metrics.json");
     }

@@ -377,6 +377,49 @@ impl<W: World> McapiRuntime<W> {
         }
     }
 
+    /// Zero-copy packet receive: run `f` over the next packet's bytes
+    /// *in place* in the ring slot, without copying them out first. The
+    /// slot stays leased to the consumer for exactly the duration of
+    /// `f` — the producer cannot recycle it until `f` returns and the
+    /// ring acks the slot — so the borrow is safe but holding the view
+    /// open on a full ring back-pressures the sender (see the
+    /// borrow-until-release lease test in `channel_properties`).
+    ///
+    /// The `Locked` reference backend has no in-place primitive; it
+    /// copies through a stack buffer and applies `f` to the copy, so
+    /// both backends observe identical bytes and return values.
+    pub fn pkt_recv_view<R>(&self, ch: usize, f: impl FnOnce(&[u8]) -> R) -> Result<R, Status> {
+        match self.cfg.backend {
+            BackendKind::Locked => {
+                let mut buf = vec![0u8; self.cfg.buf_len];
+                let n = self.pkt_recv(ch, &mut buf)?;
+                Ok(f(&buf[..n]))
+            }
+            BackendKind::LockFree => {
+                self.charge_api();
+                self.channel_ready(ch, ChannelKind::Packet)?;
+                // `f` is FnOnce but the doorbell recheck may probe twice;
+                // the ring only invokes the closure when a payload is
+                // actually present, so `f` survives an Empty first probe.
+                let mut f = Some(f);
+                let r = self.with_doorbell_recheck(ch, |ring| {
+                    match ring.recv_with(|bytes| (f.take().expect("view ran twice"))(bytes)) {
+                        Ok(v) => Ok(v),
+                        Err(RecvError::Empty) => Err(Status::WouldBlock),
+                        Err(RecvError::EmptyButProducerInserting) => {
+                            Err(Status::WouldBlockPeerActive)
+                        }
+                    }
+                });
+                self.poison_on_drained(ch, r.map(|v| {
+                    // Slot freed on return from `f`: wake parked senders.
+                    self.chan_waits[ch].wake_all::<W>();
+                    v
+                }))
+            }
+        }
+    }
+
     /// Batched 64-bit scalar send: enqueue as many of `values` as fit.
     /// A batch of N lock-free scalar sends issues O(1) shared-counter
     /// stores (one enter/exit pair on one line).

@@ -29,7 +29,7 @@ pub mod request;
 pub mod types;
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::lockfree::backoff::Backoff;
 use crate::lockfree::fsm::AtomicFsm;
@@ -40,7 +40,7 @@ use crate::mrapi::rwlock::RwLock;
 use crate::obs;
 use crate::mrapi::shmem::{Lease, Partition};
 use channel::Doorbell;
-use queue::{entry_state, Entry, LockFreeQueue, LockedQueue};
+use queue::{entry_state, ConsumerGroup, Entry, LockFreeQueue, LockedQueue};
 use request::{PendingOp, RequestHandle, RequestPool};
 use types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status, PRIORITIES};
 
@@ -149,6 +149,12 @@ struct EndpointSlot<W: World> {
     /// Connected channel + 1 as receiver (0 = none).
     rx_channel: W::U32,
     queue: QueueImpl<W>,
+    /// MPMC multi-receiver profile: built lazily on the first
+    /// [`McapiRuntime::endpoint_attach_consumer`] (lock-free backend
+    /// only). While unattached, send/recv pay one host-atomic load to
+    /// skip it — the single-consumer hot path's priced op counts are
+    /// unchanged (pinned sim gates stay byte-identical).
+    group: OnceLock<ConsumerGroup<W>>,
 }
 
 struct ChannelSlot<W: World> {
@@ -236,6 +242,7 @@ impl<W: World> McapiRuntime<W> {
                         QueueImpl::LockFree(LockFreeQueue::new(cfg.max_nodes, cfg.nbb_capacity))
                     }
                 },
+                group: OnceLock::new(),
             })
             .collect();
         let channels = (0..cfg.max_channels)
@@ -438,6 +445,32 @@ impl<W: World> McapiRuntime<W> {
         }
         self.stat_leases_reclaimed.fetch_add(reclaimed as u64, Ordering::Relaxed);
         obs::add(obs::ctr::LEASES_RECLAIMED, reclaimed as u64);
+        // 2.5) Repair MPMC consumer groups: tombstone the dead node's
+        //      claimed-unpublished producer slots (consumers skip them;
+        //      the wedged buffer itself came back in the custody sweep
+        //      above) and re-enqueue the payloads its dead consumers
+        //      claimed but never consumed — the dead claim never
+        //      completed, so exactly-once is preserved; distribution
+        //      order across consumers was never guaranteed.
+        for (i, epslot) in self.endpoints.iter().enumerate() {
+            let Some(g) = epslot.group.get() else {
+                continue;
+            };
+            let (tombstoned, salvaged) = g.repair_dead(node as u32);
+            if tombstoned == 0 && salvaged.is_empty() {
+                continue;
+            }
+            for e in salvaged {
+                if let Err((_, e)) = g.push(e) {
+                    // Producers refilled the ring before the re-enqueue
+                    // fit: return the buffer rather than leak it.
+                    self.drop_entry(&e);
+                }
+            }
+            // Unwedged consumers and the re-enqueued work both need a
+            // broadcast re-poll.
+            self.ep_waits[i].wake_all::<W>();
+        }
         // 3) Wake waiters parked on the dead node's endpoints (blocked
         //    senders re-attempt, see the dead-destination check, and
         //    surface `EndpointDead`).
@@ -487,11 +520,69 @@ impl<W: World> McapiRuntime<W> {
         Err(Status::Exhausted)
     }
 
-    /// Delete an endpoint (must not be connected).
+    /// Attach the calling thread as an MPMC consumer of endpoint `ep`,
+    /// identified by dense node slot `node` (the identity the crash-
+    /// repair machinery keys wedged claims on). First attach builds the
+    /// endpoint's [`ConsumerGroup`] and migrates any entries already
+    /// committed to the single-consumer queue into it; attach *before*
+    /// traffic is the documented pattern — a late attach racing a
+    /// single-consumer receiver on another thread keeps that queue's
+    /// debug single-consumer guard in force for the migration pop.
+    /// Returns the attached-consumer count. Lock-free backend only
+    /// (`InvalidRequest` on `Locked`, whose global lock already admits
+    /// any number of receivers).
+    pub fn endpoint_attach_consumer(&self, ep: usize, node: usize) -> Result<u32, Status> {
+        self.charge_api();
+        if self.cfg.backend != BackendKind::LockFree {
+            return Err(Status::InvalidRequest);
+        }
+        if node >= self.cfg.max_nodes {
+            return Err(Status::InvalidEndpoint);
+        }
+        let slot = self.active_ep(ep)?;
+        let group = slot.group.get_or_init(|| {
+            // Sized to the whole flag-board composition it replaces
+            // (every priority × producer lane), so the migration below
+            // always fits and steady-state capacity is comparable.
+            let g = ConsumerGroup::new(PRIORITIES * self.cfg.max_nodes.max(1) * self.cfg.nbb_capacity);
+            g.set_trace_id(ep as u32);
+            g
+        });
+        let count = group.attach(node as u32);
+        // Migrate pending single-consumer entries so nothing committed
+        // before the profile switch is stranded. Guarded on occupancy:
+        // once a group is active all sends route to the ring, so later
+        // attaches see an empty queue and never pop — popping claims
+        // the queue's single-consumer debug token, which must stay with
+        // the (at most one) thread that drained pre-attach traffic.
+        if let QueueImpl::LockFree(q) = &slot.queue {
+            if q.len() > 0 {
+                while let Ok(e) = q.pop() {
+                    if let Err((_, e)) = group.push(e) {
+                        // Ring full (producers raced the migration):
+                        // return the buffer to the pool, never leak it.
+                        self.drop_entry(&e);
+                    }
+                }
+            }
+        }
+        // Broadcast so parked receivers re-poll through the new route.
+        self.ep_waits[ep].wake_all::<W>();
+        Ok(count)
+    }
+
+    /// Delete an endpoint (must not be connected or running an MPMC
+    /// consumer group).
     pub fn delete_endpoint(&self, ep: usize) -> Result<(), Status> {
         self.charge_api();
         let slot = self.endpoints.get(ep).ok_or(Status::InvalidEndpoint)?;
         if slot.rx_channel.load() != 0 {
+            return Err(Status::Busy);
+        }
+        // A consumer group cannot be detached (the OnceLock is shared
+        // behind the runtime Arc), so slot reuse would leak the old
+        // group's routing onto the new endpoint.
+        if slot.group.get().map_or(false, |g| g.active()) {
             return Err(Status::Busy);
         }
         slot.state
@@ -573,6 +664,25 @@ impl<W: World> McapiRuntime<W> {
         self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
     }
 
+    /// Last-resort release of a committed entry's buffer without
+    /// delivering it (recovery paths only: a salvaged payload whose
+    /// re-enqueue found the ring full). Forces the Figure 4 FSM back
+    /// to FREE from whatever state the entry reached.
+    fn drop_entry(&self, e: &Entry) {
+        if !e.has_buffer() {
+            return;
+        }
+        let lease = self.lease_of(e);
+        let st = self.buffer_fsm[lease.index].state();
+        if st != entry_state::FREE {
+            let _ = self.buffer_fsm[lease.index].transition(st, entry_state::FREE);
+        }
+        self.pool.release(lease);
+        self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
+        self.stat_leases_reclaimed.fetch_add(1, Ordering::Relaxed);
+        obs::add(obs::ctr::LEASES_RECLAIMED, 1);
+    }
+
     // -- connectionless messages ---------------------------------------------
 
     /// Non-blocking connection-less send from dense node `from` to
@@ -632,6 +742,25 @@ impl<W: World> McapiRuntime<W> {
                     from as u32,
                     priority % PRIORITIES as u8,
                 );
+                // MPMC profile: entries route through the consumer
+                // group's shared ring. Deciding costs one host-atomic
+                // load when no group was ever attached, so the
+                // single-consumer hot path's priced ops are unchanged.
+                if let Some(g) = self.endpoints[ep].group.get().filter(|g| g.active()) {
+                    return match g.push(entry) {
+                        Ok(()) => {
+                            self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
+                            // Doorbell broadcast: every parked consumer
+                            // re-polls; exactly one claims the entry.
+                            self.ep_waits[ep].wake_all::<W>();
+                            Ok(())
+                        }
+                        Err((s, _)) => {
+                            self.abort_lease(lease);
+                            Err(s)
+                        }
+                    };
+                }
                 let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
                     unreachable!("lockfree backend uses NBB queues");
                 };
@@ -688,6 +817,22 @@ impl<W: World> McapiRuntime<W> {
             }
             BackendKind::LockFree => {
                 let slot = self.active_ep(ep)?;
+                // MPMC profile: pop from the group ring as this
+                // thread's attached identity (falling back to the
+                // endpoint owner for un-attached callers, e.g. a
+                // scavenger draining a dead group). `consume_entry`
+                // records custody under the *consumer's* node, so a
+                // consumer killed mid-copy is reclaimed by its own
+                // node's custody sweep.
+                if let Some(g) = slot.group.get().filter(|g| g.active()) {
+                    let owner = self.ep_owner_shadow[ep].load(Ordering::Relaxed);
+                    let who = ConsumerGroup::<W>::current_who().unwrap_or(owner);
+                    let entry = g.pop(who)?;
+                    let n = self.consume_entry(&entry, out, who as usize);
+                    // Space freed: wake senders parked on a full ring.
+                    self.ep_waits[ep].wake_all::<W>();
+                    return Ok(n);
+                }
                 let QueueImpl::LockFree(q) = &slot.queue else {
                     unreachable!();
                 };
@@ -759,7 +904,12 @@ impl<W: World> McapiRuntime<W> {
                 let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
                     unreachable!("lockfree backend uses NBB queues");
                 };
-                let result = q.push_batch(&mut entries);
+                // MPMC profile: one shared-counter CAS claims the whole
+                // run in the group ring (`MpmcRing::send_batch`).
+                let result = match self.endpoints[ep].group.get().filter(|g| g.active()) {
+                    Some(g) => g.push_batch(&mut entries),
+                    None => q.push_batch(&mut entries),
+                };
                 // Whatever did not go in stays in `entries`: hand its
                 // buffers back (Figure 4 abort path). Custody of the
                 // enqueued prefix passes to the queue.
@@ -811,6 +961,27 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 let slot = self.active_ep(ep)?;
+                // MPMC profile: drain the group ring one claim at a
+                // time under this thread's attached identity.
+                if let Some(g) = slot.group.get().filter(|g| g.active()) {
+                    let owner = self.ep_owner_shadow[ep].load(Ordering::Relaxed);
+                    let who = ConsumerGroup::<W>::current_who().unwrap_or(owner);
+                    let mut buf = vec![0u8; self.cfg.buf_len];
+                    let mut got = 0;
+                    while got < max {
+                        match g.pop(who) {
+                            Ok(e) => {
+                                let len = self.consume_entry(&e, &mut buf, who as usize);
+                                out.push(buf[..len].to_vec());
+                                got += 1;
+                            }
+                            Err(s) if got == 0 => return Err(s),
+                            Err(_) => break,
+                        }
+                    }
+                    self.ep_waits[ep].wake_all::<W>();
+                    return Ok(got);
+                }
                 let QueueImpl::LockFree(q) = &slot.queue else {
                     unreachable!("lockfree backend uses NBB queues");
                 };
@@ -833,7 +1004,12 @@ impl<W: World> McapiRuntime<W> {
         let slot = self.active_ep(ep)?;
         Ok(match (&slot.queue, self.cfg.backend) {
             (QueueImpl::Locked(q), _) => self.global.with_read(|| unsafe { q.len() }),
-            (QueueImpl::LockFree(q), _) => q.len(),
+            // The group ring and the legacy queue both count: entries
+            // committed before the first attach may still sit in the
+            // queue briefly (attach migrates them).
+            (QueueImpl::LockFree(q), _) => {
+                q.len() + slot.group.get().map_or(0, |g| g.len())
+            }
         })
     }
 
@@ -1802,5 +1978,133 @@ mod tests {
             );
             assert_eq!(rt.requests_in_use(), 0);
         }
+    }
+
+    // -- MPMC consumer groups -------------------------------------------------
+
+    #[test]
+    fn attach_consumer_rejects_locked_backend_and_bad_args() {
+        let locked = rt(BackendKind::Locked);
+        let dst = EndpointId::new(0, 1, 30);
+        let ep = locked.create_endpoint(dst, 1).unwrap();
+        assert_eq!(
+            locked.endpoint_attach_consumer(ep, 1).unwrap_err(),
+            Status::InvalidRequest
+        );
+        let free = rt(BackendKind::LockFree);
+        assert_eq!(
+            free.endpoint_attach_consumer(0, 1).unwrap_err(),
+            Status::InvalidEndpoint,
+            "attach to a never-created endpoint"
+        );
+        let ep = free.create_endpoint(dst, 1).unwrap();
+        assert_eq!(
+            free.endpoint_attach_consumer(ep, free.cfg().max_nodes).unwrap_err(),
+            Status::InvalidEndpoint,
+            "consumer node out of range"
+        );
+        assert_eq!(free.endpoint_attach_consumer(ep, 1), Ok(1));
+        assert_eq!(free.endpoint_attach_consumer(ep, 2), Ok(2));
+    }
+
+    #[test]
+    fn attach_migrates_pending_messages_and_blocks_delete() {
+        let rt = rt(BackendKind::LockFree);
+        let dst = EndpointId::new(0, 2, 31);
+        let ep = rt.create_endpoint(dst, 2).unwrap();
+        // Committed before any attach: lands in the single-consumer queue.
+        rt.msg_send(1, dst, b"early-1", 0).unwrap();
+        rt.msg_send(1, dst, b"early-2", 0).unwrap();
+        rt.endpoint_attach_consumer(ep, 2).unwrap();
+        assert_eq!(rt.msg_available(ep).unwrap(), 2, "migrated, not stranded");
+        rt.msg_send(1, dst, b"late", 0).unwrap();
+        let mut got = Vec::new();
+        let mut buf = [0u8; 16];
+        for _ in 0..3 {
+            let n = rt.msg_recv(ep, &mut buf).unwrap();
+            got.push(buf[..n].to_vec());
+        }
+        got.sort();
+        assert_eq!(got, vec![b"early-1".to_vec(), b"early-2".to_vec(), b"late".to_vec()]);
+        assert_eq!(rt.msg_recv(ep, &mut buf).unwrap_err(), Status::WouldBlock);
+        assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers, "no leaked leases");
+        // An endpoint running a group cannot be deleted (slot reuse
+        // would leak the group's routing onto the next endpoint).
+        assert_eq!(rt.delete_endpoint(ep).unwrap_err(), Status::Busy);
+    }
+
+    #[test]
+    fn mpmc_endpoint_serves_concurrent_consumer_threads() {
+        // The single-consumer debug guard rejects a second popping
+        // thread on a plain lock-free endpoint; with an attached
+        // consumer group, N sender threads and M receiver threads all
+        // proceed, and every message is delivered exactly once.
+        const SENDERS: usize = 2;
+        const RECEIVERS: usize = 2;
+        const PER: u64 = 400;
+        let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+            backend: BackendKind::LockFree,
+            ..Default::default()
+        });
+        let dst = EndpointId::new(0, 2, 32);
+        let ep = rt.create_endpoint(dst, 2).unwrap();
+        rt.endpoint_attach_consumer(ep, 2).unwrap();
+        let total = (SENDERS as u64) * PER;
+        let taken = Arc::new(AtomicU64::new(0));
+        let got = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for s in 0..SENDERS {
+            let rt = rt.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..PER {
+                    let v = (s as u64) * PER + j;
+                    loop {
+                        match rt.msg_send(s + 3, dst, &v.to_le_bytes(), 0) {
+                            Ok(()) => break,
+                            Err(e) => {
+                                assert!(
+                                    e.is_would_block() || e == Status::MemLimit,
+                                    "{e:?}"
+                                );
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for r in 0..RECEIVERS {
+            let rt = rt.clone();
+            let taken = taken.clone();
+            let got = got.clone();
+            handles.push(std::thread::spawn(move || {
+                // Each receiver thread attaches under its own node id.
+                rt.endpoint_attach_consumer(ep, 4 + r).unwrap();
+                let mut buf = [0u8; 16];
+                let mut mine = Vec::new();
+                while taken.load(Ordering::Relaxed) < total {
+                    match rt.msg_recv(ep, &mut buf) {
+                        Ok(n) => {
+                            assert_eq!(n, 8);
+                            mine.push(u64::from_le_bytes(buf[..8].try_into().unwrap()));
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(s) => {
+                            assert!(s.is_would_block(), "{s:?}");
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got.lock().unwrap().extend(mine);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = got.lock().unwrap().clone();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..total).collect();
+        assert_eq!(all, expect, "lost or duplicated messages");
+        assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers, "no leaked leases");
     }
 }

@@ -11,6 +11,7 @@ use std::collections::VecDeque;
 
 use crate::lockfree::bitset::BitSet;
 use crate::lockfree::mem::World;
+use crate::lockfree::mpmc::{MpmcError, MpmcRing};
 use crate::lockfree::nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 use crate::mcapi::types::{Status, PRIORITIES};
 use crate::obs;
@@ -65,7 +66,39 @@ impl Entry {
     pub fn has_buffer(&self) -> bool {
         self.buf_index != u32::MAX
     }
+
+    /// Encode into the fixed wire layout an MPMC ring slot carries
+    /// (see [`ENTRY_WIRE_LEN`]).
+    pub fn encode(&self) -> [u8; ENTRY_WIRE_LEN] {
+        let mut b = [0u8; ENTRY_WIRE_LEN];
+        b[0..4].copy_from_slice(&self.buf_index.to_le_bytes());
+        b[4..8].copy_from_slice(&self.len.to_le_bytes());
+        b[8..12].copy_from_slice(&self.from_node.to_le_bytes());
+        b[12] = self.priority;
+        b[16..24].copy_from_slice(&self.scalar.to_le_bytes());
+        b
+    }
+
+    /// Decode the wire layout back into an [`Entry`]. `None` on a
+    /// short slice (never happens for slots sized [`ENTRY_WIRE_LEN`]).
+    pub fn decode(b: &[u8]) -> Option<Self> {
+        if b.len() < ENTRY_WIRE_LEN {
+            return None;
+        }
+        Some(Entry {
+            buf_index: u32::from_le_bytes(b[0..4].try_into().ok()?),
+            len: u32::from_le_bytes(b[4..8].try_into().ok()?),
+            from_node: u32::from_le_bytes(b[8..12].try_into().ok()?),
+            priority: b[12],
+            scalar: u64::from_le_bytes(b[16..24].try_into().ok()?),
+        })
+    }
 }
+
+/// Bytes of the [`Entry`] wire layout carried in an MPMC ring slot:
+/// `buf_index` LE at 0, `len` LE at 4, `from_node` LE at 8, `priority`
+/// at 12 (13..16 reserved), `scalar` LE at 16.
+pub const ENTRY_WIRE_LEN: usize = 24;
 
 // ---------------------------------------------------------------------------
 // Lock-based reference queue.
@@ -256,8 +289,8 @@ impl<W: World> LockFreeQueue<W> {
             assert_eq!(
                 owner, token,
                 "LockFreeQueue flag-board mode is single-consumer: pop from a second \
-                 thread (token {token}, owner {owner}); use the Locked backend or one \
-                 queue per consumer for MPMC endpoints"
+                 thread (token {token}, owner {owner}); attach a ConsumerGroup with \
+                 `endpoint_attach_consumer` for multi-consumer (MPMC) endpoints"
             );
         }
     }
@@ -460,6 +493,155 @@ impl<W: World> LockFreeQueue<W> {
     /// Total buffered entries (approximate).
     pub fn len(&self) -> usize {
         self.lanes.iter().flatten().map(|n| n.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Consumer group: the MPMC multi-receiver endpoint profile.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// The calling thread's consumer identity for group pops
+    /// (`u32::MAX` = not attached), set by [`ConsumerGroup::attach`].
+    /// A thread-local mirrors the per-thread consumer token above —
+    /// MCAPI receive contexts are thread-affine in both worlds (sim
+    /// tasks are threads).
+    static GROUP_WHO: std::cell::Cell<u32> = const { std::cell::Cell::new(u32::MAX) };
+}
+
+/// Multi-consumer receive queue for one endpoint: M receivers attach
+/// and pop concurrently, work-distribution style — each committed
+/// entry is delivered to **exactly one** consumer, unordered across
+/// consumers (each consumer sees its own claims in claim order).
+///
+/// This replaces the [`LockFreeQueue`] single-consumer gate for the
+/// MPMC endpoint profile: entries travel through one shared
+/// [`MpmcRing`] (slot-sequence claim/publish), encoded with the
+/// fixed [`ENTRY_WIRE_LEN`] layout. The trade against the flag-board
+/// composition is deliberate and documented: cross-producer priority
+/// precedence is dropped (claim order rules; the priority still
+/// travels in the entry metadata) in exchange for contended-but-safe
+/// multi-consumer pops whose empty-poll cost stays O(1) words.
+///
+/// Claimant identities (`who`) are **dense node slots** on both
+/// sides, so [`ConsumerGroup::repair_dead`] can map a dead node
+/// straight onto its wedged claims (PR 3 recovery machinery).
+pub struct ConsumerGroup<W: World> {
+    ring: MpmcRing<W>,
+    /// Consumers attached so far. Host atomic: the runtime's
+    /// `group.active()` check on every send/recv must stay unpriced
+    /// so the pinned SPSC sim gates remain byte-identical.
+    attached: std::sync::atomic::AtomicU32,
+}
+
+impl<W: World> ConsumerGroup<W> {
+    /// Group over a ring of `cap` entry slots (`cap >= 2` enforced by
+    /// the ring).
+    pub fn new(cap: usize) -> Self {
+        ConsumerGroup {
+            ring: MpmcRing::new(cap.max(2), ENTRY_WIRE_LEN),
+            attached: std::sync::atomic::AtomicU32::new(0),
+        }
+    }
+
+    /// Tag trace events with the owning endpoint slot (events carry
+    /// `obs::CH_ENDPOINT_BIT | ep`, keeping them out of the
+    /// channel-stage pairing like every other endpoint event).
+    pub fn set_trace_id(&self, ep: u32) {
+        self.ring.set_trace_id(obs::CH_ENDPOINT_BIT | ep);
+    }
+
+    /// Register the calling thread as a consumer with dense node slot
+    /// `node`; returns the attached-consumer count. Sets the
+    /// thread-local pop identity.
+    pub fn attach(&self, node: u32) -> u32 {
+        GROUP_WHO.with(|w| w.set(node));
+        self.attached.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1
+    }
+
+    /// True once any consumer has attached — the runtime's routing
+    /// switch (one relaxed host load, never priced).
+    pub fn active(&self) -> bool {
+        self.attached.load(std::sync::atomic::Ordering::Relaxed) != 0
+    }
+
+    /// Consumers attached so far.
+    pub fn attached(&self) -> u32 {
+        self.attached.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// The calling thread's attach identity (`None` if it never
+    /// attached to any group).
+    pub fn current_who() -> Option<u32> {
+        GROUP_WHO.with(|w| {
+            let v = w.get();
+            (v != u32::MAX).then_some(v)
+        })
+    }
+
+    /// Producer-side insert; the claimant board is stamped with the
+    /// entry's `from_node`. Full rings hand the entry back so the
+    /// caller can abort its buffer lease.
+    pub fn push(&self, e: Entry) -> Result<(), (Status, Entry)> {
+        match self.ring.send(e.from_node, &e.encode()) {
+            Ok(()) => Ok(()),
+            Err(MpmcError::Full) => Err((Status::WouldBlock, e)),
+            Err(MpmcError::Empty) => unreachable!("send never reports Empty"),
+        }
+    }
+
+    /// Producer-side batched insert: one shared-counter CAS claims the
+    /// whole run ([`MpmcRing::send_batch`]). Enqueued entries drain
+    /// from the front of `entries`; returns how many went in (`Err`
+    /// only when none did).
+    pub fn push_batch(&self, entries: &mut Vec<Entry>) -> Result<usize, Status> {
+        let Some(first) = entries.first() else {
+            return Ok(0);
+        };
+        let who = first.from_node;
+        let encoded: Vec<[u8; ENTRY_WIRE_LEN]> = entries.iter().map(Entry::encode).collect();
+        let refs: Vec<&[u8]> = encoded.iter().map(|b| b.as_slice()).collect();
+        match self.ring.send_batch(who, &refs) {
+            Ok(n) => {
+                entries.drain(..n);
+                Ok(n)
+            }
+            Err(MpmcError::Full) => Err(Status::WouldBlock),
+            Err(MpmcError::Empty) => unreachable!("send_batch never reports Empty"),
+        }
+    }
+
+    /// Consumer-side pop as claimant `who` (the runtime passes the
+    /// thread's [`ConsumerGroup::current_who`], falling back to the
+    /// endpoint owner).
+    pub fn pop(&self, who: u32) -> Result<Entry, Status> {
+        match self.ring.recv_with(who, |b| Entry::decode(b)) {
+            Ok(Some(e)) => Ok(e),
+            Ok(None) => unreachable!("group slots are always ENTRY_WIRE_LEN"),
+            Err(MpmcError::Empty) => Err(Status::WouldBlock),
+            Err(MpmcError::Full) => unreachable!("recv never reports Full"),
+        }
+    }
+
+    /// Entries committed but not yet claimed (approximate; unpriced
+    /// peeks, safe from watchdogs).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Repair every wedged claim dead node `node` left behind:
+    /// tombstone its unpublished producer slots, salvage its
+    /// unconsumed payloads back to the caller for re-enqueue (the dead
+    /// claim never completed, so exactly-once is preserved). Returns
+    /// `(tombstoned, salvaged entries)`.
+    pub fn repair_dead(&self, node: u32) -> (usize, Vec<Entry>) {
+        let mut salvaged = Vec::new();
+        let (tombstoned, _) = self.ring.repair_dead(node, |b| {
+            if let Some(e) = Entry::decode(b) {
+                salvaged.push(e);
+            }
+        });
+        (tombstoned, salvaged)
     }
 }
 
@@ -724,5 +906,83 @@ mod tests {
             p.join().unwrap();
         }
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn entry_wire_codec_roundtrips() {
+        let cases = [
+            Entry::buffered(7, 123, 3, 2),
+            Entry::scalar(0xDEAD_BEEF_0BAD_F00D, 5),
+            Entry::scalar_w(0xFF, 1, 1),
+            Entry { buf_index: u32::MAX, len: 0, from_node: 0, priority: 255, scalar: u64::MAX },
+        ];
+        for e in cases {
+            let wire = e.encode();
+            assert_eq!(Entry::decode(&wire), Some(e));
+        }
+        assert_eq!(Entry::decode(&[0u8; ENTRY_WIRE_LEN - 1]), None);
+    }
+
+    #[test]
+    fn consumer_group_distributes_exactly_once() {
+        let g = ConsumerGroup::<RealWorld>::new(8);
+        assert!(!g.active());
+        assert_eq!(g.attach(2), 1);
+        assert_eq!(g.attach(3), 2);
+        assert!(g.active());
+        assert_eq!(ConsumerGroup::<RealWorld>::current_who(), Some(3));
+        for i in 0..6u64 {
+            g.push(Entry::scalar(i, 1)).unwrap();
+        }
+        assert_eq!(g.len(), 6);
+        // Two claimants interleave; the union is exactly the sent set.
+        let mut got = Vec::new();
+        for turn in 0..6 {
+            let who = if turn % 2 == 0 { 2 } else { 3 };
+            got.push(g.pop(who).unwrap().scalar);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(g.pop(2), Err(Status::WouldBlock));
+    }
+
+    #[test]
+    fn consumer_group_full_hands_entry_back() {
+        let g = ConsumerGroup::<RealWorld>::new(2);
+        g.push(Entry::scalar(1, 0)).unwrap();
+        g.push(Entry::scalar(2, 0)).unwrap();
+        let (s, back) = g.push(Entry::scalar(3, 0)).unwrap_err();
+        assert_eq!(s, Status::WouldBlock);
+        assert_eq!(back.scalar, 3);
+    }
+
+    #[test]
+    fn consumer_group_batch_push_drains_prefix() {
+        let g = ConsumerGroup::<RealWorld>::new(4);
+        let mut entries: Vec<Entry> = (0..6u64).map(|i| Entry::scalar(i, 1)).collect();
+        assert_eq!(g.push_batch(&mut entries), Ok(4));
+        assert_eq!(entries.len(), 2, "overflow stays with the caller");
+        assert_eq!(g.push_batch(&mut entries), Err(Status::WouldBlock));
+        let mut got: Vec<u64> = (0..4).map(|_| g.pop(9).unwrap().scalar).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        let mut empty = Vec::new();
+        assert_eq!(g.push_batch(&mut empty), Ok(0));
+    }
+
+    #[test]
+    fn consumer_group_repair_salvages_dead_consumer_claim() {
+        let g = ConsumerGroup::<RealWorld>::new(4);
+        g.push(Entry::scalar(41, 1)).unwrap();
+        g.push(Entry::scalar(42, 1)).unwrap();
+        // Consumer node 6 claims the head entry and dies unconsumed.
+        assert!(g.ring.claim_and_abandon_consumer(6));
+        assert_eq!(g.pop(7).unwrap().scalar, 42);
+        let (tomb, salvaged) = g.repair_dead(6);
+        assert_eq!(tomb, 0);
+        assert_eq!(salvaged.len(), 1);
+        assert_eq!(salvaged[0].scalar, 41);
+        // Live peers' claims are untouched.
+        assert_eq!(g.repair_dead(7), (0, Vec::new()));
     }
 }

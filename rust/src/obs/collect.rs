@@ -239,8 +239,15 @@ impl Collector {
     }
 
     /// Metrics snapshot JSON: event totals, the counter registry, merged
-    /// and per-channel stage histograms.
-    pub fn metrics_json(&self, counters: &[(String, u64)], dropped: u64) -> String {
+    /// and per-channel stage histograms, and per-lane drop watermarks
+    /// (`lanes` = `(high_water, dropped)` per lane in lane order, e.g.
+    /// from [`crate::obs::lanes_snapshot`]).
+    pub fn metrics_json(
+        &self,
+        counters: &[(String, u64)],
+        dropped: u64,
+        lanes: &[(u64, u64)],
+    ) -> String {
         let ctrs = counters
             .iter()
             .map(|(n, v)| format!("\"{}\":{}", n.replace('"', ""), v))
@@ -252,11 +259,20 @@ impl Collector {
             .map(|(ch, set)| format!("\"{ch}\":{}", set.to_json()))
             .collect::<Vec<_>>()
             .join(",");
+        let lanes = lanes
+            .iter()
+            .enumerate()
+            .map(|(i, (hw, dr))| {
+                format!("{{\"lane\":{i},\"high_water\":{hw},\"dropped\":{dr}}}")
+            })
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
-            "{{\"events\":{},\"dropped\":{},\"counters\":{{{}}},\"stages\":{},\
+            "{{\"events\":{},\"dropped\":{},\"lanes\":[{}],\"counters\":{{{}}},\"stages\":{},\
              \"channels\":{{{}}}}}\n",
             self.events.len(),
             dropped,
+            lanes,
             ctrs,
             self.merged_stages().to_json(),
             chans
@@ -457,9 +473,10 @@ mod tests {
         let nd = c.ndjson();
         assert_eq!(nd.lines().count(), 15);
         assert!(nd.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
-        let metrics = c.metrics_json(&[("timeouts".into(), 2)], 0);
+        let metrics = c.metrics_json(&[("timeouts".into(), 2)], 0, &[(37, 0), (64, 5)]);
         assert!(metrics.contains("\"timeouts\":2"));
         assert!(metrics.contains("\"wakeup_recv\""));
+        assert!(metrics.contains("\"lanes\":[{\"lane\":0,\"high_water\":37,\"dropped\":0},{\"lane\":1,\"high_water\":64,\"dropped\":5}]"));
     }
 
     #[test]

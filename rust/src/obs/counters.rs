@@ -50,9 +50,15 @@ pub mod ctr {
     pub const LEASES_RECLAIMED: usize = 13;
     /// Trace records dropped on lane-ring overflow (mirrored at drain).
     pub const TRACE_DROPPED: usize = 14;
+    /// MPMC ring slots published (singles + batch members).
+    pub const MPMC_PUBLISH: usize = 15;
+    /// MPMC ring payloads consumed (tombstone skips excluded).
+    pub const MPMC_CONSUME: usize = 16;
+    /// MPMC wedged-claim repairs (tombstones + salvages).
+    pub const MPMC_REPAIRS: usize = 17;
 
     /// `(id, name)` for every builtin, in registration order.
-    pub const BUILTIN: [(usize, &str); 15] = [
+    pub const BUILTIN: [(usize, &str); 18] = [
         (NBB_INSERT, "nbb.insert"),
         (NBB_READ, "nbb.read"),
         (NBB_FULL, "nbb.full"),
@@ -68,6 +74,9 @@ pub mod ctr {
         (POISONS, "poisons"),
         (LEASES_RECLAIMED, "leases.reclaimed"),
         (TRACE_DROPPED, "trace.dropped"),
+        (MPMC_PUBLISH, "mpmc.publish"),
+        (MPMC_CONSUME, "mpmc.consume"),
+        (MPMC_REPAIRS, "mpmc.repairs"),
     ];
 }
 

@@ -47,6 +47,14 @@ pub enum EventKind {
     BlockPark = 8,
     /// Blocking path woke from its wait cell.
     BlockUnpark = 9,
+    /// MPMC producer won a slot claim (seq = claimed position, aux =
+    /// run length: 1 for a single send, k for a batched claim).
+    MpmcClaim = 10,
+    /// MPMC slot published (sequence word released to consumers).
+    MpmcPublish = 11,
+    /// MPMC consumer won a slot claim — "stole" the position from the
+    /// other consumers in the group.
+    MpmcSteal = 12,
 }
 
 impl EventKind {
@@ -62,6 +70,9 @@ impl EventKind {
             7 => Self::QueuePop,
             8 => Self::BlockPark,
             9 => Self::BlockUnpark,
+            10 => Self::MpmcClaim,
+            11 => Self::MpmcPublish,
+            12 => Self::MpmcSteal,
             _ => return None,
         })
     }
@@ -78,11 +89,14 @@ impl EventKind {
             Self::QueuePop => "queue_pop",
             Self::BlockPark => "block_park",
             Self::BlockUnpark => "block_unpark",
+            Self::MpmcClaim => "mpmc_claim",
+            Self::MpmcPublish => "mpmc_publish",
+            Self::MpmcSteal => "mpmc_steal",
         }
     }
 
     /// Every kind, for exhaustive round-trip tests.
-    pub fn all() -> [Self; 9] {
+    pub fn all() -> [Self; 12] {
         [
             Self::SendEnter,
             Self::SendCommit,
@@ -93,6 +107,9 @@ impl EventKind {
             Self::QueuePop,
             Self::BlockPark,
             Self::BlockUnpark,
+            Self::MpmcClaim,
+            Self::MpmcPublish,
+            Self::MpmcSteal,
         ]
     }
 }

@@ -214,6 +214,16 @@ pub fn dropped() -> u64 {
     lanes.iter().map(|r| r.dropped()).sum()
 }
 
+/// Per-lane `(high_water, dropped)` in lane-index order — the drop
+/// watermarks the metrics export records so "how close did each lane
+/// come to overflow" survives into the snapshot, not just the
+/// aggregate drop count.
+pub fn lanes_snapshot() -> Vec<(u64, u64)> {
+    let s = sink();
+    let lanes = s.lanes.lock().unwrap_or_else(|e| e.into_inner());
+    lanes.iter().map(|r| (r.high_water(), r.dropped())).collect()
+}
+
 /// Reset the plane between sessions: discard buffered events, zero the
 /// drop accounting and every counter. Call with tracing disabled (or
 /// accept losing concurrently-emitted events).
@@ -223,6 +233,7 @@ pub fn reset() {
     for ring in lanes.iter() {
         while ring.pop().is_some() {}
         ring.reset_dropped();
+        ring.reset_high_water();
     }
     s.counters.reset();
 }

@@ -32,6 +32,11 @@ pub struct EventRing {
     cached_tail: CachePadded<AtomicU64>,
     /// Records dropped on overflow — exact, monotonic.
     dropped: AtomicU64,
+    /// Peak occupancy ever observed by the producer at push time — the
+    /// per-lane drop *watermark*: how close the lane came to (or how
+    /// far past) overflow. Written only by the producer (plain
+    /// load/max/store is race-free), read by the metrics exporter.
+    high_water: AtomicU64,
     slots: Box<[UnsafeCell<[u8; RECORD_LEN]>]>,
     cap: u64,
 }
@@ -55,6 +60,7 @@ impl EventRing {
             tail: CachePadded::new(AtomicU64::new(0)),
             cached_tail: CachePadded::new(AtomicU64::new(0)),
             dropped: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
             slots,
             cap: cap as u64,
         }
@@ -76,6 +82,13 @@ impl EventRing {
         }
         unsafe { *self.slots[(h % self.cap) as usize].get() = *rec };
         self.head.store(h + 1, Ordering::Release);
+        // Occupancy against the freshest tail snapshot we hold — a
+        // conservative (never-under) upper bound, cheap enough for the
+        // push path since it touches producer-owned state only.
+        let occ = (h + 1).wrapping_sub(t);
+        if occ > self.high_water.load(Ordering::Relaxed) {
+            self.high_water.store(occ, Ordering::Relaxed);
+        }
         true
     }
 
@@ -116,6 +129,17 @@ impl EventRing {
     /// Zero the drop counter (collector reset between sessions).
     pub fn reset_dropped(&self) {
         self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Peak records buffered at any push so far (the lane's drop
+    /// watermark; `>= capacity()` means the lane actually overflowed).
+    pub fn high_water(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Zero the watermark (collector reset between sessions).
+    pub fn reset_high_water(&self) {
+        self.high_water.store(0, Ordering::Relaxed);
     }
 }
 
@@ -163,6 +187,32 @@ mod tests {
         // Space freed: pushes flow again, the drop counter stands still.
         assert!(r.push(&rec(99)));
         assert_eq!(r.dropped(), 12);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_occupancy() {
+        let r = EventRing::new(8);
+        assert_eq!(r.high_water(), 0);
+        for i in 0..3u64 {
+            r.push(&rec(i));
+        }
+        assert_eq!(r.high_water(), 3);
+        r.pop().unwrap();
+        r.pop().unwrap();
+        // The producer measures against its cached tail snapshot
+        // (refreshed only on apparent full), so the watermark is a
+        // conservative never-under bound: pops it has not observed do
+        // not lower the measured occupancy.
+        r.push(&rec(3));
+        assert_eq!(r.high_water(), 4);
+        // Overflow pins the watermark at capacity.
+        for i in 0..20u64 {
+            r.push(&rec(100 + i));
+        }
+        assert_eq!(r.high_water(), 8);
+        assert!(r.dropped() > 0);
+        r.reset_high_water();
+        assert_eq!(r.high_water(), 0);
     }
 
     #[test]

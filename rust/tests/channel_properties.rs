@@ -496,3 +496,54 @@ fn sim_batched_scalar_channel_amortizes_counter_stores() {
         "scalar batch 16 should finish sooner: {batched:?} vs {single:?}"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Zero-copy receive views (`pkt_recv_view`).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pkt_recv_view_roundtrip_both_backends() {
+    for rt in both() {
+        let ch = open_channel(&rt, ChannelKind::Packet, 1);
+        rt.pkt_send(ch, &[10, 20, 30]).unwrap();
+        let seen = rt.pkt_recv_view(ch, |b| b.to_vec()).unwrap();
+        assert_eq!(seen, vec![10, 20, 30], "view observes the exact payload bytes");
+        // The view consumed the packet.
+        let r = rt.pkt_recv_view(ch, |b| b.len());
+        assert_eq!(r.unwrap_err(), Status::WouldBlock);
+        assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers, "no leaked leases");
+    }
+}
+
+#[test]
+fn pkt_recv_view_lease_holds_the_slot_until_release() {
+    // Borrow-until-release: while the view closure runs, the ring slot
+    // is still leased to the consumer — a producer blocked on a full
+    // ring must stay blocked until the closure returns, and succeed
+    // right after.
+    let cfg = RuntimeCfg { nbb_capacity: 2, ..RuntimeCfg::with_backend(BackendKind::LockFree) };
+    let rt: Arc<McapiRuntime<RealWorld>> = McapiRuntime::new(cfg);
+    let ch = open_channel(&rt, ChannelKind::Packet, 1);
+    rt.pkt_send(ch, &[1]).unwrap();
+    rt.pkt_send(ch, &[2]).unwrap();
+    assert!(
+        rt.pkt_send(ch, &[3]).unwrap_err().is_would_block(),
+        "ring of two slots is full"
+    );
+    let (first, blocked_inside) = rt
+        .pkt_recv_view(ch, |b| {
+            // Still inside the borrow: the slot being viewed is not
+            // yet recycled, so the ring is still effectively full.
+            let r = rt.pkt_send(ch, &[3]);
+            (b[0], r.err().is_some_and(|s| s.is_would_block()))
+        })
+        .unwrap();
+    assert_eq!(first, 1);
+    assert!(blocked_inside, "send inside the view must stay would-blocked");
+    // Borrow released: the freed slot accepts the pending payload.
+    rt.pkt_send(ch, &[3]).unwrap();
+    let mut buf = [0u8; 8];
+    assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap(), 1);
+    assert_eq!(buf[0], 2);
+    assert_eq!(rt.pkt_recv_view(ch, |b| b[0]).unwrap(), 3);
+}

@@ -10,7 +10,9 @@
 //! deadlock — the scheduler panics on a deadlock with no timed waiter).
 //! The same fault seed must reproduce an identical report byte-for-byte.
 
-use mcapi::coordinator::chaos::{run_kill_sweep, run_seeded, ChaosOpts, Scenario, Victim};
+use mcapi::coordinator::chaos::{
+    run_kill_sweep, run_seeded, run_stall_sweep, ChaosOpts, Scenario, Victim,
+};
 
 #[test]
 fn kill_producer_at_every_op_inside_pkt_send() {
@@ -52,4 +54,56 @@ fn seeded_reports_reproduce_byte_for_byte() {
             assert!(a.text.ends_with("verdict=PASS"));
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Stall sweeps: freeze — never kill — the victim at every priced-op
+// index inside the probed operation. The bar is strictly higher than
+// the kill sweep's: a stall loses nothing, so every point must deliver
+// the complete stream in-band with both sides finishing clean. This
+// pins the peer-active liveness handshakes (`WouldBlockPeerActive`,
+// doorbell re-check) across the scalar-channel and batched paths.
+// ---------------------------------------------------------------------------
+
+/// Virtual-ns stall: long enough to cross scheduling quanta, far below
+/// the 2 ms receive deadline so nothing times out terminally.
+const STALL_NS: u64 = 40_000;
+
+#[test]
+fn stall_producer_inside_pkt_send_only_delays_the_stream() {
+    let r = run_stall_sweep(Scenario::Pkt, Victim::Producer, 16, STALL_NS);
+    assert!(r.pass, "stall sweep failed:\n{}", r.text);
+    let points = r.text.lines().filter(|l| l.trim_start().starts_with("stall@")).count();
+    assert!(points >= 4, "suspiciously small sweep ({points} points):\n{}", r.text);
+}
+
+#[test]
+fn stall_consumer_inside_pkt_recv_only_delays_the_stream() {
+    let r = run_stall_sweep(Scenario::Pkt, Victim::Consumer, 16, STALL_NS);
+    assert!(r.pass, "stall sweep failed:\n{}", r.text);
+}
+
+#[test]
+fn stall_sweep_covers_scalar_channels() {
+    for victim in [Victim::Producer, Victim::Consumer] {
+        let r = run_stall_sweep(Scenario::Sclr, victim, 16, STALL_NS);
+        assert!(r.pass, "sclr {victim:?} stall sweep failed:\n{}", r.text);
+    }
+}
+
+#[test]
+fn stall_sweep_covers_batched_paths() {
+    for victim in [Victim::Producer, Victim::Consumer] {
+        let r = run_stall_sweep(Scenario::PktBatch, victim, 16, STALL_NS);
+        assert!(r.pass, "pkt_batch {victim:?} stall sweep failed:\n{}", r.text);
+    }
+}
+
+#[test]
+fn kill_consumer_inside_a_batched_drain_loses_at_most_one_batch() {
+    // The batched drain acks a whole run with one counter pair, so a
+    // consumer killed at the ack boundary may take up to one batch with
+    // it — and nothing more (the generalized ack-hole judgement).
+    let r = run_kill_sweep(Scenario::PktBatch, Victim::Consumer, 16);
+    assert!(r.pass, "sweep failed:\n{}", r.text);
 }

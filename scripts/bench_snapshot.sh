@@ -55,11 +55,18 @@ fi
 # Required rows: the PR-over-PR trajectory keys must all be present.
 for key in spsc_ratio spsc_batch_ratio empty_pop_ns pkt_queue_mps pkt_ring_mps pkt_ring_vs_queue \
            stress_pkt_timeouts stress_pkt_poisons stress_pkt_leases_reclaimed \
+           mpmc_scaling_c1_mps mpmc_scaling_c2_mps mpmc_scaling_c4_mps mpmc_scaling_batch_ratio \
            trace_events trace_send_commit_p99_ns trace_wakeup_recv_p99_ns trace_replay_pass \
-           host_cores host_os git_sha; do
+           trace_lane_peak host_cores host_os git_sha; do
   if ! grep -q "\"$key\"" "$out"; then
     echo "error: BENCH_micro snapshot is missing \"$key\"" >&2
     exit 1
   fi
 done
+
+# The metrics export must carry the per-lane drop watermarks.
+if ! grep -q '"lanes"' "$trace_prefix.metrics.json"; then
+  echo "error: trace metrics export is missing the per-lane watermark block" >&2
+  exit 1
+fi
 echo "wrote $out"
