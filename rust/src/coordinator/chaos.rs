@@ -33,10 +33,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::lockfree::World;
+use crate::mcapi::liveness::LivenessCfg;
 use crate::mcapi::types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status};
 use crate::mcapi::McapiRuntime;
 use crate::os::{AffinityMode, OsProfile};
-use crate::sim::faults::{sweep_kill_points, sweep_stall_points, FaultAction, FaultPlan, OpWindow};
+use crate::sim::faults::{
+    sweep_delay_points, sweep_kill_points, sweep_stall_points, FaultAction, FaultPlan, OpWindow,
+};
 use crate::sim::{Machine, MachineCfg, SimWorld};
 
 /// Spawn-order task id of the producer (fault victim 0).
@@ -245,6 +248,15 @@ struct Outcome {
     reclaimed: u64,
     poisons: u64,
     timeouts: u64,
+    /// Watchdog suspect scans (armed runs only; 0 otherwise).
+    suspects: u64,
+    /// Watchdog confirmations — automatic `declare_node_dead` calls.
+    confirms: u64,
+    /// Suspects cleared by later progress (hysteresis at work).
+    false_suspects: u64,
+    /// Liveness verdicts at the end of the run.
+    prod_alive: bool,
+    cons_alive: bool,
     vtime_ns: u64,
     prod_window: Option<OpWindow>,
     cons_window: Option<OpWindow>,
@@ -256,6 +268,22 @@ fn run_scenario(
     messages: u64,
     recv_timeout_ns: u64,
 ) -> Outcome {
+    run_scenario_with(scenario, plan, messages, recv_timeout_ns, None)
+}
+
+/// Like [`run_scenario`], but with the heartbeat watchdog optionally
+/// armed: when `liveness` is `Some`, the monitor task drives
+/// [`McapiRuntime::watchdog_scan_once`] on every poll, so node deaths
+/// are detected *automatically* — the explicit `task_done`-based
+/// declarations below stay as the sim-plane backstop (a killed sim task
+/// stops beating, so the armed watchdog usually wins the race).
+fn run_scenario_with(
+    scenario: Scenario,
+    plan: FaultPlan,
+    messages: u64,
+    recv_timeout_ns: u64,
+    liveness: Option<LivenessCfg>,
+) -> Outcome {
     let m = Machine::new(MachineCfg::new(
         4,
         OsProfile::linux_rt(),
@@ -266,6 +294,7 @@ fn run_scenario(
         max_nodes: 4,
         nbb_capacity: 8,
         pool_buffers: 64,
+        liveness: liveness.unwrap_or_default(),
         ..Default::default()
     };
     let rt = McapiRuntime::<SimWorld>::new(cfg);
@@ -478,7 +507,14 @@ fn run_scenario(
             }
             ready.store(true, Ordering::SeqCst);
             let mut declared = [false; 2];
+            let mut wd = liveness.map(|_| rt.new_watchdog());
             loop {
+                // Armed runs: every scan is host-side (unpriced) reads of
+                // the heartbeat shadows; a confirm feeds the same
+                // `declare_node_dead` pipeline the explicit path uses.
+                if let Some(wd) = wd.as_mut() {
+                    rt.watchdog_scan_once(wd);
+                }
                 let d0 = SimWorld::task_done(TASK_PROD);
                 let d1 = SimWorld::task_done(TASK_CONS);
                 if d0 && !declared[0] && !clean_prod.load(Ordering::SeqCst) {
@@ -551,6 +587,11 @@ fn run_scenario(
         reclaimed: rt.leases_reclaimed(),
         poisons: rt.poisons_observed(),
         timeouts: rt.timeouts_observed(),
+        suspects: rt.suspects_observed(),
+        confirms: rt.confirms_observed(),
+        false_suspects: rt.false_suspects_observed(),
+        prod_alive: rt.node_alive(NODE_PROD),
+        cons_alive: rt.node_alive(NODE_CONS),
         vtime_ns: stats.virtual_ns,
         prod_window: w0,
         cons_window: w1,
@@ -641,8 +682,8 @@ fn fmt_line(prefix: &str, out: &Outcome, committed: u64, gap: u64, fails: &[Stri
     };
     format!(
         "{prefix} committed={committed} delivered={} drained={} gap={gap} torn={} \
-         leaked={} reclaimed={} poisons={} timeouts={} prod_clean={} cons_clean={} \
-         vtime_ns={} verdict={verdict}",
+         leaked={} reclaimed={} poisons={} timeouts={} confirms={} prod_clean={} \
+         cons_clean={} vtime_ns={} verdict={verdict}",
         out.delivered.len(),
         out.drained.len(),
         out.torn,
@@ -650,6 +691,7 @@ fn fmt_line(prefix: &str, out: &Outcome, committed: u64, gap: u64, fails: &[Stri
         out.reclaimed,
         out.poisons,
         out.timeouts,
+        out.confirms,
         out.producer_clean,
         out.consumer_clean,
         out.vtime_ns,
@@ -785,6 +827,95 @@ pub fn run_stall_sweep(
     ChaosReport { text: lines.join("\n"), pass }
 }
 
+/// Scheduling-delay sweep with the heartbeat watchdog **armed**: the
+/// victim is delayed (stall + deschedule) for `delay_ns` at every
+/// priced-op index inside the probed window while the monitor drives
+/// [`McapiRuntime::watchdog_scan_once`] on every poll. The bar is the
+/// stall sweep's (full in-band delivery, both sides clean, no leaks)
+/// *plus* the liveness-plane acceptance criterion: the watchdog must
+/// never confirm a delayed-but-alive node at **any** sweep point — the
+/// silence deadline sits well above the injected delay, and the
+/// suspect→confirm hysteresis absorbs what the deadline does not.
+pub fn run_delay_sweep(
+    scenario: Scenario,
+    victim: Victim,
+    messages: u64,
+    delay_ns: u64,
+) -> ChaosReport {
+    let cfg = LivenessCfg {
+        deadline_ns: delay_ns.saturating_mul(5).max(200_000),
+        confirm_scans: 3,
+    };
+    let opts = ChaosOpts { scenario, messages, ..Default::default() };
+    let probe =
+        run_scenario_with(scenario, FaultPlan::new(), messages, opts.recv_timeout_ns, Some(cfg));
+    let (_, _, probe_fails) = judge(&probe, scenario.admissible_hole());
+    let window = match victim {
+        Victim::Producer => probe.prod_window,
+        Victim::Consumer => probe.cons_window,
+    };
+    let Some(window) = window else {
+        return ChaosReport {
+            text: format!(
+                "delay-sweep scenario={} victim={} verdict=FAIL[probe run never reached \
+                 the bracketed operation]",
+                scenario.label(),
+                victim.label()
+            ),
+            pass: false,
+        };
+    };
+    let mut pass = probe_fails.is_empty() && probe.confirms == 0;
+    let mut lines = vec![format!(
+        "delay-sweep scenario={} victim={} delay_ns={} deadline_ns={} confirm_scans={} \
+         window={}..{} points={} probe={}",
+        scenario.label(),
+        victim.label(),
+        delay_ns,
+        cfg.deadline_ns,
+        cfg.confirm_scans,
+        window.start,
+        window.end,
+        window.len(),
+        if pass { "PASS" } else { "FAIL" }
+    )];
+    for (k, plan) in sweep_delay_points(window, delay_ns) {
+        let out = run_scenario_with(scenario, plan, messages, opts.recv_timeout_ns, Some(cfg));
+        let (committed, gap, mut fails) = judge(&out, scenario.admissible_hole());
+        if !(out.producer_clean && out.consumer_clean) {
+            fails.push("a delayed victim did not finish clean".into());
+        }
+        if (out.delivered.len() as u64) < messages {
+            fails.push(format!(
+                "delayed run delivered {}/{messages} in-band",
+                out.delivered.len()
+            ));
+        }
+        if out.confirms != 0 {
+            fails.push(format!(
+                "watchdog confirmed {} merely-delayed node(s) dead",
+                out.confirms
+            ));
+        }
+        if !(out.prod_alive && out.cons_alive) {
+            fails.push("a delayed-but-alive node ended the run declared dead".into());
+        }
+        pass &= fails.is_empty();
+        lines.push(fmt_line(
+            &format!(
+                "  delay@{k} suspects={} false_suspects={}",
+                out.suspects, out.false_suspects
+            ),
+            &out,
+            committed,
+            gap,
+            &fails,
+        ));
+    }
+    lines.push(format!("sweep verdict={}", if pass { "PASS" } else { "FAIL" }));
+    ChaosReport { text: lines.join("\n"), pass }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -837,6 +968,23 @@ mod tests {
         assert_eq!(parse_sclr(v), Some(9));
         assert_eq!(parse_sclr(v ^ 0x10), None);
         assert_eq!(parse_sclr(v ^ (0x10 << 32)), None);
+    }
+
+    #[test]
+    fn delay_sweep_never_declares_a_live_node() {
+        let r = run_delay_sweep(Scenario::Pkt, Victim::Producer, 12, 40_000);
+        assert!(r.pass, "{}", r.text);
+    }
+
+    #[test]
+    fn armed_watchdog_coexists_with_seeded_faults() {
+        let cfg = LivenessCfg { deadline_ns: 200_000, confirm_scans: 3 };
+        for seed in 1..=3u64 {
+            let plan = FaultPlan::from_seed(seed, 2, 400);
+            let out = run_scenario_with(Scenario::Pkt, plan, 12, 2_000_000, Some(cfg));
+            let (_, _, fails) = judge(&out, Scenario::Pkt.admissible_hole());
+            assert!(fails.is_empty(), "seed {seed}: {fails:?}");
+        }
     }
 
     #[test]

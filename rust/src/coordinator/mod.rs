@@ -22,7 +22,13 @@
 //! * [`trace`] — the same drivers with the [`crate::obs`] plane armed:
 //!   drained stage-latency histograms, trace exporters, and the
 //!   event-stream replay verdict.
+//! * [`abandon`] — the real-thread abandonment harness: OS threads that
+//!   park forever mid-operation on `RealWorld`, recovered end-to-end by
+//!   the armed heartbeat watchdog with **zero** explicit
+//!   `declare_node_dead` calls, judged by the same
+//!   no-loss/no-dup/no-leak invariants.
 
+pub mod abandon;
 pub mod chaos;
 pub mod experiment;
 pub mod metrics;
@@ -31,10 +37,15 @@ pub mod runner;
 pub mod topology;
 pub mod trace;
 
+pub use abandon::{run_abandon, run_abandon_seeded, AbandonOpts, AbandonRole};
 pub use chaos::{
-    run_kill_sweep, run_seeded, run_stall_sweep, ChaosOpts, ChaosReport, Scenario, Victim,
+    run_delay_sweep, run_kill_sweep, run_seeded, run_stall_sweep, ChaosOpts, ChaosReport,
+    Scenario, Victim,
 };
-pub use mpmc::{run_mpmc_chaos, run_mpmc_kill_sweep, run_mpmc_stress, MpmcOpts, MpmcReport};
+pub use mpmc::{
+    run_mpmc_chaos, run_mpmc_kill_sweep, run_mpmc_stress, run_mpmc_two_victims, MpmcOpts,
+    MpmcReport,
+};
 pub use experiment::{Cell, CellResult, Matrix};
 pub use metrics::StressReport;
 pub use runner::{run_pingpong_real, run_pingpong_sim, run_stress_real, run_stress_sim, StressOpts};

@@ -230,20 +230,37 @@ fn run_mpmc(opts: &MpmcOpts, plan: FaultPlan) -> Outcome {
             ready.store(true, Ordering::SeqCst);
             let mut declared = vec![false; workers];
             let mut stable = 0u32;
+            let mut buf = [0u8; 64];
             loop {
                 let mut all_done = true;
                 let mut prod_done = true;
+                let mut cons_done = true;
                 for t in 0..workers {
                     let done = SimWorld::task_done(t);
                     all_done &= done;
                     if t < producers {
                         prod_done &= done;
+                    } else {
+                        cons_done &= done;
                     }
                     if done && !declared[t] && !clean_flags[t].load(Ordering::SeqCst) {
                         // Worker task `t` owns node `1 + t` on both
                         // sides of the split.
                         rt.declare_node_dead(1 + t);
                         declared[t] = true;
+                    }
+                }
+                // Fallback claimant, in-loop: with every consumer gone
+                // the producers would wedge on a full lane, so the
+                // endpoint owner claims while they finish streaming.
+                if cons_done && !prod_done {
+                    while let Ok(n) = rt.msg_recv(ep, &mut buf) {
+                        match parse_frame(&buf[..n]) {
+                            Some(seq) => drained.lock().unwrap().push(seq),
+                            None => {
+                                torn.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
                     }
                 }
                 // Raise `halt` only after the producers stopped, every
@@ -468,6 +485,64 @@ pub fn run_mpmc_kill_sweep(victim: Victim, opts: &MpmcOpts) -> MpmcReport {
     MpmcReport { text: lines.join("\n"), pass, delivered }
 }
 
+/// Simultaneous multi-node death: kill **two distinct victims** in one
+/// run — any role pairing — and judge exactly-once under the per-role
+/// kill budgets (`missing <= consumer kills`, `extra <= producer
+/// kills`). Kill points come from the probed mid-operation windows; a
+/// repeated role targets the sibling task at the same per-task op index
+/// (the workloads are symmetric, and any priced-op index is a valid
+/// death point). Deterministic: same opts, same report byte-for-byte.
+pub fn run_mpmc_two_victims(first: Victim, second: Victim, opts: &MpmcOpts) -> MpmcReport {
+    let producers = opts.producers.max(1);
+    let consumers = opts.consumers.max(1);
+    let probe = run_mpmc(opts, FaultPlan::new());
+    let (_, _, probe_fails) = judge(&probe, opts);
+    let window_of = |v: Victim| match v {
+        Victim::Producer => probe.prod_window,
+        Victim::Consumer => probe.cons_window,
+    };
+    let (Some(w1), Some(w2)) = (window_of(first), window_of(second)) else {
+        return MpmcReport {
+            text: format!(
+                "mpmc-two-victims roles={}+{} verdict=FAIL[probe run never reached the \
+                 bracketed operation]",
+                first.label(),
+                second.label()
+            ),
+            pass: false,
+            delivered: probe.delivered.len(),
+        };
+    };
+    let task_of = |v: Victim, instance: usize| match v {
+        Victim::Producer => instance % producers,
+        Victim::Consumer => producers + instance % consumers,
+    };
+    let mid = |w: OpWindow| w.start + w.len() / 2;
+    let t1 = task_of(first, 0);
+    let t2 = task_of(second, if first == second { 1 } else { 0 });
+    let plan = FaultPlan::new().kill(t1, mid(w1)).kill(t2, mid(w2));
+    let events: Vec<String> = plan.events().map(fmt_event).collect();
+    let out = run_mpmc(opts, plan);
+    let (missing, extra, mut fails) = judge(&out, opts);
+    if !probe_fails.is_empty() {
+        fails.push("probe run failed".into());
+    }
+    let prefix = format!(
+        "mpmc-two-victims roles={}+{} producers={} consumers={} msgs={} events=[{}]",
+        first.label(),
+        second.label(),
+        opts.producers,
+        opts.consumers,
+        opts.messages,
+        events.join(",")
+    );
+    MpmcReport {
+        text: fmt_line(&prefix, &out, missing, extra, &fails),
+        pass: fails.is_empty(),
+        delivered: out.delivered.len(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -488,6 +563,19 @@ mod tests {
             assert!(a.pass, "seed {seed}: {}", a.text);
             let b = run_mpmc_chaos(&opts);
             assert_eq!(a.text, b.text, "seed {seed} report must reproduce exactly");
+        }
+    }
+
+    #[test]
+    fn two_simultaneous_victims_keep_exactly_once() {
+        let opts = MpmcOpts { messages: 10, ..Default::default() };
+        for (a, b) in [
+            (Victim::Producer, Victim::Producer),
+            (Victim::Producer, Victim::Consumer),
+            (Victim::Consumer, Victim::Consumer),
+        ] {
+            let r = run_mpmc_two_victims(a, b, &opts);
+            assert!(r.pass, "{}+{}: {}", a.label(), b.label(), r.text);
         }
     }
 

@@ -80,6 +80,11 @@ impl TraceRun {
                 && self.replay.recvs <= self.replay.commits + 1)
     }
 
+    /// Counter-registry value by name (0 when the run never touched it).
+    fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+    }
+
     /// The machine-readable snapshot line `scripts/bench_snapshot.sh`
     /// greps into `BENCH_trace.json`.
     pub fn bench_json_line(&self) -> String {
@@ -90,7 +95,9 @@ impl TraceRun {
              \"trace_lane_peak\": {}, \
              \"trace_send_commit_p50_ns\": {}, \"trace_send_commit_p99_ns\": {}, \
              \"trace_commit_doorbell_p99_ns\": {}, \"trace_doorbell_wakeup_p99_ns\": {}, \
-             \"trace_wakeup_recv_p99_ns\": {}, \"trace_replay_pass\": {}}}",
+             \"trace_wakeup_recv_p99_ns\": {}, \"trace_replay_pass\": {}, \
+             \"liveness_suspects\": {}, \"liveness_confirms\": {}, \
+             \"liveness_false_suspects\": {}, \"liveness_fence_rejects\": {}}}",
             self.events(),
             self.dropped,
             lane_peak,
@@ -99,7 +106,11 @@ impl TraceRun {
             m.commit_doorbell.p99(),
             m.doorbell_wakeup.p99(),
             m.wakeup_recv.p99(),
-            u32::from(self.replay_pass())
+            u32::from(self.replay_pass()),
+            self.counter("liveness.suspects"),
+            self.counter("liveness.confirms"),
+            self.counter("liveness.false_suspects"),
+            self.counter("liveness.fence_rejects")
         )
     }
 

@@ -86,6 +86,8 @@
 //! | peer stalls (alive but descheduled) | `*PeerActive` status persists | bounded immediate retries ([`Backoff`]) | escalate spin → `yield_now` → futex park with deadline | `Timeout` after its deadline, never a hang |
 //! | producer dies inside an [`mpmc`] claim (slot seq parked at `p`) | claimed-unpublished slot wedges every later position | claimant board (`writers[idx] == who+1`, stamped kill-atomically with the claim CAS) | `MpmcRing::repair_dead`: publish a [`mpmc::TOMBSTONE`] length word — consumers consume and skip it, freeing the slot | consumers resume past the wedge; no payload existed to lose |
 //! | consumer dies inside an [`mpmc`] claim (slot seq parked at `p+1`) | claimed-unconsumed payload wedges the slot's next lap | claimant board (`readers[idx]`) | `repair_dead` salvages the payload to the runtime (re-enqueued — the dead claim never completed, so exactly-once holds) and frees the slot | payload redelivered to a live consumer |
+//! | OS thread **abandons** its node (parks forever; no kill event) | silence — structures consistent but the stream wedges | heartbeat watchdog: per-node progress epochs scanned against a silence deadline with suspect→confirm hysteresis (`McapiRuntime::watchdog_scan_once`) | automatic `declare_node_dead` runs the full repair pipeline above; the node's liveness epoch goes odd, **fencing** every later send/claim from the zombie (`NodeFenced`, fail-fast, no ring state touched) | blocked peers unblock via poison; a woken zombie gets `NodeFenced` instead of corrupting the repaired stream |
+//! | fenced node restarts (`McapiRuntime::rejoin`) | stale epoch | epoch parity | epoch bumps to the next even value; heartbeat lane resets so the watchdog re-baselines instead of instantly re-confirming | fresh endpoints/channels work; the old generation stays fenced |
 //!
 //! The repairs are sound because each NBB/ring counter has a **single
 //! owner** (SPSC lanes) and occupancy uses floor division: an odd

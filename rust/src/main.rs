@@ -8,16 +8,21 @@
 //!   `table2`, `fig7`, `fig8`.
 //! * `model`       — run the Section 5 performance model: `fig6`
 //!   (artifact sweep + analytic cross-check), `stopcrit`.
-//! * `chaos`       — fault-injection gate: seeded kill/stall plans or a
-//!   full kill-point sweep, with recovery-invariant checking and a
-//!   reproducible per-seed report. Exits non-zero on invariant failure.
+//! * `chaos`       — fault-injection gate: seeded kill/stall plans, a
+//!   full kill-point sweep, a delay sweep with the liveness watchdog
+//!   armed (no false positives allowed), or the real-thread abandonment
+//!   scenario (watchdog-only recovery), all with recovery-invariant
+//!   checking and reproducible reports. Exits non-zero on failure.
 //! * `trace`       — run a workload with the observability plane armed:
 //!   per-stage latency attribution, NDJSON / chrome-trace / metrics
 //!   exports, and the event-stream replay verdict. Exits non-zero when
 //!   the replay check fails.
 //! * `info`        — platform/runtime information.
 
-use mcapi::coordinator::chaos::{run_kill_sweep, run_seeded, ChaosOpts, Scenario, Victim};
+use mcapi::coordinator::abandon::run_abandon_seeded;
+use mcapi::coordinator::chaos::{
+    run_delay_sweep, run_kill_sweep, run_seeded, ChaosOpts, Scenario, Victim,
+};
 use mcapi::coordinator::experiment::{print_fig7, print_fig8, print_table2, Matrix};
 use mcapi::coordinator::{
     run_stress_real, run_stress_sim, run_traced_chaos, run_traced_stress, MsgKind, StressOpts,
@@ -81,6 +86,10 @@ fn usage() {
          \x20 model       fig6 [--kind K] [--solver artifact|native|sweep] | stopcrit [--measured-ns X]\n\
          \x20 chaos       --faults seed=N | --seed N [--scenario pkt|msg] [--msgs N]\n\
          \x20             --sweep [--victim prod|cons] (kill at every priced op in the window)\n\
+         \x20             --sweep-delay [--delay-ns N] (delay at every priced op; the armed\n\
+         \x20             watchdog must never declare the delayed-but-alive victim dead)\n\
+         \x20             --abandon (real-thread abandonment: OS thread parks forever, the\n\
+         \x20             heartbeat watchdog alone must detect, fence and recover it)\n\
          \x20 trace       --kind message|packet|scalar --tx N --plane sim|real\n\
          \x20             --cores N --batch N [--chaos-seed N] [--out PREFIX]\n\
          \x20             (writes PREFIX.chrome.json / .ndjson / .metrics.json)\n\
@@ -265,11 +274,24 @@ fn cmd_chaos(args: &Args) -> mcapi::Result<()> {
         None => args.get_u64_or("seed", 1)?,
     };
     let sweep = args.flag("sweep");
+    let sweep_delay = args.flag("sweep-delay");
+    let abandon = args.flag("abandon");
+    let delay_ns = args.get_u64_or("delay-ns", 40_000)?;
     let victim = Victim::parse(&args.get_or("victim", "prod"))
         .ok_or_else(|| mcapi::Error::Config("bad --victim (prod|cons)".into()))?;
     args.finish()?;
 
-    let report = if sweep {
+    if abandon {
+        let report = run_abandon_seeded(seed);
+        println!("{}", report.text);
+        if !report.pass {
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
+    let report = if sweep_delay {
+        run_delay_sweep(scenario, victim, messages, delay_ns)
+    } else if sweep {
         run_kill_sweep(scenario, victim, messages)
     } else {
         run_seeded(&ChaosOpts { scenario, seed, messages, ..ChaosOpts::default() })

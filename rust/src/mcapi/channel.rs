@@ -41,6 +41,7 @@ use crate::lockfree::ring::{ChannelRing, RecvError, ScalarBatchError};
 use crate::obs;
 use crate::obs::EventKind;
 
+use super::liveness::RetryBackoff;
 use super::queue::Entry;
 use super::request::{PendingOp, RequestHandle};
 use super::types::{BackendKind, ChannelKind, Status};
@@ -149,6 +150,9 @@ impl<W: World> McapiRuntime<W> {
         if data.len() > self.cfg.buf_len {
             return Err(Status::MessageLimit);
         }
+        let tx = self.tx_node_of(ch);
+        self.fence_check(tx)?;
+        self.hb_bump(tx);
         self.check_peer_alive_tx(ch)?;
         // Stage mark: API entry. Seq = next committed insert (u/2; the
         // producer's counter is even here — SPSC, and we are the
@@ -177,6 +181,7 @@ impl<W: World> McapiRuntime<W> {
 
     /// Lock-free packet receive: copy the next slot's bytes into `out`.
     pub(super) fn ring_pkt_recv(&self, ch: usize, out: &mut [u8]) -> Result<usize, Status> {
+        self.hb_bump(self.rx_node_of(ch));
         let r = self.with_doorbell_recheck(ch, |ring| match ring.recv(out) {
             Ok(n) => Ok(n),
             Err(RecvError::Empty) => Err(Status::WouldBlock),
@@ -191,6 +196,9 @@ impl<W: World> McapiRuntime<W> {
 
     /// Lock-free scalar send (`width` bytes: 1/2/4/8).
     pub(super) fn ring_sclr_send(&self, ch: usize, value: u64, width: u32) -> Result<(), Status> {
+        let tx = self.tx_node_of(ch);
+        self.fence_check(tx)?;
+        self.hb_bump(tx);
         self.check_peer_alive_tx(ch)?;
         if obs::tracing() {
             let (u, _) = self.ring(ch).counters_peek();
@@ -215,6 +223,7 @@ impl<W: World> McapiRuntime<W> {
     /// Lock-free scalar receive expecting `width` bytes; a mismatched
     /// width consumes the scalar and reports `ScalarSizeMismatch`.
     pub(super) fn ring_sclr_recv(&self, ch: usize, width: u32) -> Result<u64, Status> {
+        self.hb_bump(self.rx_node_of(ch));
         let r = self.with_doorbell_recheck(ch, |ring| match ring.recv_scalar() {
             Ok(vw) => Ok(vw),
             Err(RecvError::Empty) => Err(Status::WouldBlock),
@@ -294,6 +303,9 @@ impl<W: World> McapiRuntime<W> {
                 if valid == 0 {
                     return Err(Status::MessageLimit);
                 }
+                let tx = self.tx_node_of(ch);
+                self.fence_check(tx)?;
+                self.hb_bump(tx);
                 self.check_peer_alive_tx(ch)?;
                 // Stage mark per payload offered; over-emitted enters for
                 // the unsent tail never pair and are dropped harmlessly.
@@ -364,6 +376,7 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Packet)?;
+                self.hb_bump(self.rx_node_of(ch));
                 let r = self.with_doorbell_recheck(ch, |ring| match ring.recv_batch(out, max) {
                     Ok(n) => Ok(n),
                     Err(BatchStatus::WouldBlock) => Err(Status::WouldBlock),
@@ -398,6 +411,7 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Packet)?;
+                self.hb_bump(self.rx_node_of(ch));
                 // `f` is FnOnce but the doorbell recheck may probe twice;
                 // the ring only invokes the closure when a payload is
                 // actually present, so `f` survives an Empty first probe.
@@ -442,6 +456,9 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Scalar)?;
+                let tx = self.tx_node_of(ch);
+                self.fence_check(tx)?;
+                self.hb_bump(tx);
                 self.check_peer_alive_tx(ch)?;
                 if obs::tracing() {
                     let (u, _) = self.ring(ch).counters_peek();
@@ -506,6 +523,7 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::LockFree => {
                 self.charge_api();
                 self.channel_ready(ch, ChannelKind::Scalar)?;
+                self.hb_bump(self.rx_node_of(ch));
                 let r = self.with_doorbell_recheck(ch, |ring| match ring.recv_scalars(out, max, 8)
                 {
                     Ok(n) => Ok(n),
@@ -530,6 +548,9 @@ impl<W: World> McapiRuntime<W> {
         self.charge_api();
         match self.cfg.backend {
             BackendKind::Locked => {
+                let tx = self.tx_node_of(ch);
+                self.fence_check(tx)?;
+                self.hb_bump(tx);
                 let (tx_i, rx_i) =
                     self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
                 let from = self.global.with_read(|| self.endpoints[tx_i].owner.load());
@@ -555,6 +576,7 @@ impl<W: World> McapiRuntime<W> {
         self.charge_api();
         match self.cfg.backend {
             BackendKind::Locked => {
+                self.hb_bump(self.rx_node_of(ch));
                 let (_, rx_i) =
                     self.global.with_read(|| self.channel_ready(ch, ChannelKind::Scalar))?;
                 self.global.with_write(|| {
@@ -661,8 +683,9 @@ impl<W: World> McapiRuntime<W> {
             self.requests.complete(h, Status::InvalidChannel);
             return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
         }
-        let drive =
-            self.blocking_drive(&self.chan_waits[ch], timeout_ns, || self.pkt_send(ch, data));
+        let drive = self.blocking_drive(&self.chan_waits[ch], self.tx_node_of(ch), timeout_ns, || {
+            self.pkt_send(ch, data)
+        });
         match drive {
             Ok(()) => {
                 self.requests.complete(h, Status::Success);
@@ -688,8 +711,9 @@ impl<W: World> McapiRuntime<W> {
         let PendingOp::PktRecv { ch } = self.requests.slot(h).op() else {
             return Err(Status::InvalidRequest);
         };
-        let drive =
-            self.blocking_drive(&self.chan_waits[ch], timeout_ns, || self.pkt_recv(ch, out));
+        let drive = self.blocking_drive(&self.chan_waits[ch], self.rx_node_of(ch), timeout_ns, || {
+            self.pkt_recv(ch, out)
+        });
         match drive {
             Ok(n) => {
                 self.requests.complete(h, Status::Success);
@@ -720,7 +744,59 @@ impl<W: World> McapiRuntime<W> {
         timeout_ns: u64,
     ) -> Result<usize, Status> {
         self.connected_ch(ch)?;
-        self.blocking_drive(&self.chan_waits[ch], timeout_ns, || self.pkt_recv(ch, out))
+        self.blocking_drive(&self.chan_waits[ch], self.rx_node_of(ch), timeout_ns, || {
+            self.pkt_recv(ch, out)
+        })
+    }
+
+    /// Blocking packet send under an absolute `deadline_ns` (same clock
+    /// as [`crate::lockfree::mem::World::now_ns`]): retries the
+    /// spin→yield→park progression in exponentially growing backoff
+    /// slices ([`RetryBackoff`]) until the packet lands, a terminal
+    /// verdict surfaces (`EndpointDead`, `NodeFenced`, teardown), or the
+    /// deadline expires with `Status::Timeout` — the caller degrades
+    /// gracefully instead of blocking forever on a dying peer.
+    pub fn pkt_send_deadline(&self, ch: usize, data: &[u8], deadline_ns: u64) -> Result<(), Status> {
+        self.connected_ch(ch)?;
+        let node = self.tx_node_of(ch);
+        let mut bo = RetryBackoff::new();
+        loop {
+            let remaining = deadline_ns.saturating_sub(W::now_ns());
+            let Some(slice) = bo.next_slice(remaining) else {
+                return Err(Status::Timeout);
+            };
+            match self.blocking_drive(&self.chan_waits[ch], node, slice, || {
+                self.pkt_send(ch, data)
+            }) {
+                Err(Status::Timeout) => continue,
+                other => return other,
+            }
+        }
+    }
+
+    /// Blocking packet receive under an absolute deadline with backoff
+    /// slicing (see [`Self::pkt_send_deadline`]). On success returns the
+    /// byte count copied into `out`.
+    pub fn pkt_recv_deadline(
+        &self,
+        ch: usize,
+        out: &mut [u8],
+        deadline_ns: u64,
+    ) -> Result<usize, Status> {
+        self.connected_ch(ch)?;
+        let node = self.rx_node_of(ch);
+        let mut bo = RetryBackoff::new();
+        loop {
+            let remaining = deadline_ns.saturating_sub(W::now_ns());
+            let Some(slice) = bo.next_slice(remaining) else {
+                return Err(Status::Timeout);
+            };
+            match self.blocking_drive(&self.chan_waits[ch], node, slice, || self.pkt_recv(ch, out))
+            {
+                Err(Status::Timeout) => continue,
+                other => return other,
+            }
+        }
     }
 
     // -- doorbell polling ------------------------------------------------------

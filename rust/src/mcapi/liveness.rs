@@ -1,0 +1,494 @@
+//! Automatic liveness plane: heartbeat registry + watchdog hysteresis.
+//!
+//! Every recovery path in this runtime funnels into
+//! [`crate::mcapi::McapiRuntime::declare_node_dead`], but before this
+//! module that call was always *explicit* — a hung peer on the real
+//! plane stalled its partners until a human intervened. The liveness
+//! plane closes the loop:
+//!
+//! * [`Heartbeats`] — one cache-padded progress epoch per node, bumped
+//!   from the hot-path instrumentation points (send/recv entry, park /
+//!   unpark transitions). Bumps are **host atomics only** — like the
+//!   obs counters they are unpriced on the sim plane, so every pinned
+//!   sim-cost gate stays byte-identical whether the watchdog is armed
+//!   or not.
+//! * [`Watchdog`] — a driver-owned scanner that compares each node's
+//!   beat against a configurable silence deadline with hysteresis: a
+//!   silent node becomes *suspect*, and only after
+//!   [`LivenessCfg::confirm_scans`] consecutive over-deadline scans is
+//!   it *confirmed* (at which point the runtime feeds it to
+//!   `declare_node_dead`). A node parked in a futex wait is
+//!   legitimately idle — the registry's park counter keeps it from ever
+//!   being suspected — and a beat that moves clears suspicion (counted
+//!   as a *false suspect*, the tuning signal for
+//!   [`LivenessCfg::deadline_ns`]).
+//! * [`RetryBackoff`] — the timeout-slicing helper behind the
+//!   `*_deadline` send/recv variants: short first slice (fast failure
+//!   detection while the peer is probably alive), doubling up to a cap
+//!   so a dying peer costs bounded wakeups instead of a spin.
+//!
+//! The watchdog itself holds no references into the runtime: `scan`
+//! takes the clock, the registry and an `alive` predicate, so the
+//! hysteresis state machine is directly unit-testable over a synthetic
+//! deadline × stall-length grid (see the tests below and
+//! `tests/liveness_properties.rs`).
+
+use crate::lockfree::mem::CachePadded;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Liveness tuning knobs, carried on
+/// [`crate::mcapi::types::RuntimeCfg`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LivenessCfg {
+    /// Silence (no heartbeat progress, not parked) before a node
+    /// becomes suspect, in [`crate::lockfree::World::timestamp_peek`]
+    /// nanoseconds — wall-clock on the real plane, virtual on the sim.
+    pub deadline_ns: u64,
+    /// Consecutive over-deadline scans before a suspect is confirmed
+    /// dead and handed to `declare_node_dead`. Hysteresis: one slow
+    /// scan (scheduler hiccup on the scanning thread itself) never
+    /// kills a node.
+    pub confirm_scans: u32,
+}
+
+impl Default for LivenessCfg {
+    fn default() -> Self {
+        // Real-plane default: 50 ms of silence, confirmed over 3 scans.
+        // Generous against scheduler preemption (a healthy peer beats
+        // every retry slice, ~1 ms); harnesses override both knobs.
+        LivenessCfg { deadline_ns: 50_000_000, confirm_scans: 3 }
+    }
+}
+
+/// One node's liveness lane: a progress epoch plus a parked-waiter
+/// count, padded so producer-heavy and consumer-heavy nodes never
+/// false-share while beating from their hot paths.
+#[derive(Debug, Default)]
+struct NodeBeat {
+    /// Monotonic progress epoch; 0 = never participated.
+    beat: AtomicU64,
+    /// Waiters currently parked in a futex wait (blocking_drive).
+    parked: AtomicU32,
+}
+
+/// Per-node heartbeat registry. All operations are raw host atomics
+/// (never `W::U32`/`W::U64`), bounds-checked to be inert for
+/// out-of-range nodes, and relaxed — the watchdog only needs eventual
+/// visibility of *progress*, not ordering against the payload.
+#[derive(Debug)]
+pub struct Heartbeats {
+    nodes: Vec<CachePadded<NodeBeat>>,
+}
+
+impl Heartbeats {
+    /// Registry for `max_nodes` nodes, all at beat 0 (never seen).
+    pub fn new(max_nodes: usize) -> Self {
+        let mut nodes = Vec::with_capacity(max_nodes);
+        for _ in 0..max_nodes {
+            nodes.push(CachePadded::new(NodeBeat::default()));
+        }
+        Heartbeats { nodes }
+    }
+
+    /// Nodes tracked.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the registry tracks no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Record progress for `node`. Inert out of range (callers pass
+    /// `usize::MAX` when the owning node is unknown, e.g. a channel
+    /// slot that was never connected).
+    #[inline]
+    pub fn bump(&self, node: usize) {
+        if let Some(n) = self.nodes.get(node) {
+            n.beat.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark `node` as entering a futex park: a parked waiter is idle by
+    /// design and must never be suspected.
+    #[inline]
+    pub fn park(&self, node: usize) {
+        if let Some(n) = self.nodes.get(node) {
+            n.parked.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark `node` as leaving a futex park; the wake itself is
+    /// progress, so the beat advances too.
+    #[inline]
+    pub fn unpark(&self, node: usize) {
+        if let Some(n) = self.nodes.get(node) {
+            n.parked.fetch_sub(1, Ordering::Relaxed);
+            n.beat.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current beat (0 = never participated / out of range).
+    #[inline]
+    pub fn beat_peek(&self, node: usize) -> u64 {
+        self.nodes.get(node).map_or(0, |n| n.beat.load(Ordering::Relaxed))
+    }
+
+    /// Currently parked waiters for `node` (0 out of range).
+    #[inline]
+    pub fn parked_peek(&self, node: usize) -> u32 {
+        self.nodes.get(node).map_or(0, |n| n.parked.load(Ordering::Relaxed))
+    }
+}
+
+/// Per-node scanner state. `seen` gates the whole lane: a node that
+/// never beat is not participating and is never suspected (so an
+/// allocated-but-idle node, like a harness's endpoint-only node, can
+/// sit silent forever).
+#[derive(Debug, Clone, Copy, Default)]
+struct Lane {
+    seen: bool,
+    last_beat: u64,
+    last_change_ns: u64,
+    suspect_scans: u32,
+}
+
+/// What one [`Watchdog::scan`] observed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ScanReport {
+    /// Nodes over the silence deadline this scan (includes the
+    /// confirmed ones — a confirm is the last suspect scan).
+    pub suspects: Vec<usize>,
+    /// Nodes whose suspicion reached `confirm_scans`: declare these.
+    pub confirmed: Vec<usize>,
+    /// Previously suspected nodes that made progress again — false
+    /// suspects, the deadline-tuning signal.
+    pub cleared: Vec<usize>,
+}
+
+impl ScanReport {
+    /// True when the scan found nothing actionable.
+    pub fn is_quiet(&self) -> bool {
+        self.suspects.is_empty() && self.confirmed.is_empty() && self.cleared.is_empty()
+    }
+}
+
+/// The hysteresis state machine. Owned by whoever drives the scan loop
+/// (a harness watchdog task on the sim plane, a watchdog thread on the
+/// real plane) — the shared runtime only carries the passive
+/// [`Heartbeats`] registry.
+#[derive(Debug)]
+pub struct Watchdog {
+    cfg: LivenessCfg,
+    lanes: Vec<Lane>,
+}
+
+impl Watchdog {
+    /// New scanner for up to `max_nodes` nodes.
+    pub fn new(cfg: LivenessCfg, max_nodes: usize) -> Self {
+        Watchdog { cfg, lanes: vec![Lane::default(); max_nodes] }
+    }
+
+    /// The configuration this scanner enforces.
+    pub fn cfg(&self) -> LivenessCfg {
+        self.cfg
+    }
+
+    /// One scan pass at clock `now_ns` over registry `hb`. `alive`
+    /// reports the node-epoch view (false = already declared dead):
+    /// dead nodes are skipped and their lanes reset, so a node that
+    /// `rejoin`s starts from a fresh baseline.
+    ///
+    /// Suspicion rules, in order, per node:
+    /// 1. dead → reset lane, skip;
+    /// 2. never beat → skip (not participating);
+    /// 3. first sight of a beat → baseline, never suspect on sight;
+    /// 4. beat moved → progress; clears any standing suspicion
+    ///    (reported in [`ScanReport::cleared`]);
+    /// 5. parked waiter(s) → legitimately idle; suspicion resets
+    ///    silently and the silence clock restarts;
+    /// 6. silent past `deadline_ns` → suspect; confirm after
+    ///    `confirm_scans` consecutive suspect scans.
+    pub fn scan(
+        &mut self,
+        now_ns: u64,
+        hb: &Heartbeats,
+        alive: impl Fn(usize) -> bool,
+    ) -> ScanReport {
+        let mut report = ScanReport::default();
+        for node in 0..self.lanes.len().min(hb.len()) {
+            let lane = &mut self.lanes[node];
+            if !alive(node) {
+                *lane = Lane::default();
+                continue;
+            }
+            let beat = hb.beat_peek(node);
+            if !lane.seen {
+                if beat == 0 {
+                    continue;
+                }
+                *lane = Lane { seen: true, last_beat: beat, last_change_ns: now_ns, suspect_scans: 0 };
+                continue;
+            }
+            if beat != lane.last_beat {
+                if lane.suspect_scans > 0 {
+                    report.cleared.push(node);
+                }
+                lane.last_beat = beat;
+                lane.last_change_ns = now_ns;
+                lane.suspect_scans = 0;
+                continue;
+            }
+            if hb.parked_peek(node) > 0 {
+                lane.last_change_ns = now_ns;
+                lane.suspect_scans = 0;
+                continue;
+            }
+            if now_ns.saturating_sub(lane.last_change_ns) >= self.cfg.deadline_ns {
+                lane.suspect_scans += 1;
+                report.suspects.push(node);
+                if lane.suspect_scans >= self.cfg.confirm_scans {
+                    report.confirmed.push(node);
+                    // Fresh lane: if the zombie rejoins and beats
+                    // again, it re-baselines instead of instantly
+                    // re-confirming.
+                    *lane = Lane::default();
+                }
+            }
+        }
+        report
+    }
+}
+
+/// Timeout slicing for the `*_deadline` send/recv variants: first slice
+/// short (a live peer usually answers fast), doubling up to `max_ns` so
+/// waiting on a dying peer costs O(log) wakeups, never a spin.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryBackoff {
+    next_ns: u64,
+    max_ns: u64,
+}
+
+impl RetryBackoff {
+    /// Default slicing: 100 µs first slice, 5 ms cap.
+    pub fn new() -> Self {
+        RetryBackoff::with_bounds(100_000, 5_000_000)
+    }
+
+    /// Custom first-slice / cap bounds (both clamped to ≥ 1 ns).
+    pub fn with_bounds(first_ns: u64, max_ns: u64) -> Self {
+        let max_ns = max_ns.max(1);
+        RetryBackoff { next_ns: first_ns.clamp(1, max_ns), max_ns }
+    }
+
+    /// Next timeout slice, capped at `remaining_ns` of the caller's
+    /// deadline budget. Returns `None` once the budget is exhausted.
+    pub fn next_slice(&mut self, remaining_ns: u64) -> Option<u64> {
+        if remaining_ns == 0 {
+            return None;
+        }
+        let slice = self.next_ns.min(remaining_ns);
+        self.next_ns = (self.next_ns.saturating_mul(2)).min(self.max_ns);
+        Some(slice)
+    }
+}
+
+impl Default for RetryBackoff {
+    fn default() -> Self {
+        RetryBackoff::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_bump_park_roundtrip_and_out_of_range_inert() {
+        let hb = Heartbeats::new(2);
+        assert_eq!(hb.len(), 2);
+        assert!(!hb.is_empty());
+        assert_eq!(hb.beat_peek(0), 0);
+        hb.bump(0);
+        hb.bump(0);
+        assert_eq!(hb.beat_peek(0), 2);
+        hb.park(1);
+        assert_eq!(hb.parked_peek(1), 1);
+        hb.unpark(1);
+        assert_eq!(hb.parked_peek(1), 0);
+        assert_eq!(hb.beat_peek(1), 1, "unpark is progress");
+        // Out of range: inert, never panics.
+        hb.bump(7);
+        hb.park(usize::MAX);
+        hb.unpark(usize::MAX);
+        assert_eq!(hb.beat_peek(7), 0);
+        assert_eq!(hb.parked_peek(7), 0);
+    }
+
+    #[test]
+    fn never_beaten_node_is_never_suspected() {
+        let hb = Heartbeats::new(2);
+        let mut wd = Watchdog::new(LivenessCfg { deadline_ns: 100, confirm_scans: 1 }, 2);
+        for t in 0..50u64 {
+            let r = wd.scan(t * 1_000, &hb, |_| true);
+            assert!(r.is_quiet(), "idle node suspected at scan {t}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn silence_confirms_after_exactly_confirm_scans() {
+        let hb = Heartbeats::new(1);
+        let cfg = LivenessCfg { deadline_ns: 1_000, confirm_scans: 3 };
+        let mut wd = Watchdog::new(cfg, 1);
+        hb.bump(0);
+        assert!(wd.scan(0, &hb, |_| true).is_quiet(), "baseline scan");
+        // Scans at 2000/3000: over deadline, suspect but not confirmed.
+        let r1 = wd.scan(2_000, &hb, |_| true);
+        assert_eq!(r1.suspects, vec![0]);
+        assert!(r1.confirmed.is_empty());
+        let r2 = wd.scan(3_000, &hb, |_| true);
+        assert_eq!(r2.suspects, vec![0]);
+        assert!(r2.confirmed.is_empty());
+        let r3 = wd.scan(4_000, &hb, |_| true);
+        assert_eq!(r3.confirmed, vec![0], "third suspect scan confirms");
+    }
+
+    #[test]
+    fn progress_clears_standing_suspicion_as_false_suspect() {
+        let hb = Heartbeats::new(1);
+        let cfg = LivenessCfg { deadline_ns: 1_000, confirm_scans: 3 };
+        let mut wd = Watchdog::new(cfg, 1);
+        hb.bump(0);
+        wd.scan(0, &hb, |_| true);
+        assert_eq!(wd.scan(2_000, &hb, |_| true).suspects, vec![0]);
+        hb.bump(0); // the stalled node resumes
+        let r = wd.scan(3_000, &hb, |_| true);
+        assert_eq!(r.cleared, vec![0], "resumed node must be cleared");
+        assert!(r.suspects.is_empty() && r.confirmed.is_empty());
+        // And the silence clock restarted: no immediate re-suspicion.
+        assert!(wd.scan(3_500, &hb, |_| true).is_quiet());
+    }
+
+    #[test]
+    fn parked_waiter_is_never_suspected() {
+        let hb = Heartbeats::new(1);
+        let cfg = LivenessCfg { deadline_ns: 1_000, confirm_scans: 1 };
+        let mut wd = Watchdog::new(cfg, 1);
+        hb.bump(0);
+        wd.scan(0, &hb, |_| true);
+        hb.park(0);
+        for t in 1..100u64 {
+            let r = wd.scan(t * 10_000, &hb, |_| true);
+            assert!(r.is_quiet(), "parked node suspected at {t}: {r:?}");
+        }
+        hb.unpark(0);
+        // The unpark beat is progress; still quiet.
+        assert!(wd.scan(1_000_000, &hb, |_| true).is_quiet());
+    }
+
+    #[test]
+    fn dead_node_lane_resets_and_rejoin_rebaselines() {
+        let hb = Heartbeats::new(1);
+        let cfg = LivenessCfg { deadline_ns: 1_000, confirm_scans: 1 };
+        let mut wd = Watchdog::new(cfg, 1);
+        hb.bump(0);
+        wd.scan(0, &hb, |_| true);
+        assert_eq!(wd.scan(2_000, &hb, |_| true).confirmed, vec![0]);
+        // Declared dead: skipped while the epoch is odd.
+        assert!(wd.scan(10_000, &hb, |_| false).is_quiet());
+        // Rejoined (alive again) and beating: re-baselines, no instant
+        // re-confirm even though the wall clock jumped.
+        hb.bump(0);
+        assert!(wd.scan(1_000_000, &hb, |_| true).is_quiet());
+        assert!(wd.scan(1_000_500, &hb, |_| true).is_quiet());
+    }
+
+    /// The hysteresis contract over a deadline × stall-length grid:
+    /// with scans every `i` ns, a node that beats, stalls for `s` ns
+    /// and resumes is (a) never even suspected when `s < deadline`, and
+    /// (b) confirmed exactly once when the stall comfortably exceeds
+    /// the confirm horizon `deadline + confirm_scans · i`.
+    #[test]
+    fn hysteresis_grid_no_false_positives_short_of_deadline() {
+        const INTERVAL: u64 = 1_000;
+        for &deadline in &[3_000u64, 5_000, 8_000] {
+            for &confirm in &[1u32, 2, 3] {
+                for stall_steps in 0..16u64 {
+                    let stall = stall_steps * INTERVAL;
+                    let cfg = LivenessCfg { deadline_ns: deadline, confirm_scans: confirm };
+                    let hb = Heartbeats::new(1);
+                    let mut wd = Watchdog::new(cfg, 1);
+                    let mut confirms = 0usize;
+                    let mut suspects = 0usize;
+                    let mut cleared = 0usize;
+                    let mut now = 0u64;
+                    let mut dead = false;
+                    // Active phase: beat every scan tick.
+                    for _ in 0..10 {
+                        hb.bump(0);
+                        let r = wd.scan(now, &hb, |_| !dead);
+                        confirms += r.confirmed.len();
+                        suspects += r.suspects.len();
+                        now += INTERVAL;
+                    }
+                    // Stall phase: scans continue, no beats.
+                    let resume_at = now + stall;
+                    while now < resume_at {
+                        let r = wd.scan(now, &hb, |_| !dead);
+                        confirms += r.confirmed.len();
+                        suspects += r.suspects.len();
+                        if !r.confirmed.is_empty() {
+                            dead = true;
+                        }
+                        now += INTERVAL;
+                    }
+                    // Resume phase.
+                    for _ in 0..10 {
+                        hb.bump(0);
+                        let r = wd.scan(now, &hb, |_| !dead);
+                        confirms += r.confirmed.len();
+                        suspects += r.suspects.len();
+                        cleared += r.cleared.len();
+                        now += INTERVAL;
+                    }
+                    let ctx = format!(
+                        "deadline={deadline} confirm={confirm} stall={stall}: \
+                         suspects={suspects} confirms={confirms} cleared={cleared}"
+                    );
+                    if stall < deadline {
+                        assert_eq!(suspects, 0, "false suspicion: {ctx}");
+                        assert_eq!(confirms, 0, "false kill: {ctx}");
+                    }
+                    if stall >= deadline + (u64::from(confirm) + 1) * INTERVAL {
+                        assert_eq!(confirms, 1, "missed kill: {ctx}");
+                    }
+                    assert!(confirms <= 1, "double kill: {ctx}");
+                    if suspects > 0 && confirms == 0 {
+                        assert!(cleared > 0, "suspicion never cleared: {ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_to_cap_and_respects_budget() {
+        let mut bo = RetryBackoff::with_bounds(100, 400);
+        assert_eq!(bo.next_slice(u64::MAX), Some(100));
+        assert_eq!(bo.next_slice(u64::MAX), Some(200));
+        assert_eq!(bo.next_slice(u64::MAX), Some(400));
+        assert_eq!(bo.next_slice(u64::MAX), Some(400), "capped");
+        assert_eq!(bo.next_slice(150), Some(150), "budget-clipped");
+        assert_eq!(bo.next_slice(0), None, "exhausted budget");
+        let mut d = RetryBackoff::default();
+        assert_eq!(d.next_slice(u64::MAX), Some(100_000));
+    }
+
+    #[test]
+    fn liveness_cfg_default_is_sane() {
+        let cfg = LivenessCfg::default();
+        assert!(cfg.deadline_ns >= 1_000_000, "sub-ms default would flap");
+        assert!(cfg.confirm_scans >= 2, "no hysteresis by default");
+    }
+}

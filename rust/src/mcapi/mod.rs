@@ -24,6 +24,7 @@
 //! same code runs on real hardware and on the deterministic SMP simulator.
 
 pub mod channel;
+pub mod liveness;
 pub mod queue;
 pub mod request;
 pub mod types;
@@ -40,6 +41,7 @@ use crate::mrapi::rwlock::RwLock;
 use crate::obs;
 use crate::mrapi::shmem::{Lease, Partition};
 use channel::Doorbell;
+use liveness::{Heartbeats, RetryBackoff, ScanReport, Watchdog};
 use queue::{entry_state, ConsumerGroup, Entry, LockFreeQueue, LockedQueue};
 use request::{PendingOp, RequestHandle, RequestPool};
 use types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status, PRIORITIES};
@@ -220,6 +222,24 @@ pub struct McapiRuntime<W: World> {
     stat_timeouts: AtomicU64,
     stat_poisons: AtomicU64,
     stat_leases_reclaimed: AtomicU64,
+    /// Liveness plane: per-node heartbeat registry (host atomics,
+    /// unpriced like the obs counters) bumped from the hot-path
+    /// instrumentation points and scanned by a driver-owned
+    /// [`liveness::Watchdog`].
+    hb: Heartbeats,
+    /// Host-side shadows of each connected channel's endpoint-owner
+    /// nodes, written at `connect`. The authoritative `tx_ep`/`rx_ep`
+    /// words are priced `W::U32` loads, which the unpriced fence
+    /// checks and heartbeat bumps on the ring fast path must never
+    /// touch. `u32::MAX` = never connected.
+    chan_tx_node: Vec<AtomicU32>,
+    chan_rx_node: Vec<AtomicU32>,
+    /// Watchdog verdict counters (always-on ground truth; the obs
+    /// `liveness.*` counters mirror these only while tracing is armed).
+    stat_suspects: AtomicU64,
+    stat_confirms: AtomicU64,
+    stat_false_suspects: AtomicU64,
+    stat_fence_rejects: AtomicU64,
 }
 
 impl<W: World> McapiRuntime<W> {
@@ -303,6 +323,13 @@ impl<W: World> McapiRuntime<W> {
             stat_timeouts: AtomicU64::new(0),
             stat_poisons: AtomicU64::new(0),
             stat_leases_reclaimed: AtomicU64::new(0),
+            hb: Heartbeats::new(cfg.max_nodes),
+            chan_tx_node: (0..cfg.max_channels).map(|_| AtomicU32::new(u32::MAX)).collect(),
+            chan_rx_node: (0..cfg.max_channels).map(|_| AtomicU32::new(u32::MAX)).collect(),
+            stat_suspects: AtomicU64::new(0),
+            stat_confirms: AtomicU64::new(0),
+            stat_false_suspects: AtomicU64::new(0),
+            stat_fence_rejects: AtomicU64::new(0),
             cfg,
         })
     }
@@ -347,6 +374,35 @@ impl<W: World> McapiRuntime<W> {
     /// Pool leases reclaimed from dead nodes so far.
     pub fn leases_reclaimed(&self) -> u64 {
         self.stat_leases_reclaimed.load(Ordering::Relaxed)
+    }
+
+    /// Watchdog suspect scans recorded so far (a node over its silence
+    /// deadline; includes the scans that went on to confirm).
+    pub fn suspects_observed(&self) -> u64 {
+        self.stat_suspects.load(Ordering::Relaxed)
+    }
+
+    /// Watchdog confirmations so far (each fed one node to
+    /// [`Self::declare_node_dead`]).
+    pub fn confirms_observed(&self) -> u64 {
+        self.stat_confirms.load(Ordering::Relaxed)
+    }
+
+    /// Suspects cleared by later progress — false suspects, the signal
+    /// that [`liveness::LivenessCfg::deadline_ns`] is tuned too tight.
+    pub fn false_suspects_observed(&self) -> u64 {
+        self.stat_false_suspects.load(Ordering::Relaxed)
+    }
+
+    /// Operations rejected with `Status::NodeFenced` so far.
+    pub fn fence_rejects_observed(&self) -> u64 {
+        self.stat_fence_rejects.load(Ordering::Relaxed)
+    }
+
+    /// Current heartbeat epoch of `node` (monitoring; 0 = never
+    /// participated).
+    pub fn heartbeat_peek(&self, node: usize) -> u64 {
+        self.hb.beat_peek(node)
     }
 
     // -- node liveness (dead-peer recovery) -----------------------------------
@@ -482,6 +538,117 @@ impl<W: World> McapiRuntime<W> {
             }
         }
         (poisoned, reclaimed)
+    }
+
+    // -- automatic liveness (heartbeat watchdog, fencing, rejoin) -------------
+
+    /// A watchdog scanner configured from this runtime's
+    /// [`liveness::LivenessCfg`]. Driver-owned on purpose: the scan
+    /// loop lives on whatever task/thread polls it, and the shared
+    /// runtime only carries the passive heartbeat registry.
+    pub fn new_watchdog(&self) -> Watchdog {
+        Watchdog::new(self.cfg.liveness, self.cfg.max_nodes)
+    }
+
+    /// One watchdog pass: scan the heartbeat registry against the
+    /// configured silence deadline and feed every *confirmed* node to
+    /// [`Self::declare_node_dead`] — automatic recovery, no explicit
+    /// declaration anywhere. Every scan read is host-side/unpriced
+    /// ([`World::timestamp_peek`], heartbeat peeks, liveness epochs),
+    /// so an armed watchdog adds **zero** priced sim operations to a
+    /// healthy run; only a confirm triggers the (priced) repair
+    /// pipeline, which therefore must run on a live task in simulated
+    /// worlds. Returns the scan report after declarations.
+    pub fn watchdog_scan_once(&self, wd: &mut Watchdog) -> ScanReport {
+        let now = W::timestamp_peek();
+        let report = wd.scan(now, &self.hb, |n| self.node_alive(n));
+        if !report.suspects.is_empty() {
+            self.stat_suspects.fetch_add(report.suspects.len() as u64, Ordering::Relaxed);
+            obs::add(obs::ctr::LIVENESS_SUSPECTS, report.suspects.len() as u64);
+        }
+        if !report.cleared.is_empty() {
+            self.stat_false_suspects.fetch_add(report.cleared.len() as u64, Ordering::Relaxed);
+            obs::add(obs::ctr::LIVENESS_FALSE_SUSPECTS, report.cleared.len() as u64);
+        }
+        for &node in &report.confirmed {
+            self.stat_confirms.fetch_add(1, Ordering::Relaxed);
+            obs::bump(obs::ctr::LIVENESS_CONFIRMS);
+            self.declare_node_dead(node);
+        }
+        report
+    }
+
+    /// Re-admit a fenced (declared-dead) node: flip its liveness epoch
+    /// back to even and beat once so the watchdog re-baselines instead
+    /// of instantly re-confirming. State repaired *around* the zombie
+    /// is not resurrected — channels it owned stay poisoned until torn
+    /// down and reconnected (`close` + `connect`), which is the second
+    /// half of the rejoin handshake. Idempotent on an alive node.
+    pub fn rejoin(&self, node: usize) -> Result<(), Status> {
+        let epoch = self.liveness.get(node).ok_or(Status::InvalidEndpoint)?;
+        loop {
+            let cur = epoch.load(Ordering::SeqCst);
+            if cur & 1 == 0 {
+                break;
+            }
+            if epoch
+                .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        self.hb.bump(node);
+        Ok(())
+    }
+
+    /// `NodeFenced` when the *calling* node has been declared dead
+    /// while still running — a fenced zombie, whose sends and claims
+    /// must fail fast so it can never corrupt state repaired around
+    /// it. Host-side loads only (zero priced hot-path cost);
+    /// out-of-range callers are not fenced (they own no repairable
+    /// state, and `u32::MAX` is the "never connected" shadow value).
+    pub(crate) fn fence_check(&self, node: usize) -> Result<(), Status> {
+        match self.liveness.get(node) {
+            Some(e) if e.load(Ordering::SeqCst) & 1 == 1 => {
+                self.stat_fence_rejects.fetch_add(1, Ordering::Relaxed);
+                obs::bump(obs::ctr::LIVENESS_FENCE_REJECTS);
+                Err(Status::NodeFenced)
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Owner node of endpoint `ep` via the host shadow (`usize::MAX`
+    /// out of range — inert for the heartbeat/fence helpers).
+    #[inline]
+    fn ep_owner_node(&self, ep: usize) -> usize {
+        self.ep_owner_shadow
+            .get(ep)
+            .map_or(usize::MAX, |o| o.load(Ordering::Relaxed) as usize)
+    }
+
+    /// Producer-side node of connected channel `ch` (host shadow).
+    #[inline]
+    pub(crate) fn tx_node_of(&self, ch: usize) -> usize {
+        self.chan_tx_node
+            .get(ch)
+            .map_or(usize::MAX, |n| n.load(Ordering::Relaxed) as usize)
+    }
+
+    /// Consumer-side node of connected channel `ch` (host shadow).
+    #[inline]
+    pub(crate) fn rx_node_of(&self, ch: usize) -> usize {
+        self.chan_rx_node
+            .get(ch)
+            .map_or(usize::MAX, |n| n.load(Ordering::Relaxed) as usize)
+    }
+
+    /// Heartbeat: record hot-path progress for `node` (inert out of
+    /// range; host atomic, unpriced).
+    #[inline]
+    pub(crate) fn hb_bump(&self, node: usize) {
+        self.hb.bump(node);
     }
 
     fn charge_api(&self) {
@@ -695,6 +862,8 @@ impl<W: World> McapiRuntime<W> {
         priority: u8,
     ) -> Result<(), Status> {
         self.charge_api();
+        self.fence_check(from)?;
+        self.hb.bump(from);
         match self.cfg.backend {
             BackendKind::Locked => {
                 // The reference design locks the shared-memory database for
@@ -798,6 +967,7 @@ impl<W: World> McapiRuntime<W> {
     /// copies into `out`, returns the byte count.
     pub fn msg_recv(&self, ep: usize, out: &mut [u8]) -> Result<usize, Status> {
         self.charge_api();
+        self.hb.bump(self.ep_owner_node(ep));
         match self.cfg.backend {
             BackendKind::Locked => {
                 let entry = self.global.with_write(|| {
@@ -827,6 +997,11 @@ impl<W: World> McapiRuntime<W> {
                 if let Some(g) = slot.group.get().filter(|g| g.active()) {
                     let owner = self.ep_owner_shadow[ep].load(Ordering::Relaxed);
                     let who = ConsumerGroup::<W>::current_who().unwrap_or(owner);
+                    // MPMC claims are fenced: a zombie consumer must
+                    // not take work the repair pipeline would have to
+                    // salvage from it again.
+                    self.fence_check(who as usize)?;
+                    self.hb.bump(who as usize);
                     let entry = g.pop(who)?;
                     let n = self.consume_entry(&entry, out, who as usize);
                     // Space freed: wake senders parked on a full ring.
@@ -877,6 +1052,8 @@ impl<W: World> McapiRuntime<W> {
             }
             BackendKind::LockFree => {
                 self.charge_api();
+                self.fence_check(from)?;
+                self.hb.bump(from);
                 let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
                 self.check_dest_alive(ep)?;
                 let prio = priority % PRIORITIES as u8;
@@ -960,12 +1137,15 @@ impl<W: World> McapiRuntime<W> {
             }
             BackendKind::LockFree => {
                 self.charge_api();
+                self.hb.bump(self.ep_owner_node(ep));
                 let slot = self.active_ep(ep)?;
                 // MPMC profile: drain the group ring one claim at a
                 // time under this thread's attached identity.
                 if let Some(g) = slot.group.get().filter(|g| g.active()) {
                     let owner = self.ep_owner_shadow[ep].load(Ordering::Relaxed);
                     let who = ConsumerGroup::<W>::current_who().unwrap_or(owner);
+                    self.fence_check(who as usize)?;
+                    self.hb.bump(who as usize);
                     let mut buf = vec![0u8; self.cfg.buf_len];
                     let mut got = 0;
                     while got < max {
@@ -1044,6 +1224,13 @@ impl<W: World> McapiRuntime<W> {
             });
             slot.tx_ep.store(tx_i as u32);
             slot.rx_ep.store(rx_i as u32);
+            // Host shadows of the owner nodes for the liveness plane:
+            // the ring fast path's fence checks and heartbeat bumps
+            // must not pay the priced `tx_ep`/`rx_ep` loads.
+            self.chan_tx_node[ch]
+                .store(self.ep_owner_shadow[tx_i].load(Ordering::Relaxed), Ordering::Relaxed);
+            self.chan_rx_node[ch]
+                .store(self.ep_owner_shadow[rx_i].load(Ordering::Relaxed), Ordering::Relaxed);
             slot.tx_open.store(0);
             slot.rx_open.store(0);
             // Fast-path hygiene: a reused channel slot's ring may hold
@@ -1139,6 +1326,8 @@ impl<W: World> McapiRuntime<W> {
             BackendKind::Locked => {
                 let (tx_i, rx_i) =
                     self.global.with_read(|| self.channel_ready(ch, ChannelKind::Packet))?;
+                self.fence_check(self.tx_node_of(ch))?;
+                self.hb.bump(self.tx_node_of(ch));
                 if self.chan_poison[ch].load(Ordering::Relaxed) & POISON_RX_DEAD != 0 {
                     self.stat_poisons.fetch_add(1, Ordering::Relaxed);
                     obs::bump(obs::ctr::POISONS);
@@ -1181,6 +1370,7 @@ impl<W: World> McapiRuntime<W> {
         self.charge_api();
         match self.cfg.backend {
             BackendKind::Locked => {
+                self.hb.bump(self.rx_node_of(ch));
                 let popped = self.global.with_write(|| {
                     let (_, rx_i) = self.channel_ready(ch, ChannelKind::Packet)?;
                     let QueueImpl::Locked(q) = &self.endpoints[rx_i].queue else {
@@ -1307,12 +1497,18 @@ impl<W: World> McapiRuntime<W> {
     /// surfaces immediately. Waiters are guaranteed to wake for a
     /// message, a poison flag, channel teardown, or the deadline —
     /// whichever comes first.
+    /// `node` identifies the caller for the liveness plane: the beat
+    /// advances on entry and around every park/unpark transition, and
+    /// the registry's parked count keeps the watchdog from suspecting
+    /// a legitimately idle waiter (`usize::MAX` = anonymous, inert).
     fn blocking_drive<T>(
         &self,
         cell: &WaitCell,
+        node: usize,
         timeout_ns: u64,
         mut attempt: impl FnMut() -> Result<T, Status>,
     ) -> Result<T, Status> {
+        self.hb.bump(node);
         let deadline = W::now_ns().saturating_add(timeout_ns);
         let mut bo = Backoff::<W>::new();
         loop {
@@ -1347,7 +1543,9 @@ impl<W: World> McapiRuntime<W> {
                                 obs::emit::<W>(obs::EventKind::BlockPark, tch, seen, bo.yields());
                                 obs::bump(obs::ctr::BLOCK_PARKS);
                             }
+                            self.hb.park(node);
                             cell.wait::<W>(seen, Some(deadline));
+                            self.hb.unpark(node);
                             if obs::tracing() {
                                 let tch = cell.trace_ch.load(Ordering::Relaxed);
                                 obs::emit::<W>(obs::EventKind::BlockUnpark, tch, seen, 0);
@@ -1383,7 +1581,7 @@ impl<W: World> McapiRuntime<W> {
             self.requests.complete(h, Status::InvalidEndpoint);
             return self.requests.reap(h).unwrap_or(Status::InvalidRequest);
         };
-        let drive = self.blocking_drive(&self.ep_waits[ep], timeout_ns, || {
+        let drive = self.blocking_drive(&self.ep_waits[ep], from, timeout_ns, || {
             self.msg_send(from, to, data, priority)
         });
         match drive {
@@ -1411,8 +1609,9 @@ impl<W: World> McapiRuntime<W> {
         let PendingOp::MsgRecv { ep } = self.requests.slot(h).op() else {
             return Err(Status::InvalidRequest);
         };
-        let drive =
-            self.blocking_drive(&self.ep_waits[ep], timeout_ns, || self.msg_recv(ep, out));
+        let drive = self.blocking_drive(&self.ep_waits[ep], self.ep_owner_node(ep), timeout_ns, || {
+            self.msg_recv(ep, out)
+        });
         match drive {
             Ok(n) => {
                 self.requests.complete(h, Status::Success);
@@ -1425,6 +1624,65 @@ impl<W: World> McapiRuntime<W> {
                 self.requests.complete(h, s);
                 let _ = self.requests.reap(h);
                 Err(s)
+            }
+        }
+    }
+
+    // -- deadline / backoff senders -------------------------------------------
+
+    /// Blocking connection-less send under an **absolute** deadline (in
+    /// [`World::now_ns`] time) with retry-with-backoff slicing: each
+    /// retry runs the spin → yield → futex progression for at most one
+    /// [`RetryBackoff`] slice, so waiting on a dying peer costs a few
+    /// bounded wakeups (and each slice boundary re-checks fencing and
+    /// poison) instead of one long park. `Status::Timeout` once the
+    /// deadline passes; callers degrade gracefully instead of blocking
+    /// forever on a peer the watchdog has not yet confirmed dead.
+    pub fn msg_send_deadline(
+        &self,
+        from: usize,
+        to: EndpointId,
+        data: &[u8],
+        priority: u8,
+        deadline_ns: u64,
+    ) -> Result<(), Status> {
+        let ep = self.lookup(to).ok_or(Status::InvalidEndpoint)?;
+        let mut bo = RetryBackoff::new();
+        loop {
+            let remaining = deadline_ns.saturating_sub(W::now_ns());
+            let Some(slice) = bo.next_slice(remaining) else {
+                // The expiring slice already counted itself.
+                return Err(Status::Timeout);
+            };
+            match self.blocking_drive(&self.ep_waits[ep], from, slice, || {
+                self.msg_send(from, to, data, priority)
+            }) {
+                Err(Status::Timeout) => continue,
+                other => return other,
+            }
+        }
+    }
+
+    /// Blocking connection-less receive under an absolute deadline with
+    /// backoff slicing (see [`Self::msg_send_deadline`]). On success
+    /// returns the byte count.
+    pub fn msg_recv_deadline(
+        &self,
+        ep: usize,
+        out: &mut [u8],
+        deadline_ns: u64,
+    ) -> Result<usize, Status> {
+        let cell = self.ep_waits.get(ep).ok_or(Status::InvalidEndpoint)?;
+        let node = self.ep_owner_node(ep);
+        let mut bo = RetryBackoff::new();
+        loop {
+            let remaining = deadline_ns.saturating_sub(W::now_ns());
+            let Some(slice) = bo.next_slice(remaining) else {
+                return Err(Status::Timeout);
+            };
+            match self.blocking_drive(cell, node, slice, || self.msg_recv(ep, out)) {
+                Err(Status::Timeout) => continue,
+                other => return other,
             }
         }
     }
@@ -1874,7 +2132,10 @@ mod tests {
             let n = rt.pkt_recv(ch, &mut buf).unwrap();
             assert_eq!(&buf[..n], b"two");
             assert_eq!(rt.pkt_recv(ch, &mut buf).unwrap_err(), Status::EndpointDead);
-            // Teardown + reconnect resets the poison.
+            // The declared node is fenced: its sends fail fast even on a
+            // fresh channel until it rejoins (zombie isolation).
+            rt.rejoin(1).unwrap();
+            // Rejoin + teardown + reconnect resets the poison.
             rt.close(ch).unwrap();
             let ch2 = rt.connect(a, b, ChannelKind::Packet).unwrap();
             rt.open_send(ch2).unwrap();
@@ -2106,5 +2367,125 @@ mod tests {
         let expect: Vec<u64> = (0..total).collect();
         assert_eq!(all, expect, "lost or duplicated messages");
         assert_eq!(rt.buffers_available(), rt.cfg().pool_buffers, "no leaked leases");
+    }
+
+    // -- automatic liveness ---------------------------------------------------
+
+    #[test]
+    fn fenced_zombie_send_rejected_until_rejoin() {
+        for rt in both() {
+            let (a, b, ch) = packet_pair(&rt, 41);
+            rt.pkt_send(ch, b"pre").unwrap();
+            // Node 1 is declared dead while its thread is still running:
+            // a fenced zombie.
+            rt.declare_node_dead(1);
+            assert_eq!(rt.pkt_send(ch, b"zombie").unwrap_err(), Status::NodeFenced);
+            assert_eq!(rt.msg_send(1, b, b"zombie", 0).unwrap_err(), Status::NodeFenced);
+            assert!(rt.fence_rejects_observed() >= 2);
+            // The committed payload still drains on the live side.
+            let mut buf = [0u8; 8];
+            let n = rt.pkt_recv(ch, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"pre");
+            // Rejoin (fresh epoch) + reconnect restores service.
+            rt.rejoin(1).unwrap();
+            assert!(rt.node_alive(1));
+            rt.close(ch).unwrap();
+            let ch2 = rt.connect(a, b, ChannelKind::Packet).unwrap();
+            rt.open_send(ch2).unwrap();
+            rt.open_recv(ch2).unwrap();
+            rt.pkt_send(ch2, b"back").unwrap();
+            let n = rt.pkt_recv(ch2, &mut buf).unwrap();
+            assert_eq!(&buf[..n], b"back");
+            // Rejoin is idempotent and rejects out-of-range nodes.
+            rt.rejoin(1).unwrap();
+            assert_eq!(rt.liveness_epoch(1), 2);
+            assert_eq!(rt.rejoin(usize::MAX).unwrap_err(), Status::InvalidEndpoint);
+        }
+    }
+
+    #[test]
+    fn watchdog_confirms_silent_node_and_spares_active_peer() {
+        let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+            backend: BackendKind::LockFree,
+            liveness: liveness::LivenessCfg { deadline_ns: 1_000_000, confirm_scans: 2 },
+            ..Default::default()
+        });
+        let dst = EndpointId::new(0, 2, 42);
+        let ep = rt.create_endpoint(dst, 2).unwrap();
+        rt.msg_send(1, dst, b"x", 0).unwrap();
+        let mut buf = [0u8; 8];
+        rt.msg_recv(ep, &mut buf).unwrap(); // node 2 beats once, then goes silent
+        assert!(rt.heartbeat_peek(2) > 0);
+        let mut wd = rt.new_watchdog();
+        assert!(rt.watchdog_scan_once(&mut wd).is_quiet(), "baseline scan");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        rt.msg_send(1, dst, b"y", 0).unwrap(); // node 1 keeps beating
+        let r1 = rt.watchdog_scan_once(&mut wd);
+        assert_eq!(r1.suspects, vec![2]);
+        assert!(r1.confirmed.is_empty(), "hysteresis: one scan never kills");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        rt.msg_send(1, dst, b"z", 0).unwrap();
+        let r2 = rt.watchdog_scan_once(&mut wd);
+        assert_eq!(r2.confirmed, vec![2], "second over-deadline scan confirms");
+        assert!(!rt.node_alive(2), "confirm ran declare_node_dead automatically");
+        assert!(rt.node_alive(1), "the beating peer is never declared");
+        assert!(rt.confirms_observed() == 1 && rt.suspects_observed() >= 2);
+        // The dead destination now poisons senders.
+        assert_eq!(rt.msg_send(1, dst, b"w", 0).unwrap_err(), Status::EndpointDead);
+    }
+
+    #[test]
+    fn watchdog_never_confirms_a_parked_receiver() {
+        let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+            backend: BackendKind::LockFree,
+            liveness: liveness::LivenessCfg { deadline_ns: 25_000_000, confirm_scans: 2 },
+            ..Default::default()
+        });
+        let (_, _, ch) = packet_pair(&rt, 43);
+        let receiver = {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 16];
+                rt.chan_recv_wait(ch, &mut buf, 2_000_000_000).map(|n| buf[..n].to_vec())
+            })
+        };
+        let mut wd = rt.new_watchdog();
+        for _ in 0..20 {
+            rt.watchdog_scan_once(&mut wd);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(rt.confirms_observed(), 0, "idle-but-parked waiter declared dead");
+        assert!(rt.node_alive(2));
+        rt.pkt_send(ch, b"done").unwrap();
+        assert_eq!(receiver.join().unwrap().unwrap(), b"done".to_vec());
+    }
+
+    #[test]
+    fn deadline_senders_surface_timeout_and_complete_with_data() {
+        let rt = rt(BackendKind::LockFree);
+        let dst = EndpointId::new(0, 2, 44);
+        let ep = rt.create_endpoint(dst, 2).unwrap();
+        let mut buf = [0u8; 8];
+        // Empty endpoint: the receive deadline expires with Timeout.
+        let deadline = RealWorld::now_ns() + 3_000_000;
+        assert_eq!(rt.msg_recv_deadline(ep, &mut buf, deadline).unwrap_err(), Status::Timeout);
+        assert!(RealWorld::now_ns() >= deadline, "returned before the deadline");
+        assert!(rt.timeouts_observed() > 0);
+        // With data both deadline variants complete well inside budget.
+        let deadline = RealWorld::now_ns() + 500_000_000;
+        rt.msg_send_deadline(1, dst, b"hi", 0, deadline).unwrap();
+        assert_eq!(rt.msg_recv_deadline(ep, &mut buf, deadline).unwrap(), 2);
+        assert_eq!(&buf[..2], b"hi");
+        // Non-retryable verdicts pass straight through the slicing.
+        rt.declare_node_dead(2);
+        assert_eq!(
+            rt.msg_send_deadline(1, dst, b"x", 0, RealWorld::now_ns() + 500_000_000)
+                .unwrap_err(),
+            Status::EndpointDead
+        );
+        assert_eq!(
+            rt.msg_recv_deadline(usize::MAX, &mut buf, deadline).unwrap_err(),
+            Status::InvalidEndpoint
+        );
     }
 }

@@ -1,5 +1,7 @@
 //! MCAPI identifiers, status codes and configuration.
 
+use super::liveness::LivenessCfg;
+
 /// Maximum message priority lanes (MCAPI priorities 0 = highest .. 3).
 pub const PRIORITIES: usize = 4;
 
@@ -41,6 +43,14 @@ pub enum Status {
     /// messages have been drained: a consumer sees every payload its
     /// dead producer finished publishing before this poison appears.
     EndpointDead,
+    /// The *calling* node has been declared dead — it is a fenced
+    /// zombie: the watchdog (or an operator) flipped its liveness
+    /// epoch while it was merely stalled, and its channels have been
+    /// repaired around it. Sends and claims from a fenced node fail
+    /// fast with this code so a wrongly-declared node can never
+    /// corrupt repaired state; service resumes only through
+    /// `McapiRuntime::rejoin` plus channel reconnect.
+    NodeFenced,
 }
 
 impl Status {
@@ -108,6 +118,9 @@ pub struct RuntimeCfg {
     pub nbb_capacity: usize,
     /// CPU overhead charged per API call in simulated worlds (ns).
     pub api_overhead_ns: u64,
+    /// Liveness plane tuning (heartbeat silence deadline, confirm
+    /// hysteresis) for the watchdog scanner.
+    pub liveness: LivenessCfg,
 }
 
 impl Default for RuntimeCfg {
@@ -122,6 +135,7 @@ impl Default for RuntimeCfg {
             buf_len: 256,
             nbb_capacity: 16,
             api_overhead_ns: 150,
+            liveness: LivenessCfg::default(),
         }
     }
 }
@@ -179,6 +193,7 @@ mod tests {
         assert!(Status::WouldBlockPeerActive.is_would_block());
         assert!(!Status::Success.is_would_block());
         assert!(!Status::MemLimit.is_would_block());
+        assert!(!Status::NodeFenced.is_would_block(), "fencing is terminal, not a retry");
     }
 
     #[test]
@@ -193,5 +208,6 @@ mod tests {
         let c = RuntimeCfg::default();
         assert!(c.max_endpoints > 0 && c.pool_buffers > 0 && c.nbb_capacity > 0);
         assert!(c.buf_len >= 64, "must fit the paper's 24-byte messages");
+        assert!(c.liveness.deadline_ns > 0 && c.liveness.confirm_scans > 0);
     }
 }

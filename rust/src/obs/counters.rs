@@ -56,9 +56,17 @@ pub mod ctr {
     pub const MPMC_CONSUME: usize = 16;
     /// MPMC wedged-claim repairs (tombstones + salvages).
     pub const MPMC_REPAIRS: usize = 17;
+    /// Watchdog suspect scans (a node over its silence deadline).
+    pub const LIVENESS_SUSPECTS: usize = 18;
+    /// Watchdog confirmations (each ran `declare_node_dead`).
+    pub const LIVENESS_CONFIRMS: usize = 19;
+    /// Suspects cleared by later progress (deadline tuned too tight).
+    pub const LIVENESS_FALSE_SUSPECTS: usize = 20;
+    /// Operations rejected with `Status::NodeFenced`.
+    pub const LIVENESS_FENCE_REJECTS: usize = 21;
 
     /// `(id, name)` for every builtin, in registration order.
-    pub const BUILTIN: [(usize, &str); 18] = [
+    pub const BUILTIN: [(usize, &str); 22] = [
         (NBB_INSERT, "nbb.insert"),
         (NBB_READ, "nbb.read"),
         (NBB_FULL, "nbb.full"),
@@ -77,6 +85,10 @@ pub mod ctr {
         (MPMC_PUBLISH, "mpmc.publish"),
         (MPMC_CONSUME, "mpmc.consume"),
         (MPMC_REPAIRS, "mpmc.repairs"),
+        (LIVENESS_SUSPECTS, "liveness.suspects"),
+        (LIVENESS_CONFIRMS, "liveness.confirms"),
+        (LIVENESS_FALSE_SUSPECTS, "liveness.false_suspects"),
+        (LIVENESS_FENCE_REJECTS, "liveness.fence_rejects"),
     ];
 }
 

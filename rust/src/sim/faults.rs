@@ -162,6 +162,15 @@ pub fn sweep_stall_points(window: OpWindow, ns: u64) -> impl Iterator<Item = (u6
     (window.start..window.end).map(move |k| (k, FaultPlan::new().stall(window.task, k, ns)))
 }
 
+/// Enumerate a delay plan (stall + deschedule, `ns` virtual ns) for
+/// every priced-op index inside `window` — the scheduling-delay analog
+/// of [`sweep_stall_points`]: the victim loses the CPU *and* the clock,
+/// which is exactly the window a liveness watchdog is most tempted to
+/// misread as death.
+pub fn sweep_delay_points(window: OpWindow, ns: u64) -> impl Iterator<Item = (u64, FaultPlan)> {
+    (window.start..window.end).map(move |k| (k, FaultPlan::new().delay(window.task, k, ns)))
+}
+
 /// xorshift64* PRNG — tiny, seedable, no external dependencies, and
 /// stable across platforms so seed reports reproduce byte-for-byte.
 #[derive(Debug, Clone)]
@@ -227,6 +236,13 @@ mod tests {
             assert_eq!(evs, vec![(3, *k, FaultAction::Kill)]);
         }
         assert!(OpWindow { task: 0, start: 5, end: 5 }.is_empty());
+        let delays: Vec<_> = sweep_delay_points(w, 777).collect();
+        assert_eq!(delays.len(), 4);
+        for (i, (k, plan)) in delays.iter().enumerate() {
+            assert_eq!(*k, 10 + i as u64);
+            let evs: Vec<_> = plan.events().collect();
+            assert_eq!(evs, vec![(3, *k, FaultAction::Delay(777))]);
+        }
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! CI-required property gates for the automatic liveness plane
+//! (`src/mcapi/liveness.rs` + the watchdog/fencing wiring):
+//!
+//! 1. the **zero-perturbation gate**, sim-asserted: the same SPSC packet
+//!    workload reports byte-identical `MachineStats` with the heartbeat
+//!    watchdog disarmed and armed — heartbeat bumps and watchdog scans
+//!    ride entirely on unpriced host atomics, adding zero priced
+//!    simulator operations, not merely "few",
+//! 2. epoch fencing end to end: a declared-dead node's sends fail fast
+//!    with `NodeFenced` while its committed data stays drainable, and
+//!    `rejoin` restores it under a bumped epoch,
+//! 3. delay sweeps: a delayed-but-alive victim at *every* priced-op
+//!    index inside the probed operation is never confirmed dead by the
+//!    armed watchdog (the false-positive bar),
+//! 4. real-thread abandonment: an OS thread that parks forever is
+//!    detected, fenced and recovered by the watchdog alone — the
+//!    scenario contains zero explicit `declare_node_dead` calls.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use mcapi::coordinator::chaos::{run_delay_sweep, Scenario, Victim};
+use mcapi::coordinator::{run_abandon, run_abandon_seeded, AbandonOpts, AbandonRole};
+use mcapi::lockfree::mem::RealWorld;
+use mcapi::lockfree::World;
+use mcapi::mcapi::liveness::LivenessCfg;
+use mcapi::mcapi::types::{BackendKind, ChannelKind, EndpointId, RuntimeCfg, Status};
+use mcapi::mcapi::McapiRuntime;
+use mcapi::os::{AffinityMode, OsProfile};
+use mcapi::sim::{Machine, MachineCfg, MachineStats, SimWorld};
+
+const NODE_PROD: usize = 1;
+const NODE_CONS: usize = 2;
+
+/// A fixed SPSC packet exchange through the full `McapiRuntime` on the
+/// deterministic machine: producer streams `n` sequenced frames, the
+/// consumer checks order, a monitor task does the setup and (when
+/// `armed`) drives `watchdog_scan_once` on every poll until both
+/// workers finish. Returns the machine stats plus the runtime for
+/// post-run liveness assertions.
+fn spsc_mcapi_run(n: u64, armed: bool) -> (MachineStats, Arc<McapiRuntime<SimWorld>>) {
+    let m = Machine::new(MachineCfg::new(4, OsProfile::linux_rt(), AffinityMode::PinnedSpread));
+    let rt = McapiRuntime::<SimWorld>::new(RuntimeCfg {
+        backend: BackendKind::LockFree,
+        max_nodes: 4,
+        nbb_capacity: 8,
+        // An hour of virtual silence before suspicion: the gate compares
+        // scan overhead, and a confirm would do real (priced) repair
+        // work by design.
+        liveness: LivenessCfg { deadline_ns: 3_600_000_000_000, confirm_scans: 3 },
+        ..Default::default()
+    });
+    let src = EndpointId::new(0, NODE_PROD as u16, 9);
+    let dst = EndpointId::new(0, NODE_CONS as u16, 9);
+    let ready = Arc::new(AtomicBool::new(false));
+    let target = Arc::new(AtomicUsize::new(usize::MAX));
+
+    let producer = {
+        let (rt, ready, target) = (rt.clone(), ready.clone(), target.clone());
+        m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let ch = target.load(Ordering::SeqCst);
+            let mut buf = [0u8; 16];
+            for i in 0..n {
+                buf[..8].copy_from_slice(&i.to_le_bytes());
+                while rt.pkt_send(ch, &buf).is_err() {
+                    SimWorld::yield_now();
+                }
+            }
+        })
+    };
+    let consumer = {
+        let (rt, ready, target) = (rt.clone(), ready.clone(), target.clone());
+        m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let ch = target.load(Ordering::SeqCst);
+            let mut buf = [0u8; 64];
+            for i in 0..n {
+                loop {
+                    match rt.pkt_recv(ch, &mut buf) {
+                        Ok(len) => {
+                            let got = u64::from_le_bytes(buf[..8].try_into().unwrap());
+                            assert_eq!((len, got), (16, i));
+                            break;
+                        }
+                        Err(_) => SimWorld::yield_now(),
+                    }
+                }
+            }
+        })
+    };
+    let monitor = {
+        let (rt, ready, target) = (rt.clone(), ready.clone(), target.clone());
+        m.spawn(move || {
+            rt.create_endpoint(src, NODE_PROD).unwrap();
+            rt.create_endpoint(dst, NODE_CONS).unwrap();
+            let ch = rt.connect(src, dst, ChannelKind::Packet).unwrap();
+            rt.open_send(ch).unwrap();
+            rt.open_recv(ch).unwrap();
+            target.store(ch, Ordering::SeqCst);
+            ready.store(true, Ordering::SeqCst);
+            let mut wd = armed.then(|| rt.new_watchdog());
+            while !(SimWorld::task_done(0) && SimWorld::task_done(1)) {
+                if let Some(w) = wd.as_mut() {
+                    rt.watchdog_scan_once(w);
+                }
+                SimWorld::yield_now();
+            }
+        })
+    };
+    (m.run(vec![producer, consumer, monitor]), rt)
+}
+
+#[test]
+fn armed_watchdog_adds_zero_priced_operations_in_sim() {
+    let (off, _) = spsc_mcapi_run(200, false);
+    let (on, rt) = spsc_mcapi_run(200, true);
+    // The tentpole's pricing contract: heartbeat bumps and watchdog
+    // scans live on host atomics only — identical cache-line accesses,
+    // context switches, syscalls and virtual time, byte for byte.
+    assert_eq!(off, on, "armed watchdog must not perturb the priced simulation");
+    // And the plane was genuinely observing, not compiled away:
+    assert!(rt.heartbeat_peek(NODE_PROD) > 0, "producer beats recorded");
+    assert!(rt.heartbeat_peek(NODE_CONS) > 0, "consumer beats recorded");
+    assert_eq!(rt.confirms_observed(), 0, "nobody died in a steady run");
+    assert!(rt.node_alive(NODE_PROD) && rt.node_alive(NODE_CONS));
+}
+
+#[test]
+fn fenced_node_sends_fail_fast_and_rejoin_restores() {
+    let rt = McapiRuntime::<RealWorld>::new(RuntimeCfg {
+        backend: BackendKind::LockFree,
+        max_nodes: 4,
+        ..Default::default()
+    });
+    let src = EndpointId::new(0, NODE_PROD as u16, 40);
+    let dst = EndpointId::new(0, NODE_CONS as u16, 40);
+    rt.create_endpoint(src, NODE_PROD).unwrap();
+    rt.create_endpoint(dst, NODE_CONS).unwrap();
+    let ch = rt.connect(src, dst, ChannelKind::Packet).unwrap();
+    rt.open_send(ch).unwrap();
+    rt.open_recv(ch).unwrap();
+    rt.pkt_send(ch, b"pre").unwrap();
+
+    rt.declare_node_dead(NODE_PROD);
+    let epoch_dead = rt.liveness_epoch(NODE_PROD);
+    // The fence outranks every other failure: a zombie fails fast
+    // without touching ring state, on the connected and the
+    // connectionless path alike.
+    assert_eq!(rt.pkt_send(ch, b"zombie"), Err(Status::NodeFenced));
+    assert_eq!(rt.msg_send(NODE_PROD, dst, b"zombie", 0), Err(Status::NodeFenced));
+    assert!(rt.fence_rejects_observed() >= 2);
+    // Committed data outlives its producer: receives are never fenced.
+    let mut buf = [0u8; 16];
+    let n = rt.pkt_recv(ch, &mut buf).unwrap();
+    assert_eq!(&buf[..n], b"pre");
+
+    rt.rejoin(NODE_PROD).unwrap();
+    assert!(rt.node_alive(NODE_PROD));
+    assert!(rt.liveness_epoch(NODE_PROD) > epoch_dead, "rejoin bumps the epoch");
+    assert_eq!(rt.rejoin(usize::MAX), Err(Status::InvalidEndpoint));
+}
+
+#[test]
+fn delay_sweep_producer_is_never_falsely_confirmed() {
+    let r = run_delay_sweep(Scenario::Pkt, Victim::Producer, 12, 40_000);
+    assert!(r.pass, "delay sweep failed:\n{}", r.text);
+    let points = r.text.lines().filter(|l| l.trim_start().starts_with("delay@")).count();
+    assert!(points >= 4, "suspiciously small sweep ({points} points):\n{}", r.text);
+}
+
+#[test]
+fn delay_sweep_consumer_is_never_falsely_confirmed() {
+    let r = run_delay_sweep(Scenario::Pkt, Victim::Consumer, 12, 40_000);
+    assert!(r.pass, "delay sweep failed:\n{}", r.text);
+}
+
+#[test]
+fn abandoned_threads_are_recovered_by_the_watchdog_alone() {
+    for role in [AbandonRole::Producer, AbandonRole::Consumer] {
+        let r = run_abandon(&AbandonOpts { role, ..Default::default() });
+        assert!(r.pass, "{}", r.text);
+        assert!(r.text.contains("verdict=PASS"), "{}", r.text);
+    }
+}
+
+#[test]
+fn seeded_abandonment_verdicts_are_stable() {
+    // Wall-clock timings make the text non-reproducible; the verdict
+    // and the invariants behind it must hold for any seed.
+    for seed in [1u64, 2] {
+        let r = run_abandon_seeded(seed);
+        assert!(r.pass, "seed {seed}: {}", r.text);
+    }
+}

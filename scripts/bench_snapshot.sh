@@ -57,7 +57,8 @@ for key in spsc_ratio spsc_batch_ratio empty_pop_ns pkt_queue_mps pkt_ring_mps p
            stress_pkt_timeouts stress_pkt_poisons stress_pkt_leases_reclaimed \
            mpmc_scaling_c1_mps mpmc_scaling_c2_mps mpmc_scaling_c4_mps mpmc_scaling_batch_ratio \
            trace_events trace_send_commit_p99_ns trace_wakeup_recv_p99_ns trace_replay_pass \
-           trace_lane_peak host_cores host_os git_sha; do
+           trace_lane_peak liveness_suspects liveness_confirms liveness_false_suspects \
+           liveness_fence_rejects host_cores host_os git_sha; do
   if ! grep -q "\"$key\"" "$out"; then
     echo "error: BENCH_micro snapshot is missing \"$key\"" >&2
     exit 1
