@@ -11,6 +11,10 @@
 //! * **MPMC scaling**: 2 producers × M ∈ {1, 2, 4} consumers on the
 //!   slot-sequence ring, exactly-once asserted, plus the batched-claim
 //!   ratio (the `mpmc_scaling_*` BENCH_JSON row),
+//! * **MPMC stealing**: the same 2×M grid on the lane-sharded
+//!   work-stealing ring (zero shared-RMW home drains + batch steals),
+//!   the sharded-vs-shared ratio at 2×2, and a skewed-consumer
+//!   imbalance row (the `mpmc_steal_*` BENCH_JSON row),
 //! * occupancy bitmap: empty-queue poll cost of `LockFreeQueue::pop`,
 //! * NBW write / read vs. a Mutex<T> state cell,
 //! * bit-set alloc/free vs. Mutex<Vec> free list (why the paper switched
@@ -31,6 +35,7 @@ use std::time::Instant;
 use mcapi::harness::{header, time_batched};
 use mcapi::lockfree::{
     Backoff, BitSet, ChannelRing, FreeList, MpmcRing, Nbb, Nbw, ReadStatus, RealWorld,
+    ShardedRing, STEAL_BATCH,
 };
 use mcapi::mcapi::queue::{Entry, LockFreeQueue};
 use mcapi::mrapi::shmem::{Lease, Partition};
@@ -388,6 +393,75 @@ fn mpmc_ring_mps(producers: usize, consumers: usize, batch: usize) -> f64 {
     total as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Cross-thread MPMC throughput (msgs/s) of the lane-sharded
+/// work-stealing ring: `producers` senders publish 8-byte sequence
+/// frames on their own SPSC lane, `consumers` attach as group members
+/// and drain home lanes (zero shared RMWs in steady state), batch
+/// stealing when dry. Exactly-once asserted with the same
+/// count + checksum pair as the shared-ring run. `slow_factor` injects
+/// that many yields before each of consumer 0's receive attempts — the
+/// imbalance row: its peers must absorb the backlog by stealing.
+fn mpmc_steal_mps(producers: usize, consumers: usize, slow_factor: usize) -> f64 {
+    let ring =
+        Arc::new(ShardedRing::<RealWorld>::new(producers, producers + consumers, MPMC_CAP, 16));
+    let done = Arc::new(AtomicU64::new(0));
+    let sum = Arc::new(AtomicU64::new(0));
+    let per = MPMC_N / producers as u64;
+    let total = per * producers as u64;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let ring = ring.clone();
+        handles.push(std::thread::spawn(move || {
+            let lane = p as u32;
+            let base = p as u64 * per;
+            for i in 0..per {
+                let b = (base + i).to_le_bytes();
+                while ring.send(lane, &b).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+        }));
+    }
+    for c in 0..consumers {
+        let ring = ring.clone();
+        let (done, sum) = (done.clone(), sum.clone());
+        handles.push(std::thread::spawn(move || {
+            let who = (producers + c) as u32;
+            ring.attach_member(who);
+            loop {
+                if c == 0 {
+                    for _ in 0..slow_factor {
+                        std::thread::yield_now();
+                    }
+                }
+                match ring.recv_as(who, |b| u64::from_le_bytes(b[..8].try_into().unwrap())) {
+                    Ok(v) => {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        if done.load(Ordering::Relaxed) >= total {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(done.load(Ordering::SeqCst), total, "sharded MPMC lost or duplicated a frame");
+    assert_eq!(
+        sum.load(Ordering::SeqCst),
+        total * (total - 1) / 2,
+        "sharded MPMC sequence checksum mismatch (duplicate + loss cancelled out)"
+    );
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     println!("{}", header());
 
@@ -460,6 +534,27 @@ fn main() {
         "mpmc batch-32 producers at 2 consumers: {:.2} Mmsg/s = {mpmc_batch_ratio:.2}x scalar \
          (scaling with M needs >= 4 free cores; CI runners only gate > 0 and exactly-once)",
         mpmc_batch_mps / 1e6
+    );
+
+    // --- MPMC stealing: lane-sharded rings vs the shared-CAS ring ------------
+    println!(
+        "\nmpmc steal: 2 producers x M consumers on lane-sharded rings \
+         ({MPMC_N} msgs, cap {MPMC_CAP}, steal batch {STEAL_BATCH})"
+    );
+    println!("| consumers | throughput (Mmsg/s) |");
+    println!("|---|---|");
+    let steal_c1_mps = mpmc_steal_mps(2, 1, 0);
+    println!("| 1 | {:.2} |", steal_c1_mps / 1e6);
+    let steal_c2_mps = mpmc_steal_mps(2, 2, 0);
+    println!("| 2 | {:.2} |", steal_c2_mps / 1e6);
+    let steal_c4_mps = mpmc_steal_mps(2, 4, 0);
+    println!("| 4 | {:.2} |", steal_c4_mps / 1e6);
+    let steal_vs_shared = steal_c2_mps / mpmc_c2_mps;
+    let steal_skew_mps = mpmc_steal_mps(2, 2, 16);
+    println!(
+        "sharded-vs-shared at 2x2: {steal_vs_shared:.2}x | skewed consumer (16 yields/poll): \
+         {:.2} Mmsg/s (peers steal the slow member's backlog; exactly-once still asserted)",
+        steal_skew_mps / 1e6
     );
 
     // --- occupancy bitmap: empty-queue poll cost -----------------------------
@@ -652,6 +747,23 @@ fn main() {
         "BENCH_JSON: {{\"mpmc_scaling_c1_mps\": {:.0}, \"mpmc_scaling_c2_mps\": {:.0}, \
          \"mpmc_scaling_c4_mps\": {:.0}, \"mpmc_scaling_batch_ratio\": {:.3}}}",
         mpmc_c1_mps, mpmc_c2_mps, mpmc_c4_mps, mpmc_batch_ratio
+    );
+    // Work-stealing row: the sharded grid, the 2x2 sharded-vs-shared
+    // ratio, and the skewed-consumer row. Same discipline as the shared
+    // ring — absolute numbers are machine-dependent, exactly-once
+    // inside mpmc_steal_mps is the hard gate, > 0 the sanity floor.
+    assert!(
+        steal_c1_mps > 0.0
+            && steal_c2_mps > 0.0
+            && steal_c4_mps > 0.0
+            && steal_skew_mps > 0.0,
+        "MPMC steal run produced a zero throughput"
+    );
+    println!(
+        "BENCH_JSON: {{\"mpmc_steal_c1_mps\": {:.0}, \"mpmc_steal_c2_mps\": {:.0}, \
+         \"mpmc_steal_c4_mps\": {:.0}, \"mpmc_steal_vs_shared\": {:.3}, \
+         \"mpmc_steal_skew_mps\": {:.0}}}",
+        steal_c1_mps, steal_c2_mps, steal_c4_mps, steal_vs_shared, steal_skew_mps
     );
     // Robustness counters from one steady packet stress run. All three
     // must stay zero on the healthy path (the chaos suite exercises the

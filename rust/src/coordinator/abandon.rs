@@ -132,21 +132,14 @@ pub fn run_abandon(opts: &AbandonOpts) -> AbandonReport {
     // Wakes the parked zombie once the verdict is in (so its thread can
     // be joined; a wake before this flag is a spurious unpark).
     let release = Arc::new(AtomicBool::new(false));
-    let stop = Arc::new(AtomicBool::new(false));
 
-    // Watchdog driver thread. The ONLY death-detection mechanism in the
-    // scenario — nothing below calls `declare_node_dead`.
-    let watchdog = {
-        let (rt, stop) = (rt.clone(), stop.clone());
-        let period = Duration::from_millis(opts.scan_period_ms.max(1));
-        thread::spawn(move || {
-            let mut wd = rt.new_watchdog();
-            while !stop.load(Ordering::Acquire) {
-                rt.watchdog_scan_once(&mut wd);
-                thread::sleep(period);
-            }
-        })
-    };
+    // Built-in background watchdog. The ONLY death-detection mechanism
+    // in the scenario — nothing below calls `declare_node_dead`, and
+    // nothing hand-drives `watchdog_scan_once` either: the scanner
+    // thread is the runtime's own (`Watchdog::spawn_scanner`).
+    let mut watchdog = rt
+        .new_watchdog()
+        .spawn_scanner(&rt, Duration::from_millis(opts.scan_period_ms.max(1)));
 
     // Producer (node 1): streams checksummed frames through the
     // deadline sender. Returns `(confirmed sends, exit status, zombie
@@ -239,19 +232,18 @@ pub fn run_abandon(opts: &AbandonOpts) -> AbandonReport {
     // live join give the watchdog a bounded window to confirm, then
     // shut it down before the now-silent (but alive) peer's lane could
     // ever mature into a false confirm.
-    let await_confirm_then_stop = |rt: &McapiRuntime<RealWorld>| {
+    let await_confirm = |rt: &McapiRuntime<RealWorld>| {
         let t0 = Instant::now();
         while rt.node_alive(victim_node) && t0.elapsed() < Duration::from_secs(10) {
             thread::sleep(Duration::from_millis(opts.scan_period_ms.max(1)));
         }
-        stop.store(true, Ordering::Release);
     };
     let (sent, prod_exit, zombie, got, torn, cons_exit);
     match opts.role {
         AbandonRole::Producer => {
             let c = consumer.join().unwrap();
-            await_confirm_then_stop(&rt);
-            watchdog.join().unwrap();
+            await_confirm(&rt);
+            watchdog.stop();
             release.store(true, Ordering::Release);
             let p = producer.join().unwrap();
             (sent, prod_exit, zombie) = p;
@@ -259,8 +251,8 @@ pub fn run_abandon(opts: &AbandonOpts) -> AbandonReport {
         }
         AbandonRole::Consumer => {
             let p = producer.join().unwrap();
-            await_confirm_then_stop(&rt);
-            watchdog.join().unwrap();
+            await_confirm(&rt);
+            watchdog.stop();
             release.store(true, Ordering::Release);
             let c = consumer.join().unwrap();
             (sent, prod_exit, zombie) = p;

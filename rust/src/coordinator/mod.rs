@@ -43,8 +43,8 @@ pub use chaos::{
     Scenario, Victim,
 };
 pub use mpmc::{
-    run_mpmc_chaos, run_mpmc_kill_sweep, run_mpmc_stress, run_mpmc_two_victims, MpmcOpts,
-    MpmcReport,
+    run_mpmc_chaos, run_mpmc_kill_sweep, run_mpmc_skewed, run_mpmc_steal_kill_sweep,
+    run_mpmc_steal_storm, run_mpmc_stress, run_mpmc_two_victims, MpmcOpts, MpmcReport,
 };
 pub use experiment::{Cell, CellResult, Matrix};
 pub use metrics::StressReport;

@@ -49,11 +49,17 @@ pub struct MpmcOpts {
     pub messages: u64,
     /// Seed for [`FaultPlan::from_seed`] in [`run_mpmc_chaos`].
     pub seed: u64,
+    /// Asymmetric-consumer knob: yields injected before each of
+    /// consumer 0's receive attempts (0 = symmetric). A slowed member's
+    /// home lanes back up, so its peers must steal to keep the stream
+    /// balanced — [`run_mpmc_skewed`] judges exactly-once under that
+    /// imbalance.
+    pub slow_factor: u64,
 }
 
 impl Default for MpmcOpts {
     fn default() -> Self {
-        MpmcOpts { producers: 2, consumers: 2, messages: 12, seed: 1 }
+        MpmcOpts { producers: 2, consumers: 2, messages: 12, seed: 1, slow_factor: 0 }
     }
 }
 
@@ -90,6 +96,7 @@ fn run_mpmc(opts: &MpmcOpts, plan: FaultPlan) -> Outcome {
     let producers = opts.producers.max(1);
     let consumers = opts.consumers.max(1);
     let messages = opts.messages;
+    let slow_factor = opts.slow_factor;
     let workers = producers + consumers;
     let m = Machine::new(MachineCfg::new(
         4,
@@ -176,6 +183,13 @@ fn run_mpmc(opts: &MpmcOpts, plan: FaultPlan) -> Outcome {
             let mut buf = [0u8; 64];
             let mut got_mine = 0u64;
             loop {
+                // Asymmetric-consumer skew: consumer 0 runs slow, its
+                // backlog must flow to the others via stealing.
+                if c == 0 {
+                    for _ in 0..slow_factor {
+                        SimWorld::yield_now();
+                    }
+                }
                 // Bracket consumer 0's receive attempts until its first
                 // successful claim; the last bracket written covers the
                 // successful pop (kill-sweep probe window).
@@ -415,6 +429,87 @@ pub fn run_mpmc_stress(opts: &MpmcOpts) -> MpmcReport {
     }
 }
 
+/// Steal-storm stress: **one** hot producer lane, every consumer's
+/// home lanes otherwise dry — so beyond the hot lane's own home every
+/// delivery is a batch steal through the shared cursor. The set-based
+/// judge still demands exactly-once; the report carries the
+/// process-wide steal-counter delta as the saturation signal (lower
+/// bound only — concurrent harnesses also steal).
+pub fn run_mpmc_steal_storm(opts: &MpmcOpts) -> MpmcReport {
+    let storm = MpmcOpts {
+        producers: 1,
+        consumers: opts.consumers.max(2),
+        // One lane carries what the N-producer runs spread out.
+        messages: opts.messages * opts.producers.max(1) as u64,
+        ..*opts
+    };
+    let steals_before = crate::obs::counter(crate::obs::ctr::MPMC_STEALS);
+    let out = run_mpmc(&storm, FaultPlan::new());
+    let steals =
+        crate::obs::counter(crate::obs::ctr::MPMC_STEALS).saturating_sub(steals_before);
+    let (missing, extra, mut fails) = judge(&out, &storm);
+    if out.sent.len() as u64 != storm.messages {
+        fails.push(format!("only {}/{} sends confirmed", out.sent.len(), storm.messages));
+    }
+    if out.clean.iter().any(|c| !c) {
+        fails.push("a fault-free worker did not finish clean".into());
+    }
+    let prefix = format!(
+        "mpmc-steal-storm consumers={} msgs={} steal_batches>={steals}",
+        storm.consumers, storm.messages
+    );
+    MpmcReport {
+        text: fmt_line(&prefix, &out, missing, extra, &fails),
+        pass: fails.is_empty(),
+        delivered: out.delivered.len(),
+    }
+}
+
+/// Asymmetric-consumer stress: consumer 0 is slowed by
+/// [`MpmcOpts::slow_factor`] yields per receive attempt (default 16
+/// when unset), so its home-lane backlog must drain through its peers'
+/// steals. Exactly-once under imbalance.
+pub fn run_mpmc_skewed(opts: &MpmcOpts) -> MpmcReport {
+    let skew = MpmcOpts {
+        slow_factor: if opts.slow_factor == 0 { 16 } else { opts.slow_factor },
+        ..*opts
+    };
+    let out = run_mpmc(&skew, FaultPlan::new());
+    let (missing, extra, mut fails) = judge(&out, &skew);
+    let total = skew.producers.max(1) as u64 * skew.messages;
+    if out.sent.len() as u64 != total {
+        fails.push(format!("only {}/{total} sends confirmed", out.sent.len()));
+    }
+    if out.clean.iter().any(|c| !c) {
+        fails.push("a fault-free worker did not finish clean".into());
+    }
+    let prefix = format!(
+        "mpmc-skew producers={} consumers={} msgs={} slow_factor={}",
+        skew.producers, skew.consumers, skew.messages, skew.slow_factor
+    );
+    MpmcReport {
+        text: fmt_line(&prefix, &out, missing, extra, &fails),
+        pass: fails.is_empty(),
+        delivered: out.delivered.len(),
+    }
+}
+
+/// Kill-during-steal sweep: the steal-storm topology (one hot lane)
+/// re-homes the lane away from consumer 0, so consumer 0's bracketed
+/// first claim **is** a batch steal — sweeping kills across that
+/// window exercises every priced op of the steal protocol (claim CAS,
+/// busy-wait loads, staged slot reads, the single `ack` advance, the
+/// claim release) and judges exactly-once at each point.
+pub fn run_mpmc_steal_kill_sweep(opts: &MpmcOpts) -> MpmcReport {
+    let storm = MpmcOpts {
+        producers: 1,
+        consumers: opts.consumers.max(2),
+        messages: opts.messages * opts.producers.max(1) as u64,
+        ..*opts
+    };
+    run_mpmc_kill_sweep(Victim::Consumer, &storm)
+}
+
 /// Seeded chaos on the N×M topology: a 1–3 event fault plan over the
 /// worker tasks (the watchdog is never a target). Deterministic: the
 /// same opts produce the same report byte-for-byte.
@@ -585,5 +680,19 @@ mod tests {
         let r = run_mpmc_stress(&opts);
         assert!(r.pass, "{}", r.text);
         assert_eq!(r.delivered, 16, "{}", r.text);
+    }
+
+    #[test]
+    fn steal_storm_delivers_exactly_once() {
+        let opts = MpmcOpts { consumers: 3, messages: 8, ..Default::default() };
+        let r = run_mpmc_steal_storm(&opts);
+        assert!(r.pass, "{}", r.text);
+    }
+
+    #[test]
+    fn skewed_consumer_keeps_exactly_once() {
+        let opts = MpmcOpts { messages: 10, ..Default::default() };
+        let r = run_mpmc_skewed(&opts);
+        assert!(r.pass, "{}", r.text);
     }
 }

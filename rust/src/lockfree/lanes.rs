@@ -1,0 +1,1041 @@
+//! Lane-sharded MPMC ring with work-stealing consumers: the
+//! contention-adaptive endpoint plane.
+//!
+//! The slot-sequence ring ([`super::mpmc`]) arbitrates every claim on
+//! one shared head and one shared tail: with N producers and M
+//! consumers each message costs at least two contended CASes on the
+//! hottest words in the system, so the `mpmc_scaling_*` curve pays
+//! O(contenders) coherence traffic — exactly the shared-counter
+//! contention the paper blames for poor multicore messaging scaling.
+//! Virtual-Link (arXiv:2012.05181) shows MPMC throughput scales when
+//! the shared queue is decomposed into point-to-point links with
+//! consumer-side selection; Cederman et al. (arXiv:1302.2757) catalog
+//! work-stealing as the lock-free answer to the load imbalance that
+//! decomposition creates. [`ShardedRing`] composes both:
+//!
+//! * **Per-producer SPSC lanes** — one NBB-protocol ring per producer
+//!   slot (the [`super::ring`] counter protocol: `update`/`ack` odd/even
+//!   windows, cache-padded lines, producer-cached peer counter). The
+//!   producer side is byte-for-byte the SPSC fast path: stores only,
+//!   one cross-core `ack` load per ring wrap.
+//! * **Home-lane assignment** — every lane has at most one *home*
+//!   consumer (a group member). A member drains its home lanes with
+//!   **zero shared-counter RMW operations**: plain loads and stores
+//!   only (sim-asserted via [`crate::sim::SimWorld::rmw_count`]). Home
+//!   exclusivity against thieves and rebalancing uses a store/load
+//!   Dekker on two per-lane words (`home_busy`, `thief`), not a CAS.
+//! * **Lock-free work-stealing** — when a member's home lanes run dry
+//!   it becomes a thief: it bumps the shared steal cursor (its only
+//!   shared-counter RMW, paid exclusively on the dry path), picks the
+//!   most-backlogged lane by unpriced occupancy peeks, claims the
+//!   lane's `thief` word with a CAS, waits out the home's in-flight
+//!   pop, and moves up to [`STEAL_BATCH`] payloads in one `ack`
+//!   advance — batch amortization bounds how often a starving consumer
+//!   touches shared words.
+//!
+//! # Crash consistency
+//!
+//! The claimant-board discipline from [`super::mpmc`] carries over:
+//! every transient state is attributable to exactly one dense node
+//! slot, and [`ShardedRing::repair_dead`] rolls it back or completes
+//! it.
+//!
+//! * A producer dies mid-insert → its lane's `update` is odd → roll
+//!   back (the torn insert was never committed).
+//! * A home member dies mid-pop → the lane's `ack` is odd (and
+//!   `home_busy` set) → roll both back; the payload is re-exposed (the
+//!   dead pop never returned it, so exactly-once holds).
+//! * A thief dies mid-steal → the steal is **kill-atomic** around the
+//!   single `ack` advance: stolen payloads are staged into the thief's
+//!   crash-visible [`Stash`] *before* the priced `ack` store, and the
+//!   stash is marked committed by the host store immediately after it
+//!   (kills fire at priced-op entry, so the commit mark and the `ack`
+//!   advance are indivisible). Repair either discards the stage (ack
+//!   never advanced — the payloads are still in the lane) or salvages
+//!   every unconsumed staged payload (ack advanced — the stash is the
+//!   only copy). Either way the dead thief's `thief` claim word is
+//!   cleared so the lane unwedges.
+//!
+//! Rebalancing a lane between two *live* members (fenced-member
+//! recovery, late attach) rides the same thief claim word: the
+//! rebalancer claims the lane, waits out the home's bounded critical
+//! section, swaps the host-side assignment, and releases — and the home
+//! pop re-checks its assignment *after* winning the Dekker, so a stale
+//! home can never race the new one.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+use super::mem::{Atom32, Atom64, CachePadded, World};
+use super::nbb::SideCache;
+use crate::obs;
+use crate::obs::EventKind;
+
+/// Maximum payloads one steal moves (one `ack` advance covers all of
+/// them). Bounds both the imbalance a single steal corrects and the
+/// stash footprint.
+pub const STEAL_BATCH: usize = 8;
+
+/// `thief`-word sentinel for a rebalance handoff in progress (distinct
+/// from every `member + 1` claim).
+const REBALANCE_CLAIM: u32 = u32::MAX;
+
+/// Bounded spin budget a thief waits for the home's in-flight pop
+/// (`home_busy == 1`). A live home clears the flag within a handful of
+/// operations; a dead home parks it until repair, and the thief must
+/// not hang on a corpse.
+const THIEF_SPIN_LIMIT: u32 = 256;
+
+/// Why a sharded send enqueued nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSendError {
+    /// The producer's lane is full.
+    Full,
+    /// Lane full but a consumer is mid-pop: retry immediately, bounded
+    /// (Table 1 `*_BUT_*`).
+    FullButConsumerReading,
+}
+
+/// Why a sharded receive returned nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardRecvError {
+    /// Every lane (home and steal candidates) was empty.
+    Empty,
+    /// Nothing claimable right now, but a peer was mid-operation
+    /// (producer inserting, or another consumer holding a claim):
+    /// retry immediately, bounded.
+    PeerActive,
+}
+
+/// One per-producer SPSC lane plus the stealing control words.
+struct Lane<W: World> {
+    /// Writer counter — producer-owned line (NBB protocol: odd =
+    /// insert in progress).
+    update: CachePadded<W::U64>,
+    /// Reader counter — advanced by the home consumer (`+1`/`+2`
+    /// windows) or by a thief (one even batch step). Odd = home pop in
+    /// progress.
+    ack: CachePadded<W::U64>,
+    /// Home-side Dekker flag: the home stores 1, *then* checks
+    /// `thief`; a claimant stores its claim, *then* checks this.
+    /// SeqCst fences on both sides make the store/load pairs a real
+    /// Dekker — at least one side always sees the other.
+    home_busy: CachePadded<W::U32>,
+    /// Steal claim word: 0 = unclaimed, `member + 1`, or
+    /// [`REBALANCE_CLAIM`]. The claimant board for crash repair.
+    thief: CachePadded<W::U32>,
+    /// Producer-private mirrors (own = `update`, peer = `ack`
+    /// snapshot) — the PR 1 cached-peer-counter optimization.
+    prod: CachePadded<SideCache>,
+    /// Consumer-side cached `update` snapshot. A host atomic, not a
+    /// `Cell`: home assignment migrates across threads on rebalance.
+    /// `update` only grows, so a stale snapshot is conservative
+    /// (under-reports occupancy, never fabricates it).
+    peer_update: CachePadded<AtomicU64>,
+    /// Home assignment: `member + 1`, 0 = unassigned. Host atomic —
+    /// scanned on every pop, so it must stay unpriced; writes go
+    /// through the claim-word handoff.
+    home: AtomicU32,
+    /// Per-slot payload length words.
+    lens: Box<[UnsafeCell<u32>]>,
+    /// Slot payload bytes: `cap * slot_len`, contiguous.
+    bytes: Box<[UnsafeCell<u8>]>,
+    /// Synthetic per-slot regions for simulator cost accounting.
+    regions: Box<[u64]>,
+}
+
+impl<W: World> Lane<W> {
+    fn new(cap: usize, slot_len: usize) -> Self {
+        Lane {
+            update: CachePadded::new(W::U64::new(0)),
+            ack: CachePadded::new(W::U64::new(0)),
+            home_busy: CachePadded::new(W::U32::new(0)),
+            thief: CachePadded::new(W::U32::new(0)),
+            prod: CachePadded::new(SideCache::new()),
+            peer_update: CachePadded::new(AtomicU64::new(0)),
+            home: AtomicU32::new(0),
+            lens: (0..cap).map(|_| UnsafeCell::new(0u32)).collect(),
+            bytes: (0..cap * slot_len).map(|_| UnsafeCell::new(0u8)).collect(),
+            regions: (0..cap).map(|_| W::alloc_region(4 + slot_len)).collect(),
+        }
+    }
+
+    /// Committed-but-unclaimed payloads (unpriced peeks; monitoring,
+    /// victim selection and watchdogs only).
+    fn backlog(&self) -> u64 {
+        (self.update.peek() / 2).wrapping_sub(self.ack.peek() / 2)
+    }
+}
+
+/// Per-member crash-visible staging area for stolen payloads. Stolen
+/// batches land here *before* the lane's `ack` advances, so a thief
+/// killed at any priced operation either left the payloads in the lane
+/// (stage uncommitted) or left them fully salvageable here (stage
+/// committed). All fields are host-side: staging and consuming are
+/// exclusively the owning member's, and repair touches a stash only
+/// after its owner is declared dead.
+struct Stash {
+    /// Staged entry count (0 = empty stage).
+    count: AtomicUsize,
+    /// Next staged entry to deliver; `next == count` = drained.
+    next: AtomicUsize,
+    /// True once the backing `ack` advance committed — set by the host
+    /// store immediately after the priced `ack` store, so it is
+    /// kill-atomic with the advance.
+    committed: AtomicBool,
+    /// Per-entry payload lengths.
+    lens: Box<[UnsafeCell<u32>]>,
+    /// Payload bytes: `STEAL_BATCH * slot_len`.
+    bytes: Box<[UnsafeCell<u8>]>,
+    slot_len: usize,
+}
+
+impl Stash {
+    fn new(slot_len: usize) -> Self {
+        Stash {
+            count: AtomicUsize::new(0),
+            next: AtomicUsize::new(0),
+            committed: AtomicBool::new(false),
+            lens: (0..STEAL_BATCH).map(|_| UnsafeCell::new(0u32)).collect(),
+            bytes: (0..STEAL_BATCH * slot_len).map(|_| UnsafeCell::new(0u8)).collect(),
+            slot_len,
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.count.load(Ordering::Acquire) - self.next.load(Ordering::Acquire)
+    }
+
+    /// Stage slot `i` (host writes; made visible by the later `count`
+    /// store in the stealing protocol).
+    fn stage(&self, i: usize, payload: &[u8]) {
+        unsafe {
+            *self.lens[i].get() = payload.len() as u32;
+            std::ptr::copy_nonoverlapping(
+                payload.as_ptr(),
+                self.bytes[i * self.slot_len].get(),
+                payload.len(),
+            );
+        }
+    }
+
+    /// Deliver the next staged entry to `read`, if any.
+    fn take<T>(&self, read: &mut dyn FnMut(&[u8]) -> T) -> Option<T> {
+        let next = self.next.load(Ordering::Acquire);
+        if next >= self.count.load(Ordering::Acquire) {
+            return None;
+        }
+        let len = unsafe { *self.lens[next].get() } as usize;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(self.bytes[next * self.slot_len].get(), len)
+        };
+        let v = read(bytes);
+        self.next.store(next + 1, Ordering::Release);
+        v.into()
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Release);
+        self.next.store(0, Ordering::Release);
+        self.committed.store(false, Ordering::Release);
+    }
+}
+
+/// What [`ShardedRing::repair_dead`] did for one dead node.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneRepair {
+    /// Torn producer inserts rolled back.
+    pub torn_inserts: usize,
+    /// Torn home pops rolled back (payload re-exposed in the lane).
+    pub torn_pops: usize,
+    /// Wedged thief claims cleared.
+    pub cleared_claims: usize,
+    /// Staged-but-uncommitted steals discarded (payloads still live in
+    /// their lane).
+    pub discarded_stages: usize,
+    /// Committed-but-undelivered stolen payloads salvaged back to the
+    /// caller.
+    pub salvaged: usize,
+}
+
+/// Lane-sharded MPMC ring: `n_lanes` per-producer SPSC lanes,
+/// `n_members` consumer identities with home-lane assignment, lock-free
+/// batch stealing, and claimant-board crash repair. Producer and member
+/// identities are **dense node slots** (the same space the runtime's
+/// recovery machinery keys on).
+pub struct ShardedRing<W: World> {
+    lanes: Box<[Lane<W>]>,
+    stashes: Box<[Stash]>,
+    /// Which member slots are attached (host; rebalance input).
+    member_active: Box<[AtomicBool]>,
+    /// Shared steal cursor: rotates thieves' scan start so concurrent
+    /// thieves fan out instead of convoying on one victim. The ONLY
+    /// shared-counter RMW in the consumer plane, touched exclusively
+    /// when a member's home lanes are dry.
+    steal_cursor: CachePadded<W::U64>,
+    slot_len: usize,
+    cap: u64,
+    /// Observability id for trace events (host; [`obs::CH_NONE`] until
+    /// tagged).
+    trace_id: AtomicU32,
+}
+
+unsafe impl<W: World> Send for ShardedRing<W> {}
+unsafe impl<W: World> Sync for ShardedRing<W> {}
+
+impl<W: World> ShardedRing<W> {
+    /// Shard with `n_lanes` producer lanes of `cap` slots × `slot_len`
+    /// payload bytes, and stash/assignment room for `n_members`
+    /// consumer identities.
+    pub fn new(n_lanes: usize, n_members: usize, cap: usize, slot_len: usize) -> Self {
+        assert!(n_lanes >= 1, "shard needs at least one lane");
+        assert!(n_members >= 1, "shard needs at least one member slot");
+        assert!(cap >= 1, "lane capacity must be >= 1");
+        assert!(slot_len >= 8, "lane slot must fit a 64-bit scalar");
+        ShardedRing {
+            lanes: (0..n_lanes).map(|_| Lane::new(cap, slot_len)).collect(),
+            stashes: (0..n_members).map(|_| Stash::new(slot_len)).collect(),
+            member_active: (0..n_members).map(|_| AtomicBool::new(false)).collect(),
+            steal_cursor: CachePadded::new(W::U64::new(0)),
+            slot_len,
+            cap: cap as u64,
+            trace_id: AtomicU32::new(obs::CH_NONE),
+        }
+    }
+
+    /// Tag trace events with the owning channel/endpoint id.
+    pub fn set_trace_id(&self, id: u32) {
+        self.trace_id.store(id, Ordering::Relaxed);
+    }
+
+    fn trace_id_now(&self) -> u32 {
+        self.trace_id.load(Ordering::Relaxed)
+    }
+
+    /// Producer lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Member (stash/assignment) slots.
+    pub fn members(&self) -> usize {
+        self.stashes.len()
+    }
+
+    /// Payload bytes per slot.
+    pub fn slot_len(&self) -> usize {
+        self.slot_len
+    }
+
+    /// Committed-but-undelivered payloads across every lane and stash
+    /// (approximate; unpriced peeks, safe from watchdogs).
+    pub fn len(&self) -> usize {
+        let lanes: u64 = self.lanes.iter().map(Lane::backlog).sum();
+        let staged: usize = self.stashes.iter().map(Stash::pending).sum();
+        lanes as usize + staged
+    }
+
+    /// True when nothing is buffered anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lane `lane`'s committed-but-unclaimed backlog (unpriced peek).
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.lanes.get(lane).map_or(0, |l| l.backlog() as usize)
+    }
+
+    /// Raw `(update, ack)` for lane `lane` (unpriced; post-run
+    /// invariant checks only).
+    pub fn lane_counters_peek(&self, lane: usize) -> (u64, u64) {
+        let l = &self.lanes[lane];
+        (l.update.peek(), l.ack.peek())
+    }
+
+    /// Home member of `lane` (`None` = unassigned). Host peek.
+    pub fn home_of(&self, lane: usize) -> Option<u32> {
+        match self.lanes.get(lane).map_or(0, |l| l.home.load(Ordering::Relaxed)) {
+            0 => None,
+            m => Some(m - 1),
+        }
+    }
+
+    // -- producer side ------------------------------------------------------
+
+    /// Insert `payload` into producer `lane`'s SPSC ring — the
+    /// unchanged NBB fast path: stores only, one cross-core `ack` load
+    /// per ring wrap. Single producer per lane (the SPSC contract; lane
+    /// == the sender's dense node slot).
+    ///
+    /// # Panics
+    /// If `payload` exceeds the slot length or `lane` is out of range —
+    /// both caller bugs (the runtime validates first).
+    pub fn send(&self, lane: u32, payload: &[u8]) -> Result<(), ShardSendError> {
+        assert!(payload.len() <= self.slot_len, "payload exceeds lane slot");
+        let l = &self.lanes[lane as usize];
+        let u = l.prod.own.get();
+        self.lane_free(l, u)?;
+        l.update.store(u + 1); // enter: odd = insert in progress
+        self.write_slot(l, ((u / 2) % self.cap) as usize, payload);
+        l.update.store(u + 2); // exit: publish
+        l.prod.own.set(u + 2);
+        if obs::tracing() {
+            obs::emit::<W>(EventKind::MpmcPublish, self.trace_id_now(), u / 2, lane);
+            obs::bump(obs::ctr::MPMC_PUBLISH);
+        }
+        Ok(())
+    }
+
+    /// Batched insert into producer `lane`: one enter/exit counter
+    /// store pair amortized over the whole prefix. Returns how many
+    /// payloads went in (`Err` only when none fit).
+    pub fn send_batch(&self, lane: u32, payloads: &[&[u8]]) -> Result<usize, ShardSendError> {
+        if payloads.is_empty() {
+            return Ok(0);
+        }
+        assert!(
+            payloads.iter().all(|p| p.len() <= self.slot_len),
+            "payload exceeds lane slot"
+        );
+        let l = &self.lanes[lane as usize];
+        let u = l.prod.own.get();
+        let free = self.lane_free(l, u)?;
+        let k = (free as usize).min(payloads.len());
+        l.update.store(u + 1); // enter once: odd across the whole batch
+        for (i, p) in payloads[..k].iter().enumerate() {
+            self.write_slot(l, ((u / 2 + i as u64) % self.cap) as usize, p);
+        }
+        let u2 = u + 2 * k as u64;
+        l.update.store(u2); // exit: publishes all k at once
+        l.prod.own.set(u2);
+        if obs::tracing() {
+            for i in 0..k as u64 {
+                obs::emit::<W>(EventKind::MpmcPublish, self.trace_id_now(), u / 2 + i, lane);
+            }
+            obs::add(obs::ctr::MPMC_PUBLISH, k as u64);
+        }
+        Ok(k)
+    }
+
+    /// Producer-side free-slot count: cached consumer counter,
+    /// re-loaded only on apparent full.
+    fn lane_free(&self, l: &Lane<W>, u: u64) -> Result<u64, ShardSendError> {
+        let mut a = l.prod.peer.get();
+        let mut free = self.cap - (u / 2).wrapping_sub(a / 2);
+        if free == 0 {
+            a = l.ack.load();
+            l.prod.peer.set(a);
+            free = self.cap - (u / 2).wrapping_sub(a / 2);
+            if free == 0 {
+                return Err(if a & 1 == 1 {
+                    ShardSendError::FullButConsumerReading
+                } else {
+                    ShardSendError::Full
+                });
+            }
+        }
+        Ok(free)
+    }
+
+    fn write_slot(&self, l: &Lane<W>, idx: usize, payload: &[u8]) {
+        W::touch(l.regions[idx], 4 + payload.len().max(1), true);
+        unsafe {
+            *l.lens[idx].get() = payload.len() as u32;
+            std::ptr::copy_nonoverlapping(
+                payload.as_ptr(),
+                l.bytes[idx * self.slot_len].get(),
+                payload.len(),
+            );
+        }
+    }
+
+    /// Slot `idx` of lane `l` as a byte slice of its recorded length
+    /// (inside an exclusion window; charges the slot read).
+    fn read_slot<'a>(&self, l: &'a Lane<W>, idx: usize) -> &'a [u8] {
+        let len = {
+            W::touch(l.regions[idx], 4, false);
+            (unsafe { *l.lens[idx].get() } as usize).min(self.slot_len)
+        };
+        W::touch(l.regions[idx], len.max(1), false);
+        unsafe { std::slice::from_raw_parts(l.bytes[idx * self.slot_len].get(), len) }
+    }
+
+    // -- membership and home assignment -------------------------------------
+
+    /// Mark member `m` attached and deal it a fair share of lanes
+    /// (round-robin over attached members; live-lane moves go through
+    /// the claim-word handoff, so this is safe mid-traffic).
+    pub fn attach_member(&self, m: u32) {
+        if let Some(cell) = self.member_active.get(m as usize) {
+            cell.store(true, Ordering::SeqCst);
+        }
+        self.rebalance();
+    }
+
+    /// True when member `m` is attached.
+    pub fn member_attached(&self, m: u32) -> bool {
+        self.member_active.get(m as usize).map_or(false, |c| c.load(Ordering::SeqCst))
+    }
+
+    /// Re-deal every lane round-robin across the currently attached
+    /// members (none attached → all lanes unassigned). Lanes already
+    /// owned by their target member are untouched; every real move is
+    /// a claim-word handoff that waits out the old home's in-flight
+    /// pop, so two live members can never both believe they own a lane.
+    ///
+    /// Best-effort: a lane wedged by a dead-but-undeclared peer (claim
+    /// word or busy flag parked) is **skipped** rather than waited on —
+    /// assignment is a latency optimization, never a correctness
+    /// dependency (an unassigned or stale-homed lane stays stealable),
+    /// and the next repair/attach re-runs the deal.
+    pub fn rebalance(&self) {
+        let members: Vec<u32> = (0..self.stashes.len() as u32)
+            .filter(|&m| self.member_attached(m))
+            .collect();
+        for (i, l) in self.lanes.iter().enumerate() {
+            let want = members.get(i % members.len().max(1)).map_or(0, |&m| m + 1);
+            if l.home.load(Ordering::SeqCst) != want {
+                self.assign_home(l, want);
+            }
+        }
+    }
+
+    /// Move `l`'s home assignment to `want` (`member + 1`, 0 =
+    /// unassign) through the claim-word handoff. Returns `false` if the
+    /// lane was wedged (bounded spins exhausted) and the move skipped.
+    fn assign_home(&self, l: &Lane<W>, want: u32) -> bool {
+        // Claim the lane against thieves (and concurrent rebalancers).
+        let mut spins = 0;
+        while l.thief.cas(0, REBALANCE_CLAIM).is_err() {
+            spins += 1;
+            if spins >= THIEF_SPIN_LIMIT {
+                return false;
+            }
+            W::spin_hint();
+        }
+        fence(Ordering::SeqCst);
+        // Wait out the old home's in-flight pop: it set `home_busy`
+        // before checking `thief`, so either it saw our claim and
+        // backed off, or we see its flag and wait for the (bounded)
+        // critical section to finish. A *dead* home's parked flag is
+        // cleared by repair before the rebalance runs; one wedged by a
+        // not-yet-declared corpse forfeits the move.
+        spins = 0;
+        while l.home_busy.load() != 0 {
+            spins += 1;
+            if spins >= THIEF_SPIN_LIMIT {
+                l.thief.store(0);
+                return false;
+            }
+            W::spin_hint();
+        }
+        l.home.store(want, Ordering::SeqCst);
+        l.thief.store(0);
+        true
+    }
+
+    // -- consumer side ------------------------------------------------------
+
+    /// Pop one payload as member `me`: staged steals first (host-only
+    /// delivery), then the home lanes (zero shared-counter RMW), then —
+    /// only with every home lane dry — a batch steal from the most
+    /// backlogged lane. `read` sees the payload bytes in place.
+    pub fn recv_as<T>(&self, me: u32, mut read: impl FnMut(&[u8]) -> T) -> Result<T, ShardRecvError> {
+        // 1) Deliver a previously stolen payload: pure host reads, the
+        //    batch-steal amortization paying out.
+        if let Some(stash) = self.stashes.get(me as usize) {
+            if let Some(v) = stash.take(&mut |b| read(b)) {
+                if obs::tracing() {
+                    obs::bump(obs::ctr::MPMC_CONSUME);
+                }
+                return Ok(v);
+            }
+            if stash.pending() == 0 && stash.count.load(Ordering::Acquire) != 0 {
+                stash.reset();
+            }
+        }
+        // 2) Drain home lanes: zero shared-counter RMW in steady state.
+        let mut peer_active = false;
+        for (i, l) in self.lanes.iter().enumerate() {
+            if l.home.load(Ordering::Relaxed) != me + 1 {
+                continue;
+            }
+            match self.home_pop(l, me, &mut read) {
+                Ok(v) => {
+                    if obs::tracing() {
+                        obs::emit::<W>(
+                            EventKind::MpmcClaim,
+                            self.trace_id_now(),
+                            i as u64,
+                            0,
+                        );
+                        obs::bump(obs::ctr::MPMC_CONSUME);
+                    }
+                    return Ok(v);
+                }
+                Err(ShardRecvError::PeerActive) => peer_active = true,
+                Err(ShardRecvError::Empty) => {}
+            }
+        }
+        // 3) Home lanes dry: steal. The cursor bump is the only shared
+        //    RMW a consumer ever performs, and only on this path.
+        match self.steal(me, &mut read) {
+            Ok(v) => Ok(v),
+            Err(ShardRecvError::PeerActive) => Err(ShardRecvError::PeerActive),
+            Err(ShardRecvError::Empty) if peer_active => Err(ShardRecvError::PeerActive),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// One home pop on lane `l` by member `me`. Plain loads/stores
+    /// only — the Dekker against thieves replaces the shared-head CAS.
+    fn home_pop<T>(
+        &self,
+        l: &Lane<W>,
+        me: u32,
+        read: &mut impl FnMut(&[u8]) -> T,
+    ) -> Result<T, ShardRecvError> {
+        l.home_busy.store(1);
+        fence(Ordering::SeqCst);
+        if l.thief.load() != 0 {
+            // A thief (or rebalancer) holds the lane: back off and let
+            // it finish — its claim is bounded.
+            l.home_busy.store(0);
+            return Err(ShardRecvError::PeerActive);
+        }
+        // Re-check the assignment *after* winning the Dekker: a
+        // rebalance that completed between our scan and our flag store
+        // has already moved this lane to another member.
+        if l.home.load(Ordering::SeqCst) != me + 1 {
+            l.home_busy.store(0);
+            return Err(ShardRecvError::Empty);
+        }
+        // `ack` is exact here (thieves excluded); `update` goes through
+        // the cached snapshot, re-loaded only on apparent empty.
+        let a = l.ack.load();
+        debug_assert_eq!(a & 1, 0, "home pop found a torn ack outside repair");
+        let mut u = l.peer_update.load(Ordering::Relaxed);
+        let mut avail = (u / 2).wrapping_sub(a / 2);
+        if avail == 0 {
+            u = l.update.load();
+            l.peer_update.store(u, Ordering::Relaxed);
+            avail = (u / 2).wrapping_sub(a / 2);
+            if avail == 0 {
+                l.home_busy.store(0);
+                return Err(if u & 1 == 1 {
+                    ShardRecvError::PeerActive
+                } else {
+                    ShardRecvError::Empty
+                });
+            }
+        }
+        l.ack.store(a + 1); // enter: odd = pop in progress
+        let v = read(self.read_slot(l, ((a / 2) % self.cap) as usize));
+        l.ack.store(a + 2); // exit
+        l.home_busy.store(0);
+        Ok(v)
+    }
+
+    /// Steal a batch as member `me`: bump the cursor, walk candidates
+    /// from most- to least-backlogged, claim one, move up to
+    /// [`STEAL_BATCH`] payloads through the crash-safe stash, and
+    /// deliver the first.
+    fn steal<T>(
+        &self,
+        me: u32,
+        read: &mut impl FnMut(&[u8]) -> T,
+    ) -> Result<T, ShardRecvError> {
+        let start = self.steal_cursor.fetch_add(1) as usize;
+        // Candidate order: most backlogged first (unpriced peeks), the
+        // cursor breaking ties so concurrent thieves fan out.
+        let n = self.lanes.len();
+        let mut order: Vec<usize> = (0..n).map(|i| (start + i) % n).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(self.lanes[i].backlog()));
+        let mut contended = false;
+        for i in order {
+            if self.lanes[i].backlog() == 0 {
+                break; // sorted: everything after is empty too
+            }
+            match self.steal_from(i, me, read) {
+                Ok(v) => return Ok(v),
+                Err(ShardRecvError::PeerActive) => contended = true,
+                Err(ShardRecvError::Empty) => {}
+            }
+        }
+        Err(if contended { ShardRecvError::PeerActive } else { ShardRecvError::Empty })
+    }
+
+    /// Claim lane `victim` and move up to [`STEAL_BATCH`] payloads into
+    /// `me`'s stash; deliver the first. One thief-word CAS, one `ack`
+    /// store — shared-RMW cost is O(1) per batch, not per payload.
+    fn steal_from<T>(
+        &self,
+        victim: usize,
+        me: u32,
+        read: &mut impl FnMut(&[u8]) -> T,
+    ) -> Result<T, ShardRecvError> {
+        let l = &self.lanes[victim];
+        let Some(stash) = self.stashes.get(me as usize) else {
+            // No stash slot for this identity: it cannot stage a
+            // crash-safe batch, so it must not steal.
+            return Err(ShardRecvError::Empty);
+        };
+        if l.thief.cas(0, me + 1).is_err() {
+            return Err(ShardRecvError::PeerActive);
+        }
+        fence(Ordering::SeqCst);
+        // Wait out the home's in-flight pop (bounded; a dead home
+        // parks the flag until repair, so give up rather than hang).
+        let mut spins = 0;
+        while l.home_busy.load() != 0 {
+            spins += 1;
+            if spins >= THIEF_SPIN_LIMIT {
+                l.thief.store(0);
+                return Err(ShardRecvError::PeerActive);
+            }
+            W::spin_hint();
+        }
+        let a = l.ack.load();
+        if a & 1 == 1 {
+            // Torn home pop (its owner died before repair ran): not
+            // ours to fix.
+            l.thief.store(0);
+            return Err(ShardRecvError::PeerActive);
+        }
+        let u = l.update.load();
+        let avail = (u / 2).wrapping_sub(a / 2);
+        let k = (avail as usize).min(STEAL_BATCH);
+        if k == 0 {
+            l.thief.store(0);
+            return Err(ShardRecvError::Empty);
+        }
+        // Stage into the crash-visible stash BEFORE the ack advance:
+        // the `count` store publishes the stage, the `committed` store
+        // right after the ack store marks it delivered-from-lane. A
+        // kill at any priced op leaves repair an unambiguous state.
+        stash.reset();
+        for i in 0..k {
+            let idx = ((a / 2 + i as u64) % self.cap) as usize;
+            let bytes = self.read_slot(l, idx);
+            stash.stage(i, bytes);
+        }
+        stash.count.store(k, Ordering::Release);
+        l.ack.store(a + 2 * k as u64); // the single shared advance
+        stash.committed.store(true, Ordering::Release);
+        l.thief.store(0);
+        obs::add(obs::ctr::MPMC_STEALS, 1);
+        if obs::tracing() {
+            obs::emit::<W>(EventKind::MpmcSteal, self.trace_id_now(), victim as u64, k as u32);
+            obs::bump(obs::ctr::MPMC_CONSUME);
+        }
+        Ok(stash
+            .take(&mut |b| read(b))
+            .expect("a committed steal stages at least one payload"))
+    }
+
+    // -- crash repair --------------------------------------------------------
+
+    /// Repair every transient state dead node `node` left behind, in
+    /// all four roles it can hold (producer, home member, thief, stash
+    /// owner), and hand back committed-but-undelivered stolen payloads
+    /// via `salvage`. Detach the member slot; the caller decides when
+    /// to [`ShardedRing::rebalance`] the orphaned lanes (fence first,
+    /// then re-deal — PR 6 ordering).
+    pub fn repair_dead(&self, node: u32, mut salvage: impl FnMut(&[u8])) -> LaneRepair {
+        let mut r = LaneRepair::default();
+        // Producer role: roll back a torn insert on the node's own lane.
+        if let Some(l) = self.lanes.get(node as usize) {
+            let u = l.update.load();
+            if u & 1 == 1 {
+                l.update.store(u - 1);
+                r.torn_inserts += 1;
+            }
+            l.prod.own.set(u & !1);
+        }
+        for l in self.lanes.iter() {
+            // Home role: roll back a torn pop (payload re-exposed; the
+            // dead pop never returned it) and clear the parked flag so
+            // thieves and rebalancers stop waiting on a corpse.
+            if l.home.load(Ordering::SeqCst) == node + 1 {
+                let a = l.ack.load();
+                if a & 1 == 1 {
+                    l.ack.store(a - 1);
+                    r.torn_pops += 1;
+                }
+                if l.home_busy.load() != 0 {
+                    l.home_busy.store(0);
+                }
+                l.home.store(0, Ordering::SeqCst);
+            }
+            // Thief role: clear the wedged claim word (the stash
+            // disposition below decides what happened to the payloads).
+            if l.thief.load() == node + 1 {
+                l.thief.store(0);
+                r.cleared_claims += 1;
+            }
+        }
+        // Stash owner role: a committed stage's remaining payloads
+        // exist nowhere else — salvage them; an uncommitted stage's
+        // payloads are still in their lane — discard the stage.
+        if let Some(stash) = self.stashes.get(node as usize) {
+            if stash.committed.load(Ordering::Acquire) {
+                while let Some(()) = stash.take(&mut |b| salvage(b)) {
+                    r.salvaged += 1;
+                }
+            } else if stash.count.load(Ordering::Acquire) != 0 {
+                r.discarded_stages += 1;
+            }
+            stash.reset();
+        }
+        if let Some(cell) = self.member_active.get(node as usize) {
+            cell.store(false, Ordering::SeqCst);
+        }
+        let repairs = r.torn_inserts + r.torn_pops + r.cleared_claims + r.salvaged;
+        if repairs > 0 {
+            obs::add(obs::ctr::MPMC_REPAIRS, repairs as u64);
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockfree::mem::RealWorld;
+    use std::sync::atomic::AtomicU64 as HostU64;
+    use std::sync::Arc;
+
+    type Shard = ShardedRing<RealWorld>;
+
+    fn payload(i: u64) -> [u8; 8] {
+        i.to_le_bytes()
+    }
+
+    fn decode(b: &[u8]) -> u64 {
+        u64::from_le_bytes(b[..8].try_into().unwrap())
+    }
+
+    #[test]
+    fn home_drain_is_fifo_per_lane() {
+        let s = Shard::new(2, 2, 8, 8);
+        s.attach_member(0);
+        for i in 0..5u64 {
+            s.send(0, &payload(i)).unwrap();
+        }
+        for i in 0..5u64 {
+            assert_eq!(s.recv_as(0, decode), Ok(i), "home lane FIFO");
+        }
+        assert_eq!(s.recv_as(0, decode), Err(ShardRecvError::Empty));
+    }
+
+    #[test]
+    fn lane_full_reports_table1_status() {
+        let s = Shard::new(1, 1, 2, 8);
+        s.attach_member(0);
+        s.send(0, &payload(0)).unwrap();
+        s.send(0, &payload(1)).unwrap();
+        assert_eq!(s.send(0, &payload(2)), Err(ShardSendError::Full));
+        assert_eq!(s.recv_as(0, decode), Ok(0));
+        s.send(0, &payload(2)).unwrap();
+    }
+
+    #[test]
+    fn batch_send_publishes_all_at_once() {
+        let s = Shard::new(1, 1, 8, 8);
+        s.attach_member(0);
+        let bufs: Vec<[u8; 8]> = (0..5u64).map(payload).collect();
+        let refs: Vec<&[u8]> = bufs.iter().map(|b| b.as_slice()).collect();
+        assert_eq!(s.send_batch(0, &refs), Ok(5));
+        assert_eq!(s.lane_len(0), 5);
+        for i in 0..5u64 {
+            assert_eq!(s.recv_as(0, decode), Ok(i));
+        }
+    }
+
+    #[test]
+    fn dry_member_steals_from_most_backlogged_lane() {
+        let s = Shard::new(3, 2, 16, 8);
+        s.attach_member(0);
+        s.attach_member(1);
+        // Round-robin: lanes 0 and 2 home to member 0, lane 1 to member 1.
+        assert_eq!(s.home_of(0), Some(0));
+        assert_eq!(s.home_of(1), Some(1));
+        assert_eq!(s.home_of(2), Some(0));
+        // Load only member 0's lane: member 1 must steal.
+        for i in 0..12u64 {
+            s.send(0, &payload(i)).unwrap();
+        }
+        let v = s.recv_as(1, decode).expect("dry member must steal");
+        assert_eq!(v, 0, "steal takes the oldest committed payload");
+        // The batch landed in member 1's stash: next pops are host-only.
+        for want in 1..STEAL_BATCH as u64 {
+            assert_eq!(s.recv_as(1, decode), Ok(want), "stash drains in order");
+        }
+        // Member 0 still drains the remainder from its home lane.
+        let mut rest = Vec::new();
+        while let Ok(v) = s.recv_as(0, decode) {
+            rest.push(v);
+        }
+        assert_eq!(rest, (STEAL_BATCH as u64..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rebalance_moves_lanes_without_loss_under_traffic() {
+        let s = Arc::new(Shard::new(4, 2, 64, 8));
+        s.attach_member(0);
+        const N: u64 = 4_000;
+        let prod = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                for i in 0..N {
+                    let lane = (i % 4) as u32;
+                    let b = payload(i);
+                    while s.send(lane, &b).is_err() {
+                        std::hint::spin_loop();
+                    }
+                    if i == N / 3 {
+                        // Mid-traffic attach triggers a live rebalance.
+                        s.attach_member(1);
+                    }
+                }
+            })
+        };
+        let sum = Arc::new(HostU64::new(0));
+        let cnt = Arc::new(HostU64::new(0));
+        let mut handles = vec![prod];
+        for m in 0..2u32 {
+            let (s, sum, cnt) = (s.clone(), sum.clone(), cnt.clone());
+            handles.push(std::thread::spawn(move || loop {
+                match s.recv_as(m, decode) {
+                    Ok(v) => {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        cnt.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        if cnt.load(Ordering::Relaxed) >= N {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cnt.load(Ordering::SeqCst), N, "lost or duplicated a payload");
+        assert_eq!(sum.load(Ordering::SeqCst), N * (N - 1) / 2, "checksum mismatch");
+    }
+
+    #[test]
+    fn repair_discards_uncommitted_stage_and_salvages_committed() {
+        // Committed stage: ack advanced, stash holds the only copies.
+        let s = Shard::new(2, 2, 16, 8);
+        s.attach_member(0);
+        s.attach_member(1);
+        for i in 0..6u64 {
+            s.send(0, &payload(i)).unwrap();
+        }
+        // Member 1 steals a batch and consumes one payload, then "dies".
+        assert_eq!(s.recv_as(1, decode), Ok(0));
+        let mut salvaged = Vec::new();
+        let r = s.repair_dead(1, |b| salvaged.push(decode(b)));
+        assert_eq!(r.salvaged, 5, "committed stage must salvage the remainder");
+        assert_eq!(salvaged, vec![1, 2, 3, 4, 5]);
+        assert_eq!(r.discarded_stages, 0);
+        // Uncommitted stage: simulate by staging without the ack store.
+        let s2 = Shard::new(1, 1, 8, 8);
+        s2.attach_member(0);
+        s2.send(0, &payload(9)).unwrap();
+        s2.stashes[0].stage(0, &payload(9));
+        s2.stashes[0].count.store(1, Ordering::Release);
+        let mut sal2 = Vec::new();
+        let r2 = s2.repair_dead(0, |b| sal2.push(decode(b)));
+        assert_eq!(r2.discarded_stages, 1, "uncommitted stage must be discarded");
+        assert!(sal2.is_empty(), "payload still lives in the lane");
+        assert_eq!(s2.lane_len(0), 1);
+    }
+
+    #[test]
+    fn repair_rolls_back_torn_insert_and_torn_pop() {
+        let s = Shard::new(2, 2, 8, 8);
+        s.attach_member(0);
+        s.send(0, &payload(0)).unwrap();
+        // Torn insert: producer died inside the odd window.
+        let (u, _) = s.lane_counters_peek(0);
+        s.lanes[0].update.store(u + 1);
+        // Torn pop: home died inside the odd window with the flag set.
+        let (_, a) = s.lane_counters_peek(0);
+        s.lanes[0].ack.store(a + 1);
+        s.lanes[0].home_busy.store(1);
+        let r = s.repair_dead(0, |_| {});
+        assert_eq!((r.torn_inserts, r.torn_pops), (1, 1));
+        let (u2, a2) = s.lane_counters_peek(0);
+        assert_eq!(u2 % 2, 0);
+        assert_eq!(a2 % 2, 0);
+        assert_eq!(s.lane_len(0), 1, "committed payload survives repair");
+        // Lane unwedged: a fresh member drains it.
+        s.attach_member(1);
+        assert_eq!(s.recv_as(1, decode), Ok(0));
+    }
+
+    #[test]
+    fn repair_clears_dead_thief_claim() {
+        let s = Shard::new(2, 2, 8, 8);
+        s.attach_member(0);
+        s.send(0, &payload(7)).unwrap();
+        // Dead thief: claim word wedged, nothing staged.
+        s.lanes[0].thief.store(2); // member 1's claim
+        let r = s.repair_dead(1, |_| {});
+        assert_eq!(r.cleared_claims, 1);
+        assert_eq!(s.recv_as(0, decode), Ok(7), "lane unwedged for the home");
+    }
+
+    #[test]
+    fn steal_storm_exactly_once_under_contention() {
+        // One hot lane, four dry members: every pop is a steal.
+        let s = Arc::new(Shard::new(4, 4, 64, 8));
+        for m in 0..4 {
+            s.attach_member(m);
+        }
+        const N: u64 = 8_000;
+        let prod = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                for i in 0..N {
+                    let b = payload(i);
+                    // Only lane 3 gets traffic; members 0..3 all go dry
+                    // except lane 3's home.
+                    while s.send(3, &b).is_err() {
+                        std::hint::spin_loop();
+                    }
+                }
+            })
+        };
+        let sum = Arc::new(HostU64::new(0));
+        let cnt = Arc::new(HostU64::new(0));
+        let mut handles = vec![prod];
+        for m in 0..4u32 {
+            let (s, sum, cnt) = (s.clone(), sum.clone(), cnt.clone());
+            handles.push(std::thread::spawn(move || loop {
+                match s.recv_as(m, decode) {
+                    Ok(v) => {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        cnt.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        if cnt.load(Ordering::Relaxed) >= N {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cnt.load(Ordering::SeqCst), N, "steal storm lost or duplicated");
+        assert_eq!(sum.load(Ordering::SeqCst), N * (N - 1) / 2, "checksum mismatch");
+    }
+}

@@ -16,8 +16,15 @@
 //!   one shared-counter CAS per claim (amortized over a whole batch by
 //!   [`mpmc::MpmcRing::send_batch`]), with claimant-board crash repair
 //!   (`repair_dead`: tombstone dead-producer claims, salvage
-//!   dead-consumer claims). Backs `mcapi::queue::ConsumerGroup`; the
-//!   SPSC paths above stay untouched for 1:1 channels.
+//!   dead-consumer claims). Retained as the shared-counter baseline the
+//!   `mpmc_steal_vs_shared` benchmark row measures against; the SPSC
+//!   paths above stay untouched for 1:1 channels.
+//! * [`lanes`] — the contention-adaptive MPMC plane that now backs
+//!   `mcapi::queue::ConsumerGroup`: per-producer SPSC lanes (the same
+//!   cached-peer-counter NBB protocol as [`ring`]) + home-lane consumer
+//!   assignment + lock-free batch work-stealing. Steady-state draining
+//!   performs **zero shared-counter RMWs** (sim-asserted); the shared
+//!   steal cursor is touched only when a member's home lanes run dry.
 //! * [`bitset`] — the lock-free bit-set request allocator that replaced
 //!   the infeasible lock-free doubly linked list (refactoring step 3),
 //!   doubling as the occupancy flag board for `mcapi::queue`.
@@ -86,6 +93,8 @@
 //! | peer stalls (alive but descheduled) | `*PeerActive` status persists | bounded immediate retries ([`Backoff`]) | escalate spin → `yield_now` → futex park with deadline | `Timeout` after its deadline, never a hang |
 //! | producer dies inside an [`mpmc`] claim (slot seq parked at `p`) | claimed-unpublished slot wedges every later position | claimant board (`writers[idx] == who+1`, stamped kill-atomically with the claim CAS) | `MpmcRing::repair_dead`: publish a [`mpmc::TOMBSTONE`] length word — consumers consume and skip it, freeing the slot | consumers resume past the wedge; no payload existed to lose |
 //! | consumer dies inside an [`mpmc`] claim (slot seq parked at `p+1`) | claimed-unconsumed payload wedges the slot's next lap | claimant board (`readers[idx]`) | `repair_dead` salvages the payload to the runtime (re-enqueued — the dead claim never completed, so exactly-once holds) and frees the slot | payload redelivered to a live consumer |
+//! | home member dies inside a [`lanes`] pop (`ack` odd, `home_busy` parked) | half-consumed payload; thieves/rebalancers spin-bounded on the flag | watchdog + liveness epoch | `ShardedRing::repair_dead`: roll `ack` back (payload re-exposed), clear the flag, unassign the lane; caller rebalances | payload redelivered to the lane's next home |
+//! | thief dies mid-steal (claim word wedged at `member+1`) | stage **uncommitted** (`ack` never advanced) or **committed** (stash holds the only copies) | claimant board (`thief` word) + stash `committed` mark, stamped kill-atomically around the single `ack` advance | uncommitted → discard the stage (payloads still in the lane); committed → salvage every undelivered stash entry back to the runtime; either way clear the claim word | lane unwedges; exactly-once holds (≤1 boundary delivery per kill, same budget as [`mpmc`]) |
 //! | OS thread **abandons** its node (parks forever; no kill event) | silence — structures consistent but the stream wedges | heartbeat watchdog: per-node progress epochs scanned against a silence deadline with suspect→confirm hysteresis (`McapiRuntime::watchdog_scan_once`) | automatic `declare_node_dead` runs the full repair pipeline above; the node's liveness epoch goes odd, **fencing** every later send/claim from the zombie (`NodeFenced`, fail-fast, no ring state touched) | blocked peers unblock via poison; a woken zombie gets `NodeFenced` instead of corrupting the repaired stream |
 //! | fenced node restarts (`McapiRuntime::rejoin`) | stale epoch | epoch parity | epoch bumps to the next even value; heartbeat lane resets so the watchdog re-baselines instead of instantly re-confirming | fresh endpoints/channels work; the old generation stays fenced |
 //!
@@ -99,6 +108,7 @@ pub mod backoff;
 pub mod bitset;
 pub mod freelist;
 pub mod fsm;
+pub mod lanes;
 pub mod mem;
 pub mod mpmc;
 pub mod nbb;
@@ -109,6 +119,7 @@ pub use backoff::Backoff;
 pub use bitset::BitSet;
 pub use freelist::FreeList;
 pub use fsm::AtomicFsm;
+pub use lanes::{LaneRepair, ShardRecvError, ShardSendError, ShardedRing, STEAL_BATCH};
 pub use mem::{Atom32, Atom64, CachePadded, KernelLock, RealWorld, World};
 pub use mpmc::{MpmcError, MpmcRing};
 pub use nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};

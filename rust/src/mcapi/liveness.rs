@@ -259,6 +259,73 @@ impl Watchdog {
         }
         report
     }
+
+    /// Consume this scanner into a background thread that calls
+    /// [`crate::mcapi::McapiRuntime::watchdog_scan_once`] every
+    /// `period` — the built-in death-detection loop for real-plane
+    /// runtimes, so harnesses no longer hand-drive the scan (sim-plane
+    /// runtimes still must: the repair pipeline is priced and needs a
+    /// live simulated task).
+    ///
+    /// Shutdown is clean on both exits: the thread holds only a
+    /// [`Weak`] runtime reference, so dropping the last runtime `Arc`
+    /// ends the loop by itself, and the returned [`ScannerHandle`]
+    /// stops-and-joins on drop (or explicitly via
+    /// [`ScannerHandle::stop`]). `period` is slept in ≤ 5 ms slices so
+    /// either exit is prompt regardless of the scan period.
+    pub fn spawn_scanner(
+        self,
+        rt: &std::sync::Arc<crate::mcapi::McapiRuntime<crate::lockfree::mem::RealWorld>>,
+        period: std::time::Duration,
+    ) -> ScannerHandle {
+        use std::sync::atomic::AtomicBool;
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let weak = std::sync::Arc::downgrade(rt);
+        let join = std::thread::spawn(move || {
+            let mut wd = self;
+            while !flag.load(Ordering::Acquire) {
+                // Upgrade per scan: the runtime dropping out from under
+                // us IS the shutdown signal for abandoned handles.
+                let Some(rt) = weak.upgrade() else { break };
+                rt.watchdog_scan_once(&mut wd);
+                drop(rt);
+                let mut left = period;
+                while !flag.load(Ordering::Acquire) && !left.is_zero() {
+                    let slice = left.min(std::time::Duration::from_millis(5));
+                    std::thread::sleep(slice);
+                    left = left.saturating_sub(slice);
+                }
+            }
+        });
+        ScannerHandle { stop, join: Some(join) }
+    }
+}
+
+/// Handle to a background scanner from [`Watchdog::spawn_scanner`].
+/// Dropping it stops and joins the thread; leak it (`std::mem::forget`)
+/// only if the runtime's own drop should end the loop instead.
+#[derive(Debug)]
+pub struct ScannerHandle {
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScannerHandle {
+    /// Signal the scan loop to exit and join the thread (idempotent;
+    /// also what `Drop` does).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ScannerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
 }
 
 /// Timeout slicing for the `*_deadline` send/recv variants: first slice

@@ -135,6 +135,23 @@ impl WaitCell {
             W::futex_wake(self.token(), usize::MAX);
         }
     }
+
+    /// Wake **one** parked waiter — the targeted doorbell for group
+    /// sends, where one message can only ever satisfy one member.
+    /// `wake_all` there was a thundering herd: every parked member woke
+    /// to race for a single entry, and the losers paid a full
+    /// park/unpark round trip per message. The seq bump still
+    /// invalidates every in-flight `prepare` snapshot, so the lost-wake
+    /// race is unchanged; a woken member that finds nothing re-rings
+    /// the bell ([`ctr::WAKE_MISSES`]) so a wake is never absorbed by a
+    /// member that didn't need it. Teardown/poison/repair paths keep
+    /// broadcasting.
+    fn wake_one<W: World>(&self) {
+        if self.waiters.load(Ordering::SeqCst) != 0 {
+            self.seq.fetch_add(1, Ordering::SeqCst);
+            W::futex_wake(self.token(), 1);
+        }
+    }
 }
 
 enum QueueImpl<W: World> {
@@ -501,19 +518,20 @@ impl<W: World> McapiRuntime<W> {
         }
         self.stat_leases_reclaimed.fetch_add(reclaimed as u64, Ordering::Relaxed);
         obs::add(obs::ctr::LEASES_RECLAIMED, reclaimed as u64);
-        // 2.5) Repair MPMC consumer groups: tombstone the dead node's
-        //      claimed-unpublished producer slots (consumers skip them;
-        //      the wedged buffer itself came back in the custody sweep
-        //      above) and re-enqueue the payloads its dead consumers
-        //      claimed but never consumed — the dead claim never
-        //      completed, so exactly-once is preserved; distribution
-        //      order across consumers was never guaranteed.
+        // 2.5) Repair MPMC consumer groups: roll back the dead node's
+        //      torn lane insert / torn home pop, clear its wedged steal
+        //      claim, re-enqueue the stolen payloads it committed but
+        //      never delivered (exactly-once is preserved — the dead
+        //      member never handed them to a caller), and re-deal its
+        //      orphaned home lanes across the surviving members
+        //      (heartbeat-aware group rebalancing: the watchdog's
+        //      confirm lands here).
         for (i, epslot) in self.endpoints.iter().enumerate() {
             let Some(g) = epslot.group.get() else {
                 continue;
             };
-            let (tombstoned, salvaged) = g.repair_dead(node as u32);
-            if tombstoned == 0 && salvaged.is_empty() {
+            let (repairs, salvaged) = g.repair_dead(node as u32);
+            if repairs == 0 && salvaged.is_empty() {
                 continue;
             }
             for e in salvaged {
@@ -708,10 +726,14 @@ impl<W: World> McapiRuntime<W> {
         }
         let slot = self.active_ep(ep)?;
         let group = slot.group.get_or_init(|| {
-            // Sized to the whole flag-board composition it replaces
-            // (every priority × producer lane), so the migration below
-            // always fits and steady-state capacity is comparable.
-            let g = ConsumerGroup::new(PRIORITIES * self.cfg.max_nodes.max(1) * self.cfg.nbb_capacity);
+            // One SPSC lane per node slot; each lane sized to the whole
+            // flag-board composition it replaces (every priority ×
+            // capacity), so the migration below always fits and
+            // steady-state capacity is comparable.
+            let g = ConsumerGroup::new(
+                self.cfg.max_nodes.max(1),
+                PRIORITIES * self.cfg.nbb_capacity,
+            );
             g.set_trace_id(ep as u32);
             g
         });
@@ -919,9 +941,12 @@ impl<W: World> McapiRuntime<W> {
                     return match g.push(entry) {
                         Ok(()) => {
                             self.buffer_holder[lease.index].store(0, Ordering::Relaxed);
-                            // Doorbell broadcast: every parked consumer
-                            // re-polls; exactly one claims the entry.
-                            self.ep_waits[ep].wake_all::<W>();
+                            // Targeted doorbell: one entry satisfies one
+                            // member, so wake exactly one — the PR 5
+                            // broadcast woke the whole group to race it.
+                            // A member that wakes to nothing re-rings
+                            // (`wake.misses`), so no wakeup is lost.
+                            self.ep_waits[ep].wake_one::<W>();
                             Ok(())
                         }
                         Err((s, _)) => {
@@ -1002,10 +1027,32 @@ impl<W: World> McapiRuntime<W> {
                     // salvage from it again.
                     self.fence_check(who as usize)?;
                     self.hb.bump(who as usize);
-                    let entry = g.pop(who)?;
+                    let entry = match g.pop(who) {
+                        Ok(e) => e,
+                        Err(s) => {
+                            // Wake-one fallback: this member was rung
+                            // but a peer drained the work first. Pass
+                            // the doorbell on so a member that still
+                            // has work parked behind us is not lost —
+                            // the counter proves the herd fix never
+                            // drops a wakeup.
+                            if s == Status::WouldBlock && g.len() > 0 {
+                                obs::bump(obs::ctr::WAKE_MISSES);
+                                self.ep_waits[ep].wake_one::<W>();
+                            }
+                            return Err(s);
+                        }
+                    };
                     let n = self.consume_entry(&entry, out, who as usize);
-                    // Space freed: wake senders parked on a full ring.
-                    self.ep_waits[ep].wake_all::<W>();
+                    // Space freed: wake senders parked on a full lane.
+                    // Backlog remains → chain the doorbell to the next
+                    // parked member (wake-one delivers one wake per
+                    // entry; the chain keeps the group saturated).
+                    if g.len() > 0 {
+                        self.ep_waits[ep].wake_one::<W>();
+                    } else {
+                        self.ep_waits[ep].wake_all::<W>();
+                    }
                     return Ok(n);
                 }
                 let QueueImpl::LockFree(q) = &slot.queue else {
@@ -1081,8 +1128,9 @@ impl<W: World> McapiRuntime<W> {
                 let QueueImpl::LockFree(q) = &self.endpoints[ep].queue else {
                     unreachable!("lockfree backend uses NBB queues");
                 };
-                // MPMC profile: one shared-counter CAS claims the whole
-                // run in the group ring (`MpmcRing::send_batch`).
+                // MPMC profile: one enter/exit counter pair on the
+                // sender's own lane covers the whole run
+                // (`ShardedRing::send_batch` — stores only, no CAS).
                 let result = match self.endpoints[ep].group.get().filter(|g| g.active()) {
                     Some(g) => g.push_batch(&mut entries),
                     None => q.push_batch(&mut entries),

@@ -10,8 +10,8 @@ use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 
 use crate::lockfree::bitset::BitSet;
+use crate::lockfree::lanes::{ShardRecvError, ShardSendError, ShardedRing};
 use crate::lockfree::mem::World;
-use crate::lockfree::mpmc::{MpmcError, MpmcRing};
 use crate::lockfree::nbb::{BatchStatus, InsertStatus, Nbb, ReadStatus};
 use crate::mcapi::types::{Status, PRIORITIES};
 use crate::obs;
@@ -514,20 +514,27 @@ thread_local! {
 /// entry is delivered to **exactly one** consumer, unordered across
 /// consumers (each consumer sees its own claims in claim order).
 ///
-/// This replaces the [`LockFreeQueue`] single-consumer gate for the
-/// MPMC endpoint profile: entries travel through one shared
-/// [`MpmcRing`] (slot-sequence claim/publish), encoded with the
-/// fixed [`ENTRY_WIRE_LEN`] layout. The trade against the flag-board
-/// composition is deliberate and documented: cross-producer priority
-/// precedence is dropped (claim order rules; the priority still
-/// travels in the entry metadata) in exchange for contended-but-safe
-/// multi-consumer pops whose empty-poll cost stays O(1) words.
+/// Contention-adaptive backing: entries travel through a
+/// [`ShardedRing`] — one SPSC lane per sender node (the cached-peer
+/// NBB counter protocol), a home-lane assignment per attached member,
+/// and lock-free batch work-stealing when a member's home lanes run
+/// dry. In the steady state a member drains its home lanes with
+/// **zero shared-counter RMWs** (sim-asserted); the shared steal
+/// cursor is the only contended word and is touched only on the dry
+/// path. The shared-CAS [`crate::lockfree::mpmc::MpmcRing`] remains as
+/// the measured baseline (`mpmc_steal_vs_shared`).
 ///
-/// Claimant identities (`who`) are **dense node slots** on both
-/// sides, so [`ConsumerGroup::repair_dead`] can map a dead node
-/// straight onto its wedged claims (PR 3 recovery machinery).
+/// The trade against the flag-board composition is unchanged from the
+/// shared-ring generation: cross-producer priority precedence is
+/// dropped (per-lane FIFO rules; the priority still travels in the
+/// entry metadata) in exchange for multi-consumer pops.
+///
+/// Producer lanes and consumer identities (`who`) are **dense node
+/// slots** on both sides, so [`ConsumerGroup::repair_dead`] can map a
+/// dead node straight onto all four roles it can hold (producer, home
+/// member, thief, stash owner — PR 3 recovery machinery).
 pub struct ConsumerGroup<W: World> {
-    ring: MpmcRing<W>,
+    ring: ShardedRing<W>,
     /// Consumers attached so far. Host atomic: the runtime's
     /// `group.active()` check on every send/recv must stay unpriced
     /// so the pinned SPSC sim gates remain byte-identical.
@@ -535,11 +542,12 @@ pub struct ConsumerGroup<W: World> {
 }
 
 impl<W: World> ConsumerGroup<W> {
-    /// Group over a ring of `cap` entry slots (`cap >= 2` enforced by
-    /// the ring).
-    pub fn new(cap: usize) -> Self {
+    /// Group over `nodes` per-producer lanes of `cap` entry slots each
+    /// (`nodes` is the dense node-slot space: every node can send on
+    /// its own lane and attach as a member).
+    pub fn new(nodes: usize, cap: usize) -> Self {
         ConsumerGroup {
-            ring: MpmcRing::new(cap.max(2), ENTRY_WIRE_LEN),
+            ring: ShardedRing::new(nodes.max(1), nodes.max(1), cap.max(2), ENTRY_WIRE_LEN),
             attached: std::sync::atomic::AtomicU32::new(0),
         }
     }
@@ -553,10 +561,27 @@ impl<W: World> ConsumerGroup<W> {
 
     /// Register the calling thread as a consumer with dense node slot
     /// `node`; returns the attached-consumer count. Sets the
-    /// thread-local pop identity.
+    /// thread-local pop identity and deals the new member a fair share
+    /// of home lanes (live rebalance).
     pub fn attach(&self, node: u32) -> u32 {
         GROUP_WHO.with(|w| w.set(node));
-        self.attached.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1
+        let n = self.attached.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+        self.ring.attach_member(node);
+        n
+    }
+
+    /// Re-deal home lanes across the currently attached members —
+    /// called after a member is fenced/declared dead so its orphaned
+    /// lanes get live homes (they remain stealable in the interim, so
+    /// this is a latency fix, not a correctness one).
+    pub fn rebalance(&self) {
+        self.ring.rebalance();
+    }
+
+    /// Home member of producer lane `lane` (`None` = unassigned) —
+    /// rebalance observability for tests and the trace CLI.
+    pub fn home_of(&self, lane: usize) -> Option<u32> {
+        self.ring.home_of(lane)
     }
 
     /// True once any consumer has attached — the runtime's routing
@@ -579,69 +604,80 @@ impl<W: World> ConsumerGroup<W> {
         })
     }
 
-    /// Producer-side insert; the claimant board is stamped with the
-    /// entry's `from_node`. Full rings hand the entry back so the
-    /// caller can abort its buffer lease.
+    /// Producer-side insert onto the sender's **own lane**
+    /// (`e.from_node`) — the SPSC fast path: stores only, no claim
+    /// CAS. Full lanes hand the entry back so the caller can abort
+    /// its buffer lease.
     pub fn push(&self, e: Entry) -> Result<(), (Status, Entry)> {
         match self.ring.send(e.from_node, &e.encode()) {
             Ok(()) => Ok(()),
-            Err(MpmcError::Full) => Err((Status::WouldBlock, e)),
-            Err(MpmcError::Empty) => unreachable!("send never reports Empty"),
+            Err(ShardSendError::Full | ShardSendError::FullButConsumerReading) => {
+                Err((Status::WouldBlock, e))
+            }
         }
     }
 
-    /// Producer-side batched insert: one shared-counter CAS claims the
-    /// whole run ([`MpmcRing::send_batch`]). Enqueued entries drain
-    /// from the front of `entries`; returns how many went in (`Err`
-    /// only when none did).
+    /// Producer-side batched insert: one enter/exit counter pair on
+    /// the sender's lane amortized over the whole prefix
+    /// ([`ShardedRing::send_batch`]). Enqueued entries drain from the
+    /// front of `entries`; returns how many went in (`Err` only when
+    /// none did).
     pub fn push_batch(&self, entries: &mut Vec<Entry>) -> Result<usize, Status> {
         let Some(first) = entries.first() else {
             return Ok(0);
         };
-        let who = first.from_node;
+        let lane = first.from_node;
         let encoded: Vec<[u8; ENTRY_WIRE_LEN]> = entries.iter().map(Entry::encode).collect();
         let refs: Vec<&[u8]> = encoded.iter().map(|b| b.as_slice()).collect();
-        match self.ring.send_batch(who, &refs) {
+        match self.ring.send_batch(lane, &refs) {
             Ok(n) => {
                 entries.drain(..n);
                 Ok(n)
             }
-            Err(MpmcError::Full) => Err(Status::WouldBlock),
-            Err(MpmcError::Empty) => unreachable!("send_batch never reports Empty"),
+            Err(ShardSendError::Full | ShardSendError::FullButConsumerReading) => {
+                Err(Status::WouldBlock)
+            }
         }
     }
 
-    /// Consumer-side pop as claimant `who` (the runtime passes the
+    /// Consumer-side pop as member `who` (the runtime passes the
     /// thread's [`ConsumerGroup::current_who`], falling back to the
-    /// endpoint owner).
+    /// endpoint owner): staged steals, then home lanes (zero shared
+    /// RMWs), then a batch steal from the most backlogged lane.
     pub fn pop(&self, who: u32) -> Result<Entry, Status> {
-        match self.ring.recv_with(who, |b| Entry::decode(b)) {
+        match self.ring.recv_as(who, |b| Entry::decode(b)) {
             Ok(Some(e)) => Ok(e),
             Ok(None) => unreachable!("group slots are always ENTRY_WIRE_LEN"),
-            Err(MpmcError::Empty) => Err(Status::WouldBlock),
-            Err(MpmcError::Full) => unreachable!("recv never reports Full"),
+            // Both flavours decay to WouldBlock here: the runtime's
+            // bounded-backoff driver already retries PeerActive-class
+            // statuses immediately.
+            Err(ShardRecvError::Empty | ShardRecvError::PeerActive) => Err(Status::WouldBlock),
         }
     }
 
-    /// Entries committed but not yet claimed (approximate; unpriced
-    /// peeks, safe from watchdogs).
+    /// Entries committed but not yet delivered (lanes + stashes;
+    /// approximate, unpriced peeks, safe from watchdogs).
     pub fn len(&self) -> usize {
         self.ring.len()
     }
 
-    /// Repair every wedged claim dead node `node` left behind:
-    /// tombstone its unpublished producer slots, salvage its
-    /// unconsumed payloads back to the caller for re-enqueue (the dead
-    /// claim never completed, so exactly-once is preserved). Returns
-    /// `(tombstoned, salvaged entries)`.
+    /// Repair every transient state dead node `node` left behind, in
+    /// all four roles (producer, home member, thief, stash owner),
+    /// then re-deal its orphaned home lanes across the surviving
+    /// members. Committed-but-undelivered stolen entries come back for
+    /// re-enqueue (the dead member never delivered them, so
+    /// exactly-once is preserved). Returns `(repairs, salvaged
+    /// entries)`.
     pub fn repair_dead(&self, node: u32) -> (usize, Vec<Entry>) {
         let mut salvaged = Vec::new();
-        let (tombstoned, _) = self.ring.repair_dead(node, |b| {
+        let r = self.ring.repair_dead(node, |b| {
             if let Some(e) = Entry::decode(b) {
                 salvaged.push(e);
             }
         });
-        (tombstoned, salvaged)
+        self.ring.rebalance();
+        let repairs = r.torn_inserts + r.torn_pops + r.cleared_claims + r.discarded_stages;
+        (repairs, salvaged)
     }
 }
 
@@ -925,7 +961,7 @@ mod tests {
 
     #[test]
     fn consumer_group_distributes_exactly_once() {
-        let g = ConsumerGroup::<RealWorld>::new(8);
+        let g = ConsumerGroup::<RealWorld>::new(8, 8);
         assert!(!g.active());
         assert_eq!(g.attach(2), 1);
         assert_eq!(g.attach(3), 2);
@@ -935,20 +971,27 @@ mod tests {
             g.push(Entry::scalar(i, 1)).unwrap();
         }
         assert_eq!(g.len(), 6);
-        // Two claimants interleave; the union is exactly the sent set.
+        // Two members interleave (one may batch-steal the whole lane);
+        // the union is exactly the sent set, each entry delivered once.
         let mut got = Vec::new();
-        for turn in 0..6 {
+        let mut turn = 0;
+        while got.len() < 6 {
             let who = if turn % 2 == 0 { 2 } else { 3 };
-            got.push(g.pop(who).unwrap().scalar);
+            turn += 1;
+            if let Ok(e) = g.pop(who) {
+                got.push(e.scalar);
+            }
+            assert!(turn < 100, "group never drained");
         }
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
         assert_eq!(g.pop(2), Err(Status::WouldBlock));
+        assert_eq!(g.pop(3), Err(Status::WouldBlock));
     }
 
     #[test]
     fn consumer_group_full_hands_entry_back() {
-        let g = ConsumerGroup::<RealWorld>::new(2);
+        let g = ConsumerGroup::<RealWorld>::new(2, 2);
         g.push(Entry::scalar(1, 0)).unwrap();
         g.push(Entry::scalar(2, 0)).unwrap();
         let (s, back) = g.push(Entry::scalar(3, 0)).unwrap_err();
@@ -958,12 +1001,13 @@ mod tests {
 
     #[test]
     fn consumer_group_batch_push_drains_prefix() {
-        let g = ConsumerGroup::<RealWorld>::new(4);
+        let g = ConsumerGroup::<RealWorld>::new(4, 4);
         let mut entries: Vec<Entry> = (0..6u64).map(|i| Entry::scalar(i, 1)).collect();
         assert_eq!(g.push_batch(&mut entries), Ok(4));
         assert_eq!(entries.len(), 2, "overflow stays with the caller");
         assert_eq!(g.push_batch(&mut entries), Err(Status::WouldBlock));
-        let mut got: Vec<u64> = (0..4).map(|_| g.pop(9).unwrap().scalar).collect();
+        // An unattached in-range identity can still drain via stealing.
+        let mut got: Vec<u64> = (0..4).map(|_| g.pop(3).unwrap().scalar).collect();
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3]);
         let mut empty = Vec::new();
@@ -971,18 +1015,35 @@ mod tests {
     }
 
     #[test]
-    fn consumer_group_repair_salvages_dead_consumer_claim() {
-        let g = ConsumerGroup::<RealWorld>::new(4);
+    fn consumer_group_repair_salvages_dead_thief_stash() {
+        let g = ConsumerGroup::<RealWorld>::new(8, 4);
         g.push(Entry::scalar(41, 1)).unwrap();
         g.push(Entry::scalar(42, 1)).unwrap();
-        // Consumer node 6 claims the head entry and dies unconsumed.
-        assert!(g.ring.claim_and_abandon_consumer(6));
-        assert_eq!(g.pop(7).unwrap().scalar, 42);
-        let (tomb, salvaged) = g.repair_dead(6);
-        assert_eq!(tomb, 0);
-        assert_eq!(salvaged.len(), 1);
-        assert_eq!(salvaged[0].scalar, 41);
-        // Live peers' claims are untouched.
+        // Member 6 steals the lane's batch, delivers one entry, then
+        // dies with the second still staged in its stash.
+        assert_eq!(g.pop(6).unwrap().scalar, 41);
+        let (repairs, salvaged) = g.repair_dead(6);
+        assert_eq!(repairs, 0, "clean steal leaves no wedged claims");
+        assert_eq!(salvaged.len(), 1, "undelivered stash entry salvaged");
+        assert_eq!(salvaged[0].scalar, 42);
+        // Live peers are untouched.
         assert_eq!(g.repair_dead(7), (0, Vec::new()));
+    }
+
+    #[test]
+    fn consumer_group_rebalances_on_attach_and_repair() {
+        let g = ConsumerGroup::<RealWorld>::new(4, 4);
+        g.attach(0);
+        assert_eq!(g.home_of(0), Some(0));
+        assert_eq!(g.home_of(3), Some(0));
+        g.attach(1);
+        // Round-robin over {0, 1}: lanes alternate homes.
+        assert_eq!(g.home_of(0), Some(0));
+        assert_eq!(g.home_of(1), Some(1));
+        // Member 0 dies: its lanes re-home onto the survivor.
+        g.repair_dead(0);
+        for lane in 0..4 {
+            assert_eq!(g.home_of(lane), Some(1), "orphaned lane re-homed");
+        }
     }
 }

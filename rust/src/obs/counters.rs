@@ -64,9 +64,14 @@ pub mod ctr {
     pub const LIVENESS_FALSE_SUSPECTS: usize = 20;
     /// Operations rejected with `Status::NodeFenced`.
     pub const LIVENESS_FENCE_REJECTS: usize = 21;
+    /// Doorbell wake-one fallbacks: a woken member found nothing and
+    /// re-rang the bell (proves wake-one loses no wakeups).
+    pub const WAKE_MISSES: usize = 22;
+    /// Sharded-MPMC steal batches committed (one per `ack` advance).
+    pub const MPMC_STEALS: usize = 23;
 
     /// `(id, name)` for every builtin, in registration order.
-    pub const BUILTIN: [(usize, &str); 22] = [
+    pub const BUILTIN: [(usize, &str); 24] = [
         (NBB_INSERT, "nbb.insert"),
         (NBB_READ, "nbb.read"),
         (NBB_FULL, "nbb.full"),
@@ -89,6 +94,8 @@ pub mod ctr {
         (LIVENESS_CONFIRMS, "liveness.confirms"),
         (LIVENESS_FALSE_SUSPECTS, "liveness.false_suspects"),
         (LIVENESS_FENCE_REJECTS, "liveness.fence_rejects"),
+        (WAKE_MISSES, "wake.misses"),
+        (MPMC_STEALS, "mpmc.steals"),
     ];
 }
 

@@ -65,6 +65,10 @@ pub struct MachineStats {
     pub migrations: u64,
     /// Kernel entries (contended lock paths, wakes).
     pub syscalls: u64,
+    /// Atomic read-modify-write operations (CAS / fetch_add / fetch_or /
+    /// fetch_and) across all tasks — the shared-counter contention signal
+    /// the work-stealing gates assert on.
+    pub rmws: u64,
 }
 
 impl MachineStats {
@@ -98,6 +102,9 @@ struct Tcb {
     quantum_start: u64,
     /// Priced operations executed so far (the fault-plan index space).
     ops: u64,
+    /// Atomic read-modify-write operations executed so far (subset of
+    /// `ops`); read by the zero-CAS steady-state gates.
+    rmws: u64,
     /// Virtual deadline for a timed futex wait, if any.
     wake_at: Option<u64>,
 }
@@ -223,6 +230,7 @@ impl Machine {
                 state: TaskState::Ready,
                 quantum_start: 0,
                 ops: 0,
+                rmws: 0,
                 wake_at: None,
             });
             st.cores[core].ready.push_back(id);
@@ -261,6 +269,13 @@ impl Machine {
     /// used by fault-sweep probes to measure an op-index window).
     pub fn task_ops(&self, id: usize) -> u64 {
         lock(&self.shared).tasks[id].ops
+    }
+
+    /// Atomic RMW operations task `id` has executed so far (unpriced
+    /// read — the zero-shared-CAS steady-state gates diff this across a
+    /// drain window; 0 for unknown ids).
+    pub fn task_rmws(&self, id: usize) -> u64 {
+        lock(&self.shared).tasks.get(id).map_or(0, |t| t.rmws)
     }
 
     /// Virtual clock of task `id` (unpriced read — the timestamp source
@@ -572,6 +587,8 @@ impl OpCtx<'_> {
         }
         if rmw {
             self.st.tasks[self.me].clock += self.cfg.mem.rmw_extra_ns;
+            self.st.tasks[self.me].rmws += 1;
+            self.st.stats.rmws += 1;
         }
         if write && !rmw {
             // Plain store invalidates other sharers (no extra latency charge

@@ -91,6 +91,19 @@ impl SimWorld {
         })
     }
 
+    /// Atomic-RMW count of the calling task (unpriced; the work-stealing
+    /// gates diff it across a home-lane drain to assert the steady state
+    /// performs zero shared-counter CAS operations).
+    pub fn rmw_count() -> u64 {
+        CTX.with(|c| {
+            let borrow = c.borrow();
+            let (machine, id) = borrow
+                .as_ref()
+                .expect("SimWorld operation outside a simulated task");
+            machine.task_rmws(*id)
+        })
+    }
+
     /// Whether `task` on the calling task's machine has finished —
     /// normally or by injected kill (unpriced). Watchdog tasks poll it
     /// to detect a peer's death without perturbing a fault sweep's op

@@ -100,6 +100,22 @@ fn stall_sweep_covers_batched_paths() {
 }
 
 #[test]
+fn kill_consumer_at_every_op_during_a_steal_storm() {
+    // Single-producer hot lane + extra consumers: the swept victim's
+    // first bracketed claim is a batch *steal* (its home deal misses
+    // the hot lane), so every kill point lands inside the thief
+    // protocol — claim CAS, stash staging, the committed flag, the
+    // amortized ack advance. The judge is the same exactly-once
+    // set-difference as every other sweep: per-role kill budgets bound
+    // missing/extra frames, salvaged stash entries are re-enqueued.
+    use mcapi::coordinator::{run_mpmc_steal_kill_sweep, MpmcOpts};
+    let r = run_mpmc_steal_kill_sweep(&MpmcOpts { messages: 6, ..Default::default() });
+    assert!(r.pass, "steal-storm kill sweep failed:\n{}", r.text);
+    let points = r.text.lines().filter(|l| l.trim_start().starts_with("kill@")).count();
+    assert!(points >= 4, "suspiciously small sweep ({points} points):\n{}", r.text);
+}
+
+#[test]
 fn kill_consumer_inside_a_batched_drain_loses_at_most_one_batch() {
     // The batched drain acks a whole run with one counter pair, so a
     // consumer killed at the ack boundary may take up to one batch with

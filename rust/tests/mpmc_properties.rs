@@ -5,8 +5,10 @@
 //! duplicates, no torn frames, no leaked leases), kill-point sweeps
 //! with either role as the victim (dead-consumer claims salvaged and
 //! re-enqueued, dead-producer claims tombstoned), O(1) empty-poll cost
-//! on the MPMC ring independent of capacity, and the doorbell
-//! broadcast: parked group consumers all wake on a send.
+//! on the MPMC ring independent of capacity, the targeted doorbell
+//! (wake-one with re-ring-on-miss: parked group consumers each claim a
+//! frame, none sleeps through one), and fenced-member lane rebalance:
+//! a declared-dead member's home lanes re-home onto survivors.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -22,7 +24,7 @@ use mcapi::sim::{Machine, MachineCfg, SimWorld};
 
 #[test]
 fn nxm_sim_stress_delivers_exactly_once() {
-    let opts = MpmcOpts { producers: 3, consumers: 3, messages: 16, seed: 1 };
+    let opts = MpmcOpts { producers: 3, consumers: 3, messages: 16, ..Default::default() };
     let r = run_mpmc_stress(&opts);
     assert!(r.pass, "stress failed:\n{}", r.text);
     assert_eq!(r.delivered, 48, "every frame in-band, exactly once:\n{}", r.text);
@@ -111,7 +113,9 @@ fn parked_group_consumers_wake_on_send_broadcast() {
 
     let mut handles = Vec::new();
     // Two consumers: attach, then block in `wait_recv` until the
-    // producer's doorbell broadcast (`WaitCell::wake_all`) lands.
+    // producer's targeted doorbell (`WaitCell::wake_one`) lands — the
+    // woken member chains a wake to the next parked peer when backlog
+    // remains, so both claim a frame without a thundering herd.
     for c in 0..2usize {
         let (rt, ready, ep_slot) = (rt.clone(), ready.clone(), ep_slot.clone());
         let (attached, got) = (attached.clone(), got.clone());
@@ -156,4 +160,112 @@ fn parked_group_consumers_wake_on_send_broadcast() {
     let mut seen = got.lock().unwrap().clone();
     seen.sort_unstable();
     assert_eq!(seen, vec![7, 9], "each parked consumer woke and claimed one message");
+}
+
+#[test]
+fn fenced_member_lanes_rehome_and_survivor_drains() {
+    // Two members attach; half the producer lanes are dealt to each.
+    // Member B is then fenced (`declare_node_dead`, the watchdog's
+    // confirm path) *before* anyone pops: its home lanes must re-home
+    // onto the survivor, which drains the complete stream exactly once
+    // — no frame is stranded on a lane homed to a corpse.
+    const MSGS: u8 = 6;
+    let m = Machine::new(MachineCfg::new(
+        4,
+        OsProfile::linux_rt(),
+        AffinityMode::PinnedSpread,
+    ));
+    let cfg = RuntimeCfg {
+        backend: BackendKind::LockFree,
+        max_nodes: 4,
+        nbb_capacity: 8,
+        pool_buffers: 16,
+        ..Default::default()
+    };
+    let rt = McapiRuntime::<SimWorld>::new(cfg);
+    let dst = EndpointId::new(0, 1, 1);
+    let ready = Arc::new(AtomicBool::new(false));
+    let ep_slot = Arc::new(AtomicUsize::new(usize::MAX));
+    let attached = Arc::new(AtomicU32::new(0));
+    let fenced = Arc::new(AtomicBool::new(false));
+    let got = Arc::new(Mutex::new(Vec::new()));
+
+    let mut handles = Vec::new();
+    // Survivor (node 2): attaches, then waits for the fence before
+    // draining so every frame it claims crosses the rebalanced deal.
+    {
+        let (rt, ready, ep_slot) = (rt.clone(), ready.clone(), ep_slot.clone());
+        let (attached, fenced, got) = (attached.clone(), fenced.clone(), got.clone());
+        handles.push(m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let ep = ep_slot.load(Ordering::SeqCst);
+            rt.endpoint_attach_consumer(ep, 2).unwrap();
+            attached.fetch_add(1, Ordering::SeqCst);
+            while !fenced.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let mut seen = Vec::new();
+            while seen.len() < MSGS as usize {
+                let h = rt.msg_recv_i(ep).unwrap();
+                let mut buf = [0u8; 16];
+                let n = rt.wait_recv(h, &mut buf, 50_000_000).unwrap();
+                assert_eq!(n, 1);
+                seen.push(buf[0]);
+            }
+            got.lock().unwrap().extend(seen);
+        }));
+    }
+    // Doomed member (node 3): attaches so the deal splits the lanes,
+    // never pops, and is fenced by the producer once the stream is in.
+    {
+        let (rt, ready, ep_slot, attached) =
+            (rt.clone(), ready.clone(), ep_slot.clone(), attached.clone());
+        handles.push(m.spawn(move || {
+            while !ready.load(Ordering::SeqCst) {
+                SimWorld::yield_now();
+            }
+            let ep = ep_slot.load(Ordering::SeqCst);
+            rt.endpoint_attach_consumer(ep, 3).unwrap();
+            attached.fetch_add(1, Ordering::SeqCst);
+        }));
+    }
+    // Producer: sends the whole stream *as node 1* with both members
+    // attached. The round-robin deal over the sorted member set {2, 3}
+    // homes lane 1 to member 3 — the doomed one — so every frame lands
+    // on a lane owned by the future corpse. The producer then declares
+    // member 3 dead (recovery re-deals its lanes) and only after that
+    // releases the survivor.
+    {
+        let (rt, ready, ep_slot) = (rt.clone(), ready.clone(), ep_slot.clone());
+        let (attached, fenced) = (attached.clone(), fenced.clone());
+        handles.push(m.spawn(move || {
+            let ep = rt.create_endpoint(dst, 1).unwrap();
+            ep_slot.store(ep, Ordering::SeqCst);
+            ready.store(true, Ordering::SeqCst);
+            while attached.load(Ordering::SeqCst) < 2 {
+                SimWorld::yield_now();
+            }
+            for b in 0..MSGS {
+                loop {
+                    match rt.msg_send(1, dst, &[b], 0) {
+                        Ok(()) => break,
+                        Err(s) if s.is_would_block() => SimWorld::yield_now(),
+                        Err(e) => panic!("send failed: {e:?}"),
+                    }
+                }
+            }
+            rt.declare_node_dead(3);
+            fenced.store(true, Ordering::SeqCst);
+        }));
+    }
+    m.run(handles);
+    let mut seen = got.lock().unwrap().clone();
+    seen.sort_unstable();
+    assert_eq!(
+        seen,
+        (0..MSGS).collect::<Vec<_>>(),
+        "survivor must drain the full stream exactly once after the re-deal"
+    );
 }

@@ -1,0 +1,154 @@
+//! Work-stealing acceptance gate (required by CI).
+//!
+//! Sim-asserted properties of the contention-adaptive MPMC plane
+//! (per-producer SPSC lanes + home-lane assignment + batch stealing):
+//!
+//! * **Zero-RMW steady state** — a group member draining its home
+//!   lanes performs *zero* shared-counter CAS/RMW operations (the
+//!   priced-op accounting in the simulator proves it, not inspection).
+//! * The dry path *does* pay RMWs (steal cursor + thief claim), so the
+//!   zero above is a property of the protocol, not of the meter.
+//! * Steal-storm exactly-once: one hot lane, many consumers, every
+//!   frame delivered exactly once through batch steals.
+//! * Skewed-consumer exactly-once: a deliberately slowed member's
+//!   backlog is absorbed by its peers without loss or duplication.
+//! * The `wake.misses` / `mpmc.steals` counters are registered in the
+//!   obs plane (the targeted-doorbell re-ring proof instrument).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use mcapi::coordinator::{run_mpmc_skewed, run_mpmc_steal_storm, MpmcOpts};
+use mcapi::lockfree::ShardedRing;
+use mcapi::os::{AffinityMode, OsProfile};
+use mcapi::sim::{Machine, MachineCfg, SimWorld};
+
+/// Payload codec for the raw-ring gates: 8-byte LE sequence numbers.
+fn seq_payload(i: u64) -> [u8; 8] {
+    i.to_le_bytes()
+}
+
+fn decode_seq(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+/// The tentpole acceptance gate: draining home lanes in steady state
+/// costs **zero** atomic RMW operations. Producers publish with plain
+/// stores (NBB counter protocol), the home member consumes with plain
+/// loads/stores plus fences — the shared steal cursor is never touched
+/// while home lanes have work.
+#[test]
+fn home_lane_drain_steady_state_costs_zero_rmws() {
+    const MSGS: u64 = 8;
+    let m = Machine::new(MachineCfg::new(1, OsProfile::linux_rt(), AffinityMode::SingleCore));
+    let rmws = Arc::new(AtomicU64::new(u64::MAX));
+    let ops = Arc::new(AtomicU64::new(0));
+    let (rmws_out, ops_out) = (rmws.clone(), ops.clone());
+    let h = m.spawn(move || {
+        let ring: ShardedRing<SimWorld> = ShardedRing::new(4, 4, 16, 16);
+        // Sole member: every lane is a home lane after the deal.
+        ring.attach_member(0);
+        assert_eq!(ring.home_of(1), Some(0));
+        for i in 0..MSGS {
+            ring.send(1, &seq_payload(i)).unwrap();
+        }
+        // Measured window: exactly the committed backlog, so the dry
+        // (steal) path is never entered.
+        let rmw_before = SimWorld::rmw_count();
+        let op_before = SimWorld::op_count();
+        for want in 0..MSGS {
+            let got = ring.recv_as(0, decode_seq).expect("home lane holds the frame");
+            assert_eq!(got, want, "home drain is per-lane FIFO");
+        }
+        rmws_out.store(SimWorld::rmw_count() - rmw_before, Ordering::SeqCst);
+        ops_out.store(SimWorld::op_count() - op_before, Ordering::SeqCst);
+    });
+    m.run(vec![h]);
+    assert_eq!(
+        rmws.load(Ordering::SeqCst),
+        0,
+        "home-lane steady state must perform zero shared-counter RMWs"
+    );
+    assert!(
+        ops.load(Ordering::SeqCst) >= MSGS,
+        "the drain window must have been priced (meter sanity)"
+    );
+}
+
+/// The converse meter-sanity gate: a dry member's batch steal *does*
+/// pay RMWs (one steal-cursor `fetch_add` plus one thief-claim CAS at
+/// minimum). If this ever reads zero, the RMW accounting is broken and
+/// the gate above proves nothing.
+#[test]
+fn dry_path_steal_pays_the_only_rmws() {
+    let m = Machine::new(MachineCfg::new(1, OsProfile::linux_rt(), AffinityMode::SingleCore));
+    let rmws = Arc::new(AtomicU64::new(0));
+    let out = rmws.clone();
+    let h = m.spawn(move || {
+        let ring: ShardedRing<SimWorld> = ShardedRing::new(4, 4, 16, 16);
+        ring.attach_member(0); // homes every lane away from member 2
+        ring.send(1, &seq_payload(7)).unwrap();
+        let before = SimWorld::rmw_count();
+        // Member 2 owns no home lanes: its pop must go through the
+        // shared steal cursor and the thief-claim CAS.
+        let got = ring.recv_as(2, decode_seq).expect("thief steals the backlog");
+        out.store(SimWorld::rmw_count() - before, Ordering::SeqCst);
+        assert_eq!(got, 7);
+    });
+    m.run(vec![h]);
+    assert!(
+        rmws.load(Ordering::SeqCst) >= 2,
+        "a steal must pay at least the cursor fetch_add and the claim CAS, got {}",
+        rmws.load(Ordering::SeqCst)
+    );
+}
+
+#[test]
+fn steal_storm_delivers_exactly_once() {
+    // One producer, four consumers: one hot lane, so at most one member
+    // drains it as home and the rest must steal to make progress.
+    let opts = MpmcOpts { producers: 2, consumers: 4, messages: 12, ..Default::default() };
+    let r = run_mpmc_steal_storm(&opts);
+    assert!(r.pass, "steal storm failed:\n{}", r.text);
+    assert_eq!(r.delivered, 24, "every frame in-band, exactly once:\n{}", r.text);
+    assert!(
+        r.text.contains("steal_batches>="),
+        "storm report must carry the steal-batch floor:\n{}",
+        r.text
+    );
+}
+
+#[test]
+fn skewed_consumer_stream_stays_exactly_once() {
+    // Consumer 0 is slowed (yield-injected): its home lanes back up and
+    // the symmetric members must absorb the backlog by stealing.
+    let opts = MpmcOpts { producers: 2, consumers: 3, messages: 10, ..Default::default() };
+    let r = run_mpmc_skewed(&opts);
+    assert!(r.pass, "skewed run failed:\n{}", r.text);
+    assert_eq!(r.delivered, 20, "slow member loses nothing:\n{}", r.text);
+}
+
+#[test]
+fn skewed_report_reproduces_byte_for_byte() {
+    let opts = MpmcOpts { messages: 8, ..Default::default() };
+    let a = run_mpmc_skewed(&opts);
+    let b = run_mpmc_skewed(&opts);
+    assert!(a.pass, "skewed run failed:\n{}", a.text);
+    assert_eq!(a.text, b.text, "skew report must reproduce exactly");
+}
+
+#[test]
+fn steal_and_wake_counters_are_registered() {
+    // The targeted doorbell (wake-one) counts re-rings in
+    // `wake.misses`; steals count batches in `mpmc.steals`. Both must
+    // exist in the obs registry so harnesses can prove no lost wakeups
+    // without bespoke plumbing.
+    let names: Vec<String> =
+        mcapi::obs::counters_snapshot().into_iter().map(|(n, _)| n).collect();
+    for want in ["wake.misses", "mpmc.steals"] {
+        assert!(
+            names.iter().any(|n| n == want),
+            "counter {want:?} missing from the obs registry: {names:?}"
+        );
+    }
+}

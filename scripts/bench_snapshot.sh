@@ -56,6 +56,8 @@ fi
 for key in spsc_ratio spsc_batch_ratio empty_pop_ns pkt_queue_mps pkt_ring_mps pkt_ring_vs_queue \
            stress_pkt_timeouts stress_pkt_poisons stress_pkt_leases_reclaimed \
            mpmc_scaling_c1_mps mpmc_scaling_c2_mps mpmc_scaling_c4_mps mpmc_scaling_batch_ratio \
+           mpmc_steal_c1_mps mpmc_steal_c2_mps mpmc_steal_c4_mps mpmc_steal_vs_shared \
+           mpmc_steal_skew_mps \
            trace_events trace_send_commit_p99_ns trace_wakeup_recv_p99_ns trace_replay_pass \
            trace_lane_peak liveness_suspects liveness_confirms liveness_false_suspects \
            liveness_fence_rejects host_cores host_os git_sha; do
