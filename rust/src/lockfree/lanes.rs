@@ -31,7 +31,9 @@
 //!   lane's `thief` word with a CAS, waits out the home's in-flight
 //!   pop, and moves up to [`STEAL_BATCH`] payloads in one `ack`
 //!   advance — batch amortization bounds how often a starving consumer
-//!   touches shared words.
+//!   touches shared words. Dry polls with nothing anywhere to steal
+//!   skip even the cursor bump: an idle member's empty poll is an
+//!   allocation-free sweep of unpriced peeks.
 //!
 //! # Crash consistency
 //!
@@ -51,10 +53,13 @@
 //!   stash is marked committed by the host store immediately after it
 //!   (kills fire at priced-op entry, so the commit mark and the `ack`
 //!   advance are indivisible). Repair either discards the stage (ack
-//!   never advanced — the payloads are still in the lane) or salvages
+//!   never advanced — the payloads are still in the lane) or recovers
 //!   every unconsumed staged payload (ack advanced — the stash is the
-//!   only copy). Either way the dead thief's `thief` claim word is
-//!   cleared so the lane unwedges.
+//!   only copy) by re-enqueueing it onto the **dead node's own lane**,
+//!   whose producer is the corpse itself — never onto the original
+//!   `from` lane, whose producer may be alive and mid-send. Either way
+//!   the dead thief's `thief` claim word is cleared so the lane
+//!   unwedges.
 //!
 //! Rebalancing a lane between two *live* members (fenced-member
 //! recovery, late attach) rides the same thief claim word: the
@@ -94,6 +99,10 @@ pub enum ShardSendError {
     /// Lane full but a consumer is mid-pop: retry immediately, bounded
     /// (Table 1 `*_BUT_*`).
     FullButConsumerReading,
+    /// `lane` is not a valid producer slot. Lane ids arrive from entry
+    /// metadata (wire decode, test harnesses), so an out-of-range id is
+    /// a rejectable input, not a panic.
+    BadLane,
 }
 
 /// Why a sharded receive returned nothing.
@@ -203,7 +212,14 @@ impl Stash {
     }
 
     fn pending(&self) -> usize {
-        self.count.load(Ordering::Acquire) - self.next.load(Ordering::Acquire)
+        // Saturating: `len()` sums pending across all stashes from
+        // arbitrary threads, so a reader can interleave with `reset`
+        // (new `count == 0`, old `next > 0`) or a concurrent claim and
+        // observe `next > count` transiently. Clamp to 0 instead of
+        // underflowing.
+        self.count
+            .load(Ordering::Acquire)
+            .saturating_sub(self.next.load(Ordering::Acquire))
     }
 
     /// Stage slot `i` (host writes; made visible by the later `count`
@@ -219,22 +235,40 @@ impl Stash {
         }
     }
 
-    /// Deliver the next staged entry to `read`, if any.
+    /// Deliver the next staged entry to `read`, if any. Entries are
+    /// claimed with a CAS on `next`, so two drainers can never deliver
+    /// the same staged payload: the owner in `recv_as` step 1 and
+    /// `repair_dead`'s salvage can race — a fenced-but-still-running
+    /// (zombie) member that passed `fence_check` before entering its
+    /// pop is still draining when repair declares it dead — and each
+    /// entry goes to exactly one of them.
     fn take<T>(&self, read: &mut dyn FnMut(&[u8]) -> T) -> Option<T> {
-        let next = self.next.load(Ordering::Acquire);
-        if next >= self.count.load(Ordering::Acquire) {
-            return None;
+        loop {
+            let next = self.next.load(Ordering::Acquire);
+            if next >= self.count.load(Ordering::Acquire) {
+                return None;
+            }
+            if self
+                .next
+                .compare_exchange_weak(next, next + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue; // lost the claim: another drainer took `next`
+            }
+            let len = unsafe { *self.lens[next].get() } as usize;
+            let bytes = unsafe {
+                std::slice::from_raw_parts(self.bytes[next * self.slot_len].get(), len)
+            };
+            return Some(read(bytes));
         }
-        let len = unsafe { *self.lens[next].get() } as usize;
-        let bytes = unsafe {
-            std::slice::from_raw_parts(self.bytes[next * self.slot_len].get(), len)
-        };
-        let v = read(bytes);
-        self.next.store(next + 1, Ordering::Release);
-        v.into()
     }
 
     fn reset(&self) {
+        // `count` MUST drop to 0 before `next`: a concurrent `take`
+        // re-checks `count` before its CAS, so zeroing `count` first
+        // makes it see an empty stage. Zeroing `next` first would let
+        // it claim slot 0 against the still-nonzero `count` and
+        // re-deliver an already-delivered payload.
         self.count.store(0, Ordering::Release);
         self.next.store(0, Ordering::Release);
         self.committed.store(false, Ordering::Release);
@@ -253,8 +287,12 @@ pub struct LaneRepair {
     /// Staged-but-uncommitted steals discarded (payloads still live in
     /// their lane).
     pub discarded_stages: usize,
-    /// Committed-but-undelivered stolen payloads salvaged back to the
-    /// caller.
+    /// Committed-but-undelivered stolen payloads re-enqueued onto the
+    /// dead node's own (producer-less) lane.
+    pub requeued: usize,
+    /// Committed-but-undelivered stolen payloads handed back to the
+    /// caller because the dead node's lane could not absorb them
+    /// (lane full, or the node has no lane slot).
     pub salvaged: usize,
 }
 
@@ -367,12 +405,16 @@ impl<W: World> ShardedRing<W> {
     /// per ring wrap. Single producer per lane (the SPSC contract; lane
     /// == the sender's dense node slot).
     ///
+    /// Out-of-range lanes return [`ShardSendError::BadLane`] — lane
+    /// ids travel in entry metadata, so they are validated, not
+    /// trusted.
+    ///
     /// # Panics
-    /// If `payload` exceeds the slot length or `lane` is out of range —
-    /// both caller bugs (the runtime validates first).
+    /// If `payload` exceeds the slot length — a caller bug (the slot
+    /// length is a construction-time constant the caller picked).
     pub fn send(&self, lane: u32, payload: &[u8]) -> Result<(), ShardSendError> {
         assert!(payload.len() <= self.slot_len, "payload exceeds lane slot");
-        let l = &self.lanes[lane as usize];
+        let l = self.lanes.get(lane as usize).ok_or(ShardSendError::BadLane)?;
         let u = l.prod.own.get();
         self.lane_free(l, u)?;
         l.update.store(u + 1); // enter: odd = insert in progress
@@ -397,7 +439,7 @@ impl<W: World> ShardedRing<W> {
             payloads.iter().all(|p| p.len() <= self.slot_len),
             "payload exceeds lane slot"
         );
-        let l = &self.lanes[lane as usize];
+        let l = self.lanes.get(lane as usize).ok_or(ShardSendError::BadLane)?;
         let u = l.prod.own.get();
         let free = self.lane_free(l, u)?;
         let k = (free as usize).min(payloads.len());
@@ -645,21 +687,42 @@ impl<W: World> ShardedRing<W> {
         me: u32,
         read: &mut impl FnMut(&[u8]) -> T,
     ) -> Result<T, ShardRecvError> {
-        let start = self.steal_cursor.fetch_add(1) as usize;
-        // Candidate order: most backlogged first (unpriced peeks), the
-        // cursor breaking ties so concurrent thieves fan out.
         let n = self.lanes.len();
-        let mut order: Vec<usize> = (0..n).map(|i| (start + i) % n).collect();
-        order.sort_by_key(|&i| std::cmp::Reverse(self.lanes[i].backlog()));
+        // Empty-poll fast path: one allocation-free O(n) sweep of
+        // unpriced peeks. An idle group polls through here on every
+        // pop, so it must not pay the cursor RMW (or heap traffic)
+        // just to discover there is nothing to steal.
+        if self.lanes.iter().all(|l| l.backlog() == 0) {
+            return Err(ShardRecvError::Empty);
+        }
+        let start = self.steal_cursor.fetch_add(1) as usize;
         let mut contended = false;
-        for i in order {
-            if self.lanes[i].backlog() == 0 {
-                break; // sorted: everything after is empty too
+        // Up to n attempts: each picks the currently most-backlogged
+        // lane in one O(n) pass of unpriced peeks (no allocation, no
+        // sort), the cursor offset breaking ties so concurrent thieves
+        // fan out. A lane that loses its claim race is skipped on the
+        // next pass so a second-best victim gets tried.
+        let mut skip = usize::MAX;
+        for _ in 0..n {
+            let mut best: Option<(u64, usize)> = None;
+            for off in 0..n {
+                let i = (start + off) % n;
+                if i == skip {
+                    continue;
+                }
+                let b = self.lanes[i].backlog();
+                if b > 0 && best.map_or(true, |(bb, _)| b > bb) {
+                    best = Some((b, i));
+                }
             }
+            let Some((_, i)) = best else { break };
             match self.steal_from(i, me, read) {
                 Ok(v) => return Ok(v),
-                Err(ShardRecvError::PeerActive) => contended = true,
-                Err(ShardRecvError::Empty) => {}
+                Err(ShardRecvError::PeerActive) => {
+                    contended = true;
+                    skip = i;
+                }
+                Err(ShardRecvError::Empty) => skip = i,
             }
         }
         Err(if contended { ShardRecvError::PeerActive } else { ShardRecvError::Empty })
@@ -737,9 +800,23 @@ impl<W: World> ShardedRing<W> {
 
     /// Repair every transient state dead node `node` left behind, in
     /// all four roles it can hold (producer, home member, thief, stash
-    /// owner), and hand back committed-but-undelivered stolen payloads
-    /// via `salvage`. Detach the member slot; the caller decides when
-    /// to [`ShardedRing::rebalance`] the orphaned lanes (fence first,
+    /// owner). Committed-but-undelivered stolen payloads are
+    /// re-enqueued onto the **dead node's own lane**: its producer is
+    /// the corpse itself, so after the producer-role rollback the
+    /// repairer is that lane's sole writer and the SPSC contract
+    /// holds. (Re-enqueueing via the payloads' original `from` lanes
+    /// would race those lanes' *live* producers — two writers on one
+    /// SPSC lane is UB on the producer-private counter cache.) Only
+    /// payloads the lane cannot absorb — lane full, or `node` has no
+    /// lane slot — are handed back via `salvage`, and the caller must
+    /// not re-enqueue them onto a live producer's lane either.
+    ///
+    /// Exclusivity: callers serialize repair per node (the runtime's
+    /// liveness epoch flips odd exactly once per death), so there is
+    /// never more than one repairer writing the dead lane.
+    ///
+    /// Detaches the member slot; the caller decides when to
+    /// [`ShardedRing::rebalance`] the orphaned lanes (fence first,
     /// then re-deal — PR 6 ordering).
     pub fn repair_dead(&self, node: u32, mut salvage: impl FnMut(&[u8])) -> LaneRepair {
         let mut r = LaneRepair::default();
@@ -775,13 +852,22 @@ impl<W: World> ShardedRing<W> {
             }
         }
         // Stash owner role: a committed stage's remaining payloads
-        // exist nowhere else — salvage them; an uncommitted stage's
-        // payloads are still in their lane — discard the stage.
+        // exist nowhere else — re-enqueue them onto the dead node's
+        // own lane (producer rolled back above, so the repairer is its
+        // sole writer; a live thief/home can drain it concurrently,
+        // which the SPSC protocol allows). Overflow goes back to the
+        // caller. An uncommitted stage's payloads are still in their
+        // lane — discard the stage.
         if let Some(stash) = self.stashes.get(node as usize) {
             if stash.committed.load(Ordering::Acquire) {
-                while let Some(()) = stash.take(&mut |b| salvage(b)) {
-                    r.salvaged += 1;
-                }
+                while let Some(()) = stash.take(&mut |b| {
+                    if self.send(node, b).is_ok() {
+                        r.requeued += 1;
+                    } else {
+                        salvage(b);
+                        r.salvaged += 1;
+                    }
+                }) {}
             } else if stash.count.load(Ordering::Acquire) != 0 {
                 r.discarded_stages += 1;
             }
@@ -790,7 +876,7 @@ impl<W: World> ShardedRing<W> {
         if let Some(cell) = self.member_active.get(node as usize) {
             cell.store(false, Ordering::SeqCst);
         }
-        let repairs = r.torn_inserts + r.torn_pops + r.cleared_claims + r.salvaged;
+        let repairs = r.torn_inserts + r.torn_pops + r.cleared_claims + r.requeued + r.salvaged;
         if repairs > 0 {
             obs::add(obs::ctr::MPMC_REPAIRS, repairs as u64);
         }
@@ -928,8 +1014,11 @@ mod tests {
     }
 
     #[test]
-    fn repair_discards_uncommitted_stage_and_salvages_committed() {
+    fn repair_discards_uncommitted_stage_and_requeues_committed() {
         // Committed stage: ack advanced, stash holds the only copies.
+        // Repair re-enqueues them onto the dead node's OWN lane (its
+        // producer is the corpse) — never the original `from` lane,
+        // whose producer may be alive and mid-send.
         let s = Shard::new(2, 2, 16, 8);
         s.attach_member(0);
         s.attach_member(1);
@@ -940,9 +1029,16 @@ mod tests {
         assert_eq!(s.recv_as(1, decode), Ok(0));
         let mut salvaged = Vec::new();
         let r = s.repair_dead(1, |b| salvaged.push(decode(b)));
-        assert_eq!(r.salvaged, 5, "committed stage must salvage the remainder");
-        assert_eq!(salvaged, vec![1, 2, 3, 4, 5]);
+        assert_eq!(r.requeued, 5, "committed stage must requeue the remainder");
+        assert_eq!(r.salvaged, 0, "dead lane had room: nothing handed back");
+        assert!(salvaged.is_empty());
         assert_eq!(r.discarded_stages, 0);
+        assert_eq!(s.lane_len(0), 0, "requeue must not write the live producer's lane");
+        assert_eq!(s.lane_len(1), 5, "requeue lands on the dead node's lane");
+        // The survivor drains the requeued payloads in stash order.
+        for want in 1..6u64 {
+            assert_eq!(s.recv_as(0, decode), Ok(want));
+        }
         // Uncommitted stage: simulate by staging without the ack store.
         let s2 = Shard::new(1, 1, 8, 8);
         s2.attach_member(0);
@@ -954,6 +1050,40 @@ mod tests {
         assert_eq!(r2.discarded_stages, 1, "uncommitted stage must be discarded");
         assert!(sal2.is_empty(), "payload still lives in the lane");
         assert_eq!(s2.lane_len(0), 1);
+    }
+
+    #[test]
+    fn repair_salvages_overflow_when_dead_lane_is_full() {
+        let s = Shard::new(2, 2, 4, 8);
+        s.attach_member(0);
+        s.attach_member(1);
+        for i in 0..4u64 {
+            s.send(0, &payload(i)).unwrap();
+        }
+        // Member 1's home lane is dry: it steals lane 0's batch and
+        // delivers one entry.
+        assert_eq!(s.recv_as(1, decode), Ok(0));
+        // Wedge the dead node's lane at capacity so requeue can't fit,
+        // then declare it dead with the batch still staged.
+        for i in 100..104u64 {
+            s.send(1, &payload(i)).unwrap();
+        }
+        let mut salvaged = Vec::new();
+        let r = s.repair_dead(1, |b| salvaged.push(decode(b)));
+        assert_eq!(r.requeued, 0, "full dead lane absorbs nothing");
+        assert_eq!(r.salvaged, 3, "overflow goes back to the caller");
+        assert_eq!(salvaged, vec![1, 2, 3]);
+        assert_eq!(s.lane_len(0), 0, "live producer's lane untouched");
+        assert_eq!(s.lane_len(1), 4);
+    }
+
+    #[test]
+    fn send_rejects_out_of_range_lane() {
+        let s = Shard::new(2, 2, 4, 8);
+        assert_eq!(s.send(2, &payload(0)), Err(ShardSendError::BadLane));
+        let b = payload(0);
+        let refs: Vec<&[u8]> = vec![&b];
+        assert_eq!(s.send_batch(9, &refs), Err(ShardSendError::BadLane));
     }
 
     #[test]

@@ -94,7 +94,7 @@
 //! | producer dies inside an [`mpmc`] claim (slot seq parked at `p`) | claimed-unpublished slot wedges every later position | claimant board (`writers[idx] == who+1`, stamped kill-atomically with the claim CAS) | `MpmcRing::repair_dead`: publish a [`mpmc::TOMBSTONE`] length word — consumers consume and skip it, freeing the slot | consumers resume past the wedge; no payload existed to lose |
 //! | consumer dies inside an [`mpmc`] claim (slot seq parked at `p+1`) | claimed-unconsumed payload wedges the slot's next lap | claimant board (`readers[idx]`) | `repair_dead` salvages the payload to the runtime (re-enqueued — the dead claim never completed, so exactly-once holds) and frees the slot | payload redelivered to a live consumer |
 //! | home member dies inside a [`lanes`] pop (`ack` odd, `home_busy` parked) | half-consumed payload; thieves/rebalancers spin-bounded on the flag | watchdog + liveness epoch | `ShardedRing::repair_dead`: roll `ack` back (payload re-exposed), clear the flag, unassign the lane; caller rebalances | payload redelivered to the lane's next home |
-//! | thief dies mid-steal (claim word wedged at `member+1`) | stage **uncommitted** (`ack` never advanced) or **committed** (stash holds the only copies) | claimant board (`thief` word) + stash `committed` mark, stamped kill-atomically around the single `ack` advance | uncommitted → discard the stage (payloads still in the lane); committed → salvage every undelivered stash entry back to the runtime; either way clear the claim word | lane unwedges; exactly-once holds (≤1 boundary delivery per kill, same budget as [`mpmc`]) |
+//! | thief dies mid-steal (claim word wedged at `member+1`) | stage **uncommitted** (`ack` never advanced) or **committed** (stash holds the only copies) | claimant board (`thief` word) + stash `committed` mark, stamped kill-atomically around the single `ack` advance | uncommitted → discard the stage (payloads still in the lane); committed → re-enqueue every undelivered stash entry onto the **dead node's own lane** (its producer is the corpse, so repair is that lane's sole writer — a live producer's lane is never written); either way clear the claim word | lane unwedges; exactly-once holds (≤1 boundary delivery per kill, same budget as [`mpmc`]) |
 //! | OS thread **abandons** its node (parks forever; no kill event) | silence — structures consistent but the stream wedges | heartbeat watchdog: per-node progress epochs scanned against a silence deadline with suspect→confirm hysteresis (`McapiRuntime::watchdog_scan_once`) | automatic `declare_node_dead` runs the full repair pipeline above; the node's liveness epoch goes odd, **fencing** every later send/claim from the zombie (`NodeFenced`, fail-fast, no ring state touched) | blocked peers unblock via poison; a woken zombie gets `NodeFenced` instead of corrupting the repaired stream |
 //! | fenced node restarts (`McapiRuntime::rejoin`) | stale epoch | epoch parity | epoch bumps to the next even value; heartbeat lane resets so the watchdog re-baselines instead of instantly re-confirming | fresh endpoints/channels work; the old generation stays fenced |
 //!

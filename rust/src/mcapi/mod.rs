@@ -522,24 +522,27 @@ impl<W: World> McapiRuntime<W> {
         //      torn lane insert / torn home pop, clear its wedged steal
         //      claim, re-enqueue the stolen payloads it committed but
         //      never delivered (exactly-once is preserved — the dead
-        //      member never handed them to a caller), and re-deal its
-        //      orphaned home lanes across the surviving members
-        //      (heartbeat-aware group rebalancing: the watchdog's
-        //      confirm lands here).
+        //      member never handed them to a caller; the ring requeues
+        //      them onto the dead node's own producer-less lane), and
+        //      re-deal its orphaned home lanes across the surviving
+        //      members (heartbeat-aware group rebalancing: the
+        //      watchdog's confirm lands here).
         for (i, epslot) in self.endpoints.iter().enumerate() {
             let Some(g) = epslot.group.get() else {
                 continue;
             };
-            let (repairs, salvaged) = g.repair_dead(node as u32);
-            if repairs == 0 && salvaged.is_empty() {
+            let (repairs, overflow) = g.repair_dead(node as u32);
+            if repairs == 0 && overflow.is_empty() {
                 continue;
             }
-            for e in salvaged {
-                if let Err((_, e)) = g.push(e) {
-                    // Producers refilled the ring before the re-enqueue
-                    // fit: return the buffer rather than leak it.
-                    self.drop_entry(&e);
-                }
+            for e in overflow {
+                // The dead node's lane couldn't absorb the requeue.
+                // Re-pushing via `g.push` would write the ORIGINAL
+                // producer's SPSC lane — and that producer can be
+                // alive and mid-send (the corpse was the thief, not
+                // the sender), which would put two writers on one
+                // SPSC lane. Return the buffer instead.
+                self.drop_entry(&e);
             }
             // Unwedged consumers and the re-enqueued work both need a
             // broadcast re-poll.

@@ -614,6 +614,10 @@ impl<W: World> ConsumerGroup<W> {
             Err(ShardSendError::Full | ShardSendError::FullButConsumerReading) => {
                 Err((Status::WouldBlock, e))
             }
+            // `from_node` outside the dense node-slot space: the entry
+            // metadata is bogus (wire decode, harness bug) — reject it
+            // rather than panic the runtime.
+            Err(ShardSendError::BadLane) => Err((Status::InvalidEndpoint, e)),
         }
     }
 
@@ -637,6 +641,7 @@ impl<W: World> ConsumerGroup<W> {
             Err(ShardSendError::Full | ShardSendError::FullButConsumerReading) => {
                 Err(Status::WouldBlock)
             }
+            Err(ShardSendError::BadLane) => Err(Status::InvalidEndpoint),
         }
     }
 
@@ -664,20 +669,25 @@ impl<W: World> ConsumerGroup<W> {
     /// Repair every transient state dead node `node` left behind, in
     /// all four roles (producer, home member, thief, stash owner),
     /// then re-deal its orphaned home lanes across the surviving
-    /// members. Committed-but-undelivered stolen entries come back for
-    /// re-enqueue (the dead member never delivered them, so
-    /// exactly-once is preserved). Returns `(repairs, salvaged
-    /// entries)`.
+    /// members. Committed-but-undelivered stolen entries are
+    /// re-enqueued inside the ring onto the dead node's own
+    /// (producer-less) lane — never onto a live producer's SPSC lane —
+    /// and the dead member never delivered them, so exactly-once is
+    /// preserved. Entries the dead lane could not absorb come back as
+    /// overflow; the caller must release their buffers (re-pushing
+    /// them would write a live producer's lane). Returns `(repairs,
+    /// overflow entries)`.
     pub fn repair_dead(&self, node: u32) -> (usize, Vec<Entry>) {
-        let mut salvaged = Vec::new();
+        let mut overflow = Vec::new();
         let r = self.ring.repair_dead(node, |b| {
             if let Some(e) = Entry::decode(b) {
-                salvaged.push(e);
+                overflow.push(e);
             }
         });
         self.ring.rebalance();
-        let repairs = r.torn_inserts + r.torn_pops + r.cleared_claims + r.discarded_stages;
-        (repairs, salvaged)
+        let repairs =
+            r.torn_inserts + r.torn_pops + r.cleared_claims + r.discarded_stages + r.requeued;
+        (repairs, overflow)
     }
 }
 
@@ -1015,17 +1025,21 @@ mod tests {
     }
 
     #[test]
-    fn consumer_group_repair_salvages_dead_thief_stash() {
+    fn consumer_group_repair_requeues_dead_thief_stash() {
         let g = ConsumerGroup::<RealWorld>::new(8, 4);
         g.push(Entry::scalar(41, 1)).unwrap();
         g.push(Entry::scalar(42, 1)).unwrap();
         // Member 6 steals the lane's batch, delivers one entry, then
         // dies with the second still staged in its stash.
         assert_eq!(g.pop(6).unwrap().scalar, 41);
-        let (repairs, salvaged) = g.repair_dead(6);
-        assert_eq!(repairs, 0, "clean steal leaves no wedged claims");
-        assert_eq!(salvaged.len(), 1, "undelivered stash entry salvaged");
-        assert_eq!(salvaged[0].scalar, 42);
+        let (repairs, overflow) = g.repair_dead(6);
+        assert_eq!(repairs, 1, "the staged entry is requeued in-ring");
+        assert!(overflow.is_empty(), "dead lane had room: no overflow");
+        // The requeued entry landed back in the ring (on the dead
+        // node's own lane, not the live producer's) and a survivor
+        // drains it.
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.pop(0).unwrap().scalar, 42);
         // Live peers are untouched.
         assert_eq!(g.repair_dead(7), (0, Vec::new()));
     }
